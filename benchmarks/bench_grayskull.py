@@ -1,0 +1,70 @@
+"""Paper Table V: ResNet-50 + BERT-base inference on Tenstorrent Grayskull.
+
+Pipelined inference (continuous input, no backward; throughput excludes
+setup/drain per §V-A3). The paper adjusts the mapping strategy and
+reports <13% error vs published throughput (ResNet50: 22431 samples/s
+int8 [50]; BERT-base: 2830 samples/s [40]). We sweep a small set of
+(pp, dp, microbatch) mappings like the paper did and report the best.
+"""
+
+from __future__ import annotations
+
+from repro.core import ParallelPlan, bert_base_graph, grayskull, resnet50_graph, simulate
+from .common import Report, pct_err
+
+PUBLISHED = {"resnet50": 22431.0, "bert_base": 2830.0}
+PAPER_PALM = {"resnet50": 23033.46, "bert_base": 3190.12}
+
+
+def best_throughput(builder, plans) -> float:
+    hw = grayskull()
+    best = 0.0
+    for plan in plans:
+        graph = builder(plan)
+        res = simulate(graph, hw, plan, noc_mode="macro")
+        best = max(best, res.throughput)
+    return best
+
+
+def run(report: Report):
+    report.log("== Table V: Grayskull inference throughput (samples/s) ==")
+    results = {}
+
+    # ResNet50 has 55 ops: near-layer-wise pipelines (one or two ops per
+    # core group) use the full 120-core array, as Grayskull's dataflow does.
+    # stream_overlap=False + weight_multicast=False: Tensix cores have
+    # ~1 MB SRAM — no room to double-buffer weight streams against compute
+    # (unlike the wafer's 60 MB tiles), and the runtime streams weights
+    # per-core, so DRAM serialises with compute, per Fig. 5.
+    plans_r = [ParallelPlan(pp=pp, dp=dp, tp=tp, microbatch=mb,
+                            global_batch=mb * dp * 64, training=False,
+                            layout="s_shape", stream_overlap=False,
+                            weight_multicast=False)
+               for pp, dp, tp in ((52, 2, 1), (40, 3, 1), (28, 4, 1),
+                                  (28, 2, 2), (24, 5, 1), (20, 3, 2),
+                                  (14, 2, 4), (13, 2, 4), (10, 3, 4))
+               for mb in (2, 4, 8)]
+    results["resnet50"] = best_throughput(
+        lambda p: resnet50_graph(batch=p.microbatch * p.dp), plans_r)
+
+    plans_b = [ParallelPlan(pp=pp, dp=dp, tp=1, microbatch=mb,
+                            global_batch=mb * dp * 64, training=False,
+                            layout="s_shape", stream_overlap=False,
+                            weight_multicast=False)
+               for pp, dp in ((13, 8), (13, 4), (6, 16)) for mb in (1, 2, 4)]
+    results["bert_base"] = best_throughput(
+        lambda p: bert_base_graph(batch=p.microbatch * p.dp), plans_b)
+
+    errs = []
+    report.log(f"{'model':10s} {'PALM(ours)':>11s} {'paper-PALM':>11s} "
+               f"{'published':>10s} {'err%':>6s}")
+    for name in ("resnet50", "bert_base"):
+        err = pct_err(results[name], PUBLISHED[name])
+        errs.append(err)
+        report.log(f"{name:10s} {results[name]:11.1f} {PAPER_PALM[name]:11.1f} "
+                   f"{PUBLISHED[name]:10.1f} {err:6.2f}")
+        report.add(f"grayskull_{name}", 0.0,
+                   f"samples_s={results[name]:.1f};published={PUBLISHED[name]};"
+                   f"err_pct={err:.2f}")
+    report.log(f"max error: {max(errs):.2f}% (paper: <13%)")
+    return max(errs)

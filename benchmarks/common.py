@@ -1,0 +1,35 @@
+"""Shared helpers for the paper-table benchmarks."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+
+def timed(fn: Callable, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6  # us
+
+
+class Report:
+    """Collects ``name,us_per_call,derived`` CSV rows (benchmarks/run.py
+    contract) plus human-readable tables."""
+
+    def __init__(self):
+        self.rows: List[str] = []
+        self.lines: List[str] = []
+
+    def add(self, name: str, us: float, derived: str):
+        self.rows.append(f"{name},{us:.1f},{derived}")
+
+    def log(self, line: str = ""):
+        self.lines.append(line)
+        print(line, flush=True)
+
+    def csv(self) -> str:
+        return "\n".join(self.rows)
+
+
+def pct_err(sim: float, ref: float) -> float:
+    return abs(sim - ref) / ref * 100.0

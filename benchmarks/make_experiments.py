@@ -1,0 +1,102 @@
+"""Generate the data-driven sections of EXPERIMENTS.md (§Dry-run table,
+§Roofline table) from artifacts/dryrun*/ and splice them into the
+document between the AUTOGEN markers.
+
+    PYTHONPATH=src:. python -m benchmarks.make_experiments
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+OPT = ROOT / "artifacts" / "dryrun"
+BASE = ROOT / "artifacts" / "dryrun_baseline"
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI = 3 * 50e9
+
+ORDER_SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(d):
+    out = {}
+    for f in sorted(d.glob("*.json")):
+        r = json.loads(f.read_text())
+        out[(r["arch"], r["shape"], r["mesh"])] = r
+    return out
+
+
+def terms(rec):
+    e = rec["extrapolated"]
+    comp = e["flops"] / PEAK_FLOPS
+    mem = e["bytes"] / HBM_BW
+    coll = max(0.0, e["coll"]["total"]) / ICI
+    bound = max(comp, mem, coll)
+    dom = ("compute" if bound == comp else
+           "memory" if bound == mem else "collective")
+    useful = rec["model_flops"] / max(1.0, e["flops"] * rec["chips"])
+    return comp, mem, coll, dom, useful, (comp / bound if bound else 0.0)
+
+
+def dryrun_table(cells):
+    lines = ["| arch | shape | mesh | compile | GB/chip (args+temp) | "
+             "collective GB/chip | status |",
+             "|---|---|---|---|---|---|---|"]
+    for (a, s, m), r in sorted(cells.items(),
+                               key=lambda kv: (kv[0][0], ORDER_SHAPES.index(kv[0][1]), kv[0][2])):
+        if not r.get("applicable", True):
+            lines.append(f"| {a} | {s} | {m} | — | — | — | "
+                         f"skipped: {r['skip_reason']} |")
+            continue
+        if not r.get("ok"):
+            lines.append(f"| {a} | {s} | {m} | — | — | — | FAILED |")
+            continue
+        mem = r["full"]["memory"]
+        gb = (mem["argument_size_in_bytes"] + mem["temp_size_in_bytes"]) / 1e9
+        coll = max(0.0, r["extrapolated"]["coll"]["total"]) / 1e9
+        lines.append(f"| {a} | {s} | {m} | {r['full']['compile_s']}s | "
+                     f"{gb:.2f} | {coll:.1f} | OK |")
+    return "\n".join(lines)
+
+
+def roofline_table(cells, baseline=None):
+    lines = ["| arch | shape | mesh | compute s | memory s | collective s | "
+             "dominant | MF/HLO | roofline frac |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for (a, s, m), r in sorted(cells.items(),
+                               key=lambda kv: (kv[0][0], ORDER_SHAPES.index(kv[0][1]), kv[0][2])):
+        if not (r.get("ok") and "extrapolated" in r):
+            continue
+        comp, mem, coll, dom, useful, frac = terms(r)
+        lines.append(f"| {a} | {s} | {m} | {comp:.4f} | {mem:.4f} | "
+                     f"{coll:.4f} | {dom} | {useful:.2f} | {frac:.1%} |")
+    return "\n".join(lines)
+
+
+def main():
+    opt = load(OPT)
+    base = load(BASE) if BASE.exists() else {}
+    doc = (ROOT / "EXPERIMENTS.md").read_text()
+
+    blocks = {
+        "DRYRUN_TABLE": dryrun_table(opt),
+        "ROOFLINE_TABLE": roofline_table(opt),
+        "ROOFLINE_BASELINE_TABLE": roofline_table(base) if base else "(no baseline snapshot)",
+    }
+    for key, body in blocks.items():
+        start = f"<!-- AUTOGEN:{key} -->"
+        end = f"<!-- AUTOGEN:{key}:END -->"
+        if start in doc and end in doc:
+            pre, rest = doc.split(start, 1)
+            _, post = rest.split(end, 1)
+            doc = pre + start + "\n" + body + "\n" + end + post
+    (ROOT / "EXPERIMENTS.md").write_text(doc)
+    print("EXPERIMENTS.md tables regenerated "
+          f"({len(opt)} optimized cells, {len(base)} baseline cells)")
+
+
+if __name__ == "__main__":
+    main()

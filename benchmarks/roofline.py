@@ -1,0 +1,72 @@
+"""Roofline analysis (deliverable g): read dry-run artifacts and emit the
+per-(arch x shape x mesh) three-term roofline table.
+
+Terms (TPU v5e per chip): compute = FLOPs / 197 TF/s; memory =
+bytes / 819 GB/s; collective = collective-bytes / (3 links x 50 GB/s).
+FLOPs/bytes/collective-bytes are the trip-count-corrected per-device
+numbers extrapolated from the unrolled probe compiles (see
+launch/dryrun.py); MODEL_FLOPS = 6 N_active D (train) / 2 N D (serve).
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .common import Report
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW_PER_LINK = 50e9
+ICI_LINKS = 3          # usable links per chip on a 2-D torus (conservative)
+
+ARTIFACTS = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def load_cells():
+    cells = []
+    for f in sorted(ARTIFACTS.glob("*.json")):
+        r = json.loads(f.read_text())
+        if r.get("ok") and "extrapolated" in r:
+            cells.append(r)
+    return cells
+
+
+def terms(rec):
+    e = rec["extrapolated"]
+    chips = rec["chips"]
+    compute = e["flops"] / PEAK_FLOPS
+    memory = e["bytes"] / HBM_BW
+    coll = e["coll"]["total"] / (ICI_LINKS * ICI_BW_PER_LINK)
+    dom = max(("compute", compute), ("memory", memory), ("collective", coll),
+              key=lambda kv: kv[1])
+    useful = rec["model_flops"] / max(1.0, e["flops"] * chips)
+    bound = max(compute, memory, coll)
+    frac = compute / bound if bound > 0 else 0.0
+    return {"compute_s": compute, "memory_s": memory, "collective_s": coll,
+            "dominant": dom[0], "useful_ratio": useful,
+            "roofline_fraction": frac}
+
+
+def run(report: Report):
+    cells = load_cells()
+    report.log("== Roofline terms per (arch x shape x mesh) — seconds/step "
+               "per chip ==")
+    report.log(f"{'arch':22s} {'shape':12s} {'mesh':7s} {'compute':>9s} "
+               f"{'memory':>9s} {'collect.':>9s} {'dominant':>10s} "
+               f"{'MF/HLO':>7s} {'roofl%':>7s}")
+    for rec in cells:
+        t = terms(rec)
+        report.log(f"{rec['arch']:22s} {rec['shape']:12s} {rec['mesh']:7s} "
+                   f"{t['compute_s']:9.4f} {t['memory_s']:9.4f} "
+                   f"{t['collective_s']:9.4f} {t['dominant']:>10s} "
+                   f"{t['useful_ratio']:7.3f} {100*t['roofline_fraction']:6.1f}%")
+        report.add(f"roofline_{rec['arch']}_{rec['shape']}_{rec['mesh']}", 0.0,
+                   f"compute_s={t['compute_s']:.5f};memory_s={t['memory_s']:.5f};"
+                   f"collective_s={t['collective_s']:.5f};dom={t['dominant']};"
+                   f"useful={t['useful_ratio']:.3f};"
+                   f"roofline_frac={t['roofline_fraction']:.3f}")
+    if not cells:
+        report.log("(no dry-run artifacts found — run "
+                   "`python -m repro.launch.dryrun --all` first)")
+    return cells

@@ -1,0 +1,72 @@
+"""Benchmark driver — one module per paper table/figure.
+
+    PYTHONPATH=src:. python -m benchmarks.run [--only NAME]
+
+Prints human-readable tables followed by the ``name,us_per_call,derived``
+CSV block (written to artifacts/bench.csv as well).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+from .common import Report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", type=str, default=None)
+    args = ap.parse_args(argv)
+
+    from . import (
+        bench_allreduce,
+        bench_comm_strategies,
+        bench_congestion,
+        bench_crosscheck,
+        bench_grayskull,
+        bench_megatron,
+        bench_sim_scaling,
+        bench_waferscale,
+        roofline,
+    )
+
+    suites = [
+        ("allreduce", bench_allreduce),        # Fig 6
+        ("congestion", bench_congestion),      # Fig 7
+        ("megatron", bench_megatron),          # Table IV
+        ("grayskull", bench_grayskull),        # Table V
+        ("waferscale", bench_waferscale),      # Table VII + Fig 9/10
+        ("comm_strategies", bench_comm_strategies),  # Fig 11/12
+        ("sim_scaling", bench_sim_scaling),    # §IV-A complexity claim
+        ("roofline", roofline),                # deliverable (g)
+        ("crosscheck", bench_crosscheck),      # PALM vs XLA (beyond-paper)
+    ]
+
+    report = Report()
+    for name, mod in suites:
+        if args.only and name != args.only:
+            continue
+        report.log(f"\n######## {name} ########")
+        t0 = time.time()
+        try:
+            mod.run(report)
+        except Exception as e:  # keep the suite going; record the failure
+            import traceback
+            report.log(f"[{name} FAILED] {e}")
+            traceback.print_exc()
+            report.add(f"{name}_FAILED", 0.0, repr(e))
+        report.log(f"[{name}: {time.time()-t0:.1f}s]")
+
+    report.log("\n=== CSV (name,us_per_call,derived) ===")
+    print(report.csv())
+    out = Path(__file__).resolve().parents[1] / "artifacts" / "bench.csv"
+    out.parent.mkdir(exist_ok=True)
+    out.write_text(report.csv() + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

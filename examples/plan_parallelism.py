@@ -1,0 +1,55 @@
+"""Reproduce the paper's §V-B parallelism exploration on an assigned
+architecture: sweep (pp, dp, tp, layout) with PALM and print the ranked
+table plus the mapping/comm-group deltas (Fig. 8/10 style).
+
+    PYTHONPATH=src python examples/plan_parallelism.py --arch dbrx-132b
+"""
+
+import argparse
+
+from repro.configs import get_config
+from repro.core import ParallelPlan, simulate, wafer_scale
+from repro.core.workload import arch_to_graph
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="dbrx-132b")
+    ap.add_argument("--seq-len", type=int, default=2048)
+    args = ap.parse_args()
+
+    arch = get_config(args.arch)
+    hw = wafer_scale()
+    print(f"== {arch.name} on {hw.name} ({hw.num_devices} cores) ==")
+    print(f"{'pp':>3s} {'dp':>3s} {'tp':>3s} {'layout':>8s} {'comm':>5s} "
+          f"{'samples/s':>10s} {'bubble':>7s} {'mem/tile GB':>11s}")
+    rows = []
+    for pp in (10, 20):
+        for tp in (1, 2, 4, 8):
+            dp = 16 // tp
+            for layout in ("s_shape", "line"):
+                for contig in (True, False):
+                    plan = ParallelPlan(
+                        pp=pp, dp=dp, tp=tp, microbatch=1,
+                        global_batch=64 * dp, schedule="1f1b", layout=layout,
+                        tp_contiguous=contig)
+                    g = arch_to_graph(arch, args.seq_len, plan.microbatch * dp)
+                    try:
+                        res = simulate(g, hw, plan)
+                    except ValueError:
+                        continue
+                    mem = max(m.total for m in res.stage_memory) / 1e9
+                    rows.append((res.throughput, pp, dp, tp, layout, contig,
+                                 res.bubble_ratio, mem))
+    rows.sort(reverse=True)
+    for (thpt, pp, dp, tp, layout, contig, bubble, mem) in rows[:12]:
+        print(f"{pp:3d} {dp:3d} {tp:3d} {layout:>8s} "
+              f"{'comm1' if contig else 'comm2':>5s} {thpt:10.3f} "
+              f"{bubble:7.1%} {mem:11.2f}")
+    best = rows[0]
+    print(f"\nbest plan: pp={best[1]} dp={best[2]} tp={best[3]} {best[4]} "
+          f"{'comm1' if best[5] else 'comm2'} -> {best[0]:.3f} samples/s")
+
+
+if __name__ == "__main__":
+    main()

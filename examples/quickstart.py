@@ -1,0 +1,39 @@
+"""Quickstart: simulate LLM training on a wafer-scale tiled accelerator
+with PALM and let the planner pick the parallelism.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+from repro.core import ParallelPlan, simulate, transformer_lm_graph, wafer_scale
+from repro.core.planner import PlannerCfg, plan_parallelism
+from repro.configs import get_config
+
+
+def main():
+    hw = wafer_scale()   # paper Table VI: 5x4 tiles of 4x4 cores
+
+    # --- 1. one simulation: T-18B, the paper's §V-B baseline plan ---
+    plan = ParallelPlan(pp=20, dp=2, tp=8, microbatch=1, global_batch=256,
+                        schedule="1f1b", layout="s_shape")
+    graph = transformer_lm_graph("T-18B", 40, 6144, 48, seq_len=2048,
+                                 batch=plan.microbatch * plan.dp, vocab=51200,
+                                 gated_mlp=False)
+    res = simulate(graph, hw, plan)
+    print(f"T-18B on wafer-scale: {res.throughput:.2f} samples/s, "
+          f"bubble {res.bubble_ratio:.1%}, "
+          f"peak stage memory {max(m.total for m in res.stage_memory)/1e9:.2f} GB, "
+          f"{res.event_count} events")
+
+    # --- 2. PALM as auto-parallelism planner for an assigned arch ---
+    arch = get_config("yi-6b")
+    results = plan_parallelism(arch, hw, PlannerCfg(
+        global_batch=128, seq_len=2048, max_plans=12, microbatch_sizes=(1, 2)))
+    print(f"\nplanner ranking for {arch.name} (top 5):")
+    for r in results[:5]:
+        p = r.plan
+        print(f"  pp={p.pp:<3d} dp={p.dp:<3d} tp={p.tp:<3d} mb={p.microbatch} "
+              f"{p.layout:8s} -> {r.throughput:8.2f} samples/s")
+
+
+if __name__ == "__main__":
+    main()

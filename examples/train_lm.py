@@ -1,0 +1,22 @@
+"""End-to-end driver: train a reduced assigned architecture for a few
+hundred steps on CPU with the full substrate (prefetching data pipeline,
+Adam + cosine schedule, checkpoint/restart, straggler monitor).
+
+    PYTHONPATH=src python examples/train_lm.py --arch yi-6b --steps 200
+
+Any of the 10 assigned archs works: --arch mamba2-2.7b, hymba-1.5b, ...
+"""
+
+import argparse
+
+from repro.launch.train import main as train_main
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b")
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+    train_main(["--arch", args.arch, "--scale", "small", "--steps", str(args.steps),
+                "--global-batch", "16", "--seq-len", "256",
+                "--microbatches", "2", "--ckpt-dir", f"/tmp/ckpt_{args.arch}"])

@@ -1,0 +1,17 @@
+"""Architecture configs: the 10 assigned architectures + the paper's own
+Megatron T-series workloads. ``get_config(name)`` resolves by id; every
+config is selectable via ``--arch <id>`` in the launchers."""
+
+from .base import ArchConfig, ShapeConfig, SHAPES, shape_applicable
+from .registry import ARCHS, PAPER_MODELS, get_config, list_archs
+
+__all__ = [
+    "ArchConfig",
+    "ShapeConfig",
+    "SHAPES",
+    "ARCHS",
+    "PAPER_MODELS",
+    "get_config",
+    "list_archs",
+    "shape_applicable",
+]

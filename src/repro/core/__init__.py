@@ -1,0 +1,55 @@
+"""PALM core: event-driven performance simulator for tiled accelerators.
+
+Paper: "PALM: A Efficient Performance Simulator for Tiled Accelerators
+with Large-scale Model Training" (Fang et al., 2024). See DESIGN.md.
+"""
+
+from .events import AllOf, AnyOf, Environment, Event, PriorityResource, Process, Resource, Timeout
+from .graph import (
+    Attention,
+    ComputationGraph,
+    Conv2,
+    Embedding,
+    Linear,
+    MoELayer,
+    Norm,
+    Op,
+    Pool,
+    SSMScan,
+    TransformerLayer,
+    bert_base_graph,
+    resnet50_graph,
+    transformer_lm_graph,
+)
+from .hardware import (
+    DRAMSpec,
+    GPUCluster,
+    HardwareSpec,
+    Mesh2D,
+    TileSpec,
+    Topology,
+    a100_cluster,
+    grayskull,
+    tpu_v5e_pod,
+    wafer_scale,
+)
+from .noc import NoCModel, collective_steps, ring_time
+from .dram import DRAMModel
+from .parallelism import (
+    BD,
+    FD,
+    GU,
+    CommTask,
+    MappedGraph,
+    ParallelPlan,
+    SplitOp,
+    StageMapping,
+    line_layout,
+    make_groups,
+    map_graph,
+    s_shape_layout,
+    split_op,
+)
+from .scheduler import PipelineSimulator, SimResult, ideal_pipeline_time
+from .simulator import PlanResult, simulate, sweep_plans
+from .sram import OpAccess, StageMemory, allocate_stage, optimizer_state_bytes_per_param, stage_memory

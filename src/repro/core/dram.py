@@ -1,0 +1,100 @@
+"""DRAM model — PALM §IV-C ❸ (Eq. 4/5).
+
+DRAM bandwidth is a resource occupied during execution, exactly like NoC
+links. In tiled accelerators DRAM sits at the array edge (or off-wafer):
+an access must traverse the NoC to the nearest DRAM port, so
+
+    DRAM_Time = Access_Time + NoC_Time            (Eq. 5)
+    Access_Time = Response_Time + Size / BW_DRAM  (Eq. 4)
+
+Devices with local HBM (GPUs/TPUs: ``hardware.dram_ports == ()``) skip the
+NoC leg and contend only on their private channel.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Generator, Optional
+
+from .events import Environment, Resource
+from .hardware import HardwareSpec
+from .noc import NoCModel
+
+__all__ = ["DRAMModel"]
+
+
+class DRAMModel:
+    def __init__(self, env: Environment, hardware: HardwareSpec, noc: NoCModel):
+        self.env = env
+        self.hw = hardware
+        self.noc = noc
+        self._channels: Dict[int, Resource] = {}
+        self.bytes_accessed = 0.0
+
+    def _channel(self, key: int) -> Resource:
+        res = self._channels.get(key)
+        if res is None:
+            res = Resource(self.env, capacity=1, name=f"dram{key}")
+            self._channels[key] = res
+        return res
+
+    def access(self, device: int, nbytes: float, priority: int = 0,
+               write: bool = False) -> Generator:
+        """Process: one DRAM read/write issued by ``device``."""
+        if nbytes <= 0:
+            yield self.env.timeout(0.0)
+            return
+        self.bytes_accessed += nbytes
+        spec = self.hw.dram
+        port = self.hw.nearest_dram_port(device)
+
+        if port is not None and port != device:
+            # NoC leg to the edge port (Eq. 5); same exclusive-link semantics
+            src, dst = (device, port) if write else (port, device)
+            yield self.env.process(self.noc.transfer(src, dst, nbytes, priority))
+
+        # channel contention: shared edge channels, or per-device HBM
+        key = port if port is not None else device % max(1, spec.channels)
+        chan = self._channel(key)
+        req = chan.request(priority)
+        yield req
+        yield self.env.timeout(spec.response_time + nbytes / spec.bandwidth)  # Eq. (4)
+        chan.release(req)
+
+    def group_access(self, devices, nbytes_per_device: float, priority: int = 0,
+                     write: bool = False, shared_bytes: float = 0.0,
+                     num_shards: int = 1) -> Generator:
+        """Process: a tile group's concurrent DRAM accesses (virtual-tile
+        aggregation).
+
+        ``nbytes_per_device`` is per-tile-distinct traffic (activations);
+        ``shared_bytes`` (x ``num_shards``) is weight traffic whose shards
+        are identical across DP replicas — fetched once per shard and
+        multicast on the NoC (dataflow weight streaming).
+
+        Edge-shared DRAM (tiled accelerators): one representative request
+        per distinct port carrying that port's group-aggregate bytes —
+        ports are the shared, contended resource (§IV-C ❸).
+
+        Local HBM (GPUs/TPUs, ``dram_ports == ()``): every device owns a
+        private channel; each device fetches its own copy concurrently, so
+        the representative request carries per-device bytes.
+        """
+        if not self.hw.dram_ports:
+            rep = next(iter(devices))
+            yield self.env.process(self.access(rep, nbytes_per_device + shared_bytes,
+                                               priority, write))
+            return
+        n_dev = len(list(devices))
+        per_port: Dict[Optional[int], list] = {}
+        for d in devices:
+            per_port.setdefault(self.hw.nearest_dram_port(d), []).append(d)
+        total_shared = shared_bytes * num_shards
+        procs = []
+        for port, devs in per_port.items():
+            rep = devs[0]
+            total = nbytes_per_device * len(devs) + total_shared * len(devs) / n_dev
+            procs.append(self.env.process(self.access(rep, total, priority, write)))
+        if procs:
+            yield self.env.all_of(procs)
+        else:
+            yield self.env.timeout(0.0)

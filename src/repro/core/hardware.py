@@ -1,0 +1,343 @@
+"""Hardware descriptions for PALM (paper §II-C, §III-C, Tables I & VI).
+
+A :class:`HardwareSpec` is pure data: tile compute/SRAM, NoC topology +
+bandwidths, and DRAM channel placement. PALM models a *two-level* tiled
+accelerator (tiles composed of cores); we flatten both levels into one 2-D
+grid of *cores* whose link bandwidth depends on whether a hop crosses a tile
+boundary — faithful to Table VI while keeping routing uniform.
+
+Topologies are pluggable because the paper validates against a GPU cluster
+("we replace the underlying 2D topology of PALM with GPU topology", §V-A2):
+
+* :class:`Mesh2D`       — X-Y dimension-ordered routing on a 2-D mesh.
+* :class:`GPUCluster`   — two-level fat topology: GPUs under a node switch
+  (NVLink/NVSwitch), nodes under a cluster switch (IB NICs).
+
+Presets at the bottom reproduce the hardware used in the paper's case
+studies plus the TPU v5e pod used for the roofline cross-check.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+__all__ = [
+    "TileSpec",
+    "DRAMSpec",
+    "Topology",
+    "Mesh2D",
+    "GPUCluster",
+    "HardwareSpec",
+    "grayskull",
+    "wafer_scale",
+    "a100_cluster",
+    "tpu_v5e_pod",
+]
+
+GB = 1e9
+MB = 1e6
+TFLOPS = 1e12
+
+
+@dataclass(frozen=True)
+class TileSpec:
+    """Per-tile (per-core after flattening) compute + SRAM."""
+
+    flops: float                  # peak FLOP/s at the workload precision
+    sram_bytes: float             # local SRAM capacity
+    compute_efficiency: float = 0.50   # sustained fraction of peak on dense GEMM
+    vector_efficiency: float = 0.15    # sustained fraction for memory-bound ops
+
+    def matmul_time(self, flop: float) -> float:
+        return flop / (self.flops * self.compute_efficiency)
+
+    def vector_time(self, flop: float) -> float:
+        return flop / (self.flops * self.vector_efficiency)
+
+
+@dataclass(frozen=True)
+class DRAMSpec:
+    """Edge-shared DRAM (paper §IV-C ❸)."""
+
+    bandwidth: float              # bytes/s per channel
+    response_time: float = 1e-7   # seconds, Eq. (4) Response_Time
+    channels: int = 1             # number of shared channels (edges)
+    capacity_bytes: float = float("inf")  # per-device DRAM capacity (recompute trigger)
+
+
+class Topology:
+    """Routing interface: a topology enumerates directed links and routes."""
+
+    num_devices: int
+
+    def route(self, src: int, dst: int) -> List[int]:
+        """Return the list of link ids traversed from ``src`` to ``dst``."""
+        raise NotImplementedError
+
+    def num_links(self) -> int:
+        raise NotImplementedError
+
+    def link_bandwidth(self, link_id: int) -> float:
+        raise NotImplementedError
+
+    def link_latency(self, link_id: int) -> float:
+        raise NotImplementedError
+
+    def hops(self, src: int, dst: int) -> int:
+        return len(self.route(src, dst))
+
+    def coords(self, device: int) -> Tuple[int, int]:
+        raise NotImplementedError
+
+
+class Mesh2D(Topology):
+    """2-D mesh with X-Y dimension-ordered routing.
+
+    Two-level bandwidth: a hop whose endpoints lie in different *tiles*
+    (``tile_shape`` groups of cores) uses ``inter_bw``; hops inside a tile
+    use ``intra_bw``. With ``tile_shape=(1,1)`` it degenerates to a flat
+    mesh (Grayskull-style single-level).
+    """
+
+    def __init__(
+        self,
+        rows: int,
+        cols: int,
+        intra_bw: float,
+        inter_bw: Optional[float] = None,
+        link_latency: float = 5e-8,
+        tile_shape: Tuple[int, int] = (1, 1),
+    ):
+        self.rows, self.cols = rows, cols
+        self.num_devices = rows * cols
+        self.intra_bw = intra_bw
+        self.inter_bw = intra_bw if inter_bw is None else inter_bw
+        self._latency = link_latency
+        self.tile_shape = tile_shape
+        # link id layout: horizontal links then vertical links, both directed.
+        #   h-link (r, c, dir): between (r,c) and (r,c+1); dir 0 = east, 1 = west
+        #   v-link (r, c, dir): between (r,c) and (r+1,c); dir 0 = south, 1 = north
+        self._num_h = rows * (cols - 1) * 2
+        self._num_v = (rows - 1) * cols * 2
+
+    # -- indexing -----------------------------------------------------------
+    def device(self, r: int, c: int) -> int:
+        return r * self.cols + c
+
+    def coords(self, device: int) -> Tuple[int, int]:
+        return divmod(device, self.cols)
+
+    def _h_link(self, r: int, c: int, westward: bool) -> int:
+        return (r * (self.cols - 1) + c) * 2 + int(westward)
+
+    def _v_link(self, r: int, c: int, northward: bool) -> int:
+        return self._num_h + (r * self.cols + c) * 2 + int(northward)
+
+    def num_links(self) -> int:
+        return self._num_h + self._num_v
+
+    # -- routing --------------------------------------------------------------
+    def route(self, src: int, dst: int) -> List[int]:
+        (r0, c0), (r1, c1) = self.coords(src), self.coords(dst)
+        links: List[int] = []
+        c = c0
+        while c < c1:
+            links.append(self._h_link(r0, c, westward=False))
+            c += 1
+        while c > c1:
+            links.append(self._h_link(r0, c - 1, westward=True))
+            c -= 1
+        r = r0
+        while r < r1:
+            links.append(self._v_link(r, c1, northward=False))
+            r += 1
+        while r > r1:
+            links.append(self._v_link(r - 1, c1, northward=True))
+            r -= 1
+        return links
+
+    # -- link properties -------------------------------------------------------
+    def _link_endpoints(self, link_id: int) -> Tuple[Tuple[int, int], Tuple[int, int]]:
+        if link_id < self._num_h:
+            base, westward = divmod(link_id, 2)
+            r, c = divmod(base, self.cols - 1)
+            return (r, c), (r, c + 1)
+        base, northward = divmod(link_id - self._num_h, 2)
+        r, c = divmod(base, self.cols)
+        return (r, c), (r + 1, c)
+
+    def link_bandwidth(self, link_id: int) -> float:
+        (r0, c0), (r1, c1) = self._link_endpoints(link_id)
+        tr, tc = self.tile_shape
+        same_tile = (r0 // tr == r1 // tr) and (c0 // tc == c1 // tc)
+        return self.intra_bw if same_tile else self.inter_bw
+
+    def link_latency(self, link_id: int) -> float:
+        return self._latency
+
+
+class GPUCluster(Topology):
+    """Two-level GPU cluster: node switch (NVLink) + cluster switch (IB).
+
+    Link ids: for each GPU g, links ``2g`` (up to node switch) and ``2g+1``
+    (down). For each node n, links ``2G + 2n`` (node up to cluster) and
+    ``2G + 2n + 1`` (down). Intra-node routes use only NVLink up/down;
+    inter-node routes traverse NVLink up, NIC up, NIC down, NVLink down.
+    """
+
+    def __init__(
+        self,
+        num_gpus: int,
+        gpus_per_node: int = 8,
+        nvlink_bw: float = 300 * GB,     # A100 NVLink3 per direction
+        nic_bw: float = 25 * GB,         # 8x200Gb/s HDR per node / 8 GPUs
+        nvlink_latency: float = 2e-6,
+        nic_latency: float = 5e-6,
+    ):
+        self.num_devices = num_gpus
+        self.gpus_per_node = gpus_per_node
+        self.num_nodes = (num_gpus + gpus_per_node - 1) // gpus_per_node
+        self.nvlink_bw, self.nic_bw = nvlink_bw, nic_bw
+        self._nv_lat, self._nic_lat = nvlink_latency, nic_latency
+
+    def coords(self, device: int) -> Tuple[int, int]:
+        return divmod(device, self.gpus_per_node)  # (node, local rank)
+
+    def num_links(self) -> int:
+        return 2 * self.num_devices + 2 * self.num_nodes
+
+    def route(self, src: int, dst: int) -> List[int]:
+        if src == dst:
+            return []
+        n_src, n_dst = src // self.gpus_per_node, dst // self.gpus_per_node
+        if n_src == n_dst:
+            return [2 * src, 2 * dst + 1]
+        base = 2 * self.num_devices
+        return [2 * src, base + 2 * n_src, base + 2 * n_dst + 1, 2 * dst + 1]
+
+    def link_bandwidth(self, link_id: int) -> float:
+        if link_id < 2 * self.num_devices:
+            return self.nvlink_bw
+        return self.nic_bw * self.gpus_per_node  # node NIC aggregate
+
+    def link_latency(self, link_id: int) -> float:
+        return self._nv_lat if link_id < 2 * self.num_devices else self._nic_lat
+
+
+@dataclass
+class HardwareSpec:
+    """Complete machine description consumed by the simulator."""
+
+    name: str
+    topology: Topology
+    tile: TileSpec
+    dram: DRAMSpec
+    # device ids (after flattening) that host a DRAM port; empty = every
+    # device has local HBM (GPU/TPU style, no NoC traversal to reach DRAM).
+    dram_ports: Tuple[int, ...] = ()
+    precision_bytes: int = 2
+
+    @property
+    def num_devices(self) -> int:
+        return self.topology.num_devices
+
+    def nearest_dram_port(self, device: int) -> Optional[int]:
+        if not self.dram_ports:
+            return None
+        return min(self.dram_ports, key=lambda p: self.topology.hops(device, p))
+
+    def with_(self, **kw) -> "HardwareSpec":
+        return dataclasses.replace(self, **kw)
+
+
+# --------------------------------------------------------------------------
+# Presets used by the paper's case studies
+# --------------------------------------------------------------------------
+
+def grayskull() -> HardwareSpec:
+    """Tenstorrent Grayskull e150 (paper Table I / §V-A3, [40]).
+
+    120 Tensix cores in a 10x12 grid, ~368 int8 TOPS => ~3 TOPS/core,
+    ~1 MB SRAM/core (120 MB total), 8 channels LPDDR4 ~100 GB/s aggregate,
+    NoC ~192 GB/s per link direction.
+    """
+    topo = Mesh2D(10, 12, intra_bw=192 * GB, link_latency=5e-8)
+    # DRAM ports on the top edge (row 0), matching the board's 8 channels.
+    ports = tuple(range(0, 12, 2))[:8]
+    return HardwareSpec(
+        name="grayskull",
+        topology=topo,
+        tile=TileSpec(flops=3.07 * TFLOPS, sram_bytes=1.0 * MB,
+                      compute_efficiency=0.65, vector_efficiency=0.20),
+        dram=DRAMSpec(bandwidth=100 * GB / 8, response_time=2e-7, channels=8),
+        dram_ports=ports,
+        precision_bytes=1,  # published numbers are int8
+    )
+
+
+def wafer_scale() -> HardwareSpec:
+    """Paper Table VI wafer-scale config: 5x4 tiles of 4x4 cores.
+
+    256 TFLOPS fp16 + 60 MB SRAM per *tile* => 16 TFLOPS + 3.75 MB per core.
+    intra-tile NoC 1024 GB/s, inter-tile 256 GB/s, edge DRAM 256 GB/s/tile.
+    """
+    topo = Mesh2D(5 * 4, 4 * 4, intra_bw=1024 * GB, inter_bw=256 * GB,
+                  link_latency=2e-8, tile_shape=(4, 4))
+    # Edge-shared DRAM: one port per tile-row on both vertical edges.
+    ports = tuple(topo.device(r, 0) for r in range(0, 20, 4)) + tuple(
+        topo.device(r, 15) for r in range(0, 20, 4))
+    return HardwareSpec(
+        name="wafer_scale",
+        topology=topo,
+        tile=TileSpec(flops=16 * TFLOPS, sram_bytes=3.75 * MB,
+                      compute_efficiency=0.55, vector_efficiency=0.15),
+        dram=DRAMSpec(bandwidth=256 * GB, response_time=3e-7, channels=10),
+        dram_ports=ports,
+        precision_bytes=2,
+    )
+
+
+def a100_cluster(num_gpus: int, d_model: Optional[int] = None) -> HardwareSpec:
+    """Selene-style A100 cluster used for Table IV (Megatron published data).
+
+    312 TFLOP/s bf16 peak. Sustained GEMM efficiency on A100 grows with
+    matrix size (cuBLAS: ~52% at K~6k up to ~63% at K~20k — visible in
+    Megatron's own per-GPU numbers, 135 TF/s @18B vs 163 TF/s @530B);
+    ``d_model`` selects the point on that curve. 40 MB L2 as the "SRAM"
+    level, 1.94 TB/s HBM2e local to each GPU (no NoC traversal =>
+    dram_ports=()).
+    """
+    if d_model is None:
+        eff = 0.52
+    else:
+        eff = min(0.65, max(0.45, 0.475 + 7.3e-6 * d_model))
+    return HardwareSpec(
+        name=f"a100x{num_gpus}",
+        topology=GPUCluster(num_gpus),
+        tile=TileSpec(flops=312 * TFLOPS, sram_bytes=40 * MB,
+                      compute_efficiency=eff, vector_efficiency=0.10),
+        dram=DRAMSpec(bandwidth=1.94e12, response_time=1e-7, channels=num_gpus,
+                      capacity_bytes=80e9),
+        dram_ports=(),
+        precision_bytes=2,
+    )
+
+
+def tpu_v5e_pod(rows: int = 16, cols: int = 16) -> HardwareSpec:
+    """TPU v5e pod slice for the roofline cross-check (see DESIGN.md §3).
+
+    197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s per ICI link, 2-D torus
+    (modelled as a mesh — simulator routes are upper bounds on torus).
+    """
+    topo = Mesh2D(rows, cols, intra_bw=50 * GB, link_latency=1e-6)
+    return HardwareSpec(
+        name=f"tpu_v5e_{rows}x{cols}",
+        topology=topo,
+        tile=TileSpec(flops=197 * TFLOPS, sram_bytes=128 * MB,
+                      compute_efficiency=0.55, vector_efficiency=0.12),
+        dram=DRAMSpec(bandwidth=819 * GB, response_time=1e-7, channels=rows * cols),
+        dram_ports=(),
+        precision_bytes=2,
+    )

@@ -1,0 +1,307 @@
+"""Detailed NoC model — PALM §IV-C ❷ (Eq. 2/3) and collectives (§II-B).
+
+The paper's key modeling decision: *links are exclusive resources during
+execution*. A transfer that needs occupied links waits (contention delay);
+when granted, a wormhole-pipelined transfer takes Eq. (2):
+
+    Comm_Time = Link_Time x Hops + Comm_Size / BW_link(+ contention wait)
+
+Three fidelity levels expose the paper's complexity story (§IV-A):
+
+* ``detailed``   — every ring/all-to-all step is a set of link-holding
+  transfer events: O(P^2) events per collective; used for the small
+  validation benches (Fig. 6/7/12).
+* ``macro``      — a collective holds its whole link footprint once for its
+  closed-form duration; contention *between* collectives and DRAM traffic
+  is preserved with O(1) events per collective. This is the
+  "analytical model for the NoC" that takes Virtual Tile Aggregation to
+  O(M) (§IV-A).
+* ``analytical`` — pure closed form, no resources at all (the baseline the
+  paper compares against in Fig. 7).
+
+Collective cost closed forms (ring algorithms, P participants, S bytes
+per participant): all-reduce 2(P-1)/P * S per link; reduce-scatter and
+all-gather (P-1)/P * S; all-to-all (P-1)/P * S bisection-limited.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, Generator, Iterable, List, Optional, Sequence, Tuple
+
+from .events import Environment, Resource
+from .hardware import HardwareSpec, Topology
+
+__all__ = ["NoCModel", "collective_steps", "ring_time"]
+
+
+def collective_steps(kind: str, p: int) -> int:
+    if p <= 1:
+        return 0
+    return {"all_reduce": 2 * (p - 1), "reduce_scatter": p - 1, "all_gather": p - 1,
+            "all_to_all": p - 1, "broadcast": 1, "reduce": 1}[kind]
+
+
+def _chunk_bytes(kind: str, nbytes: float, p: int) -> float:
+    """Bytes moved per participant per step for ring algorithms."""
+    if p <= 1:
+        return 0.0
+    if kind in ("all_reduce", "reduce_scatter", "all_gather"):
+        return nbytes / p
+    if kind == "all_to_all":
+        return nbytes / p          # one distinct shard per peer per step
+    if kind in ("broadcast", "reduce"):
+        return nbytes
+    raise ValueError(kind)
+
+
+def ring_time(kind: str, nbytes: float, p: int, bw: float, hop_latency: float,
+              hops_per_step: int = 1) -> float:
+    """Closed-form ring collective time (used by macro/analytical modes)."""
+    steps = collective_steps(kind, p)
+    if steps == 0:
+        return 0.0
+    per_step = hop_latency * hops_per_step + _chunk_bytes(kind, nbytes, p) / bw
+    return steps * per_step
+
+
+class NoCModel:
+    """Event-driven NoC with pluggable fidelity."""
+
+    def __init__(self, env: Environment, hardware: HardwareSpec, mode: str = "detailed"):
+        if mode not in ("detailed", "macro", "analytical"):
+            raise ValueError(mode)
+        self.env = env
+        self.hw = hardware
+        self.topo: Topology = hardware.topology
+        self.mode = mode
+        self._links: Dict[int, Resource] = {}
+        # instrumentation
+        self.bytes_moved = 0.0
+        self.transfer_count = 0
+
+    # -- resources ------------------------------------------------------------
+    def link(self, link_id: int) -> Resource:
+        res = self._links.get(link_id)
+        if res is None:
+            res = Resource(self.env, capacity=1, name=f"link{link_id}")
+            self._links[link_id] = res
+        return res
+
+    def occupancy_report(self) -> Dict[int, float]:
+        return {lid: r.utilization() for lid, r in self._links.items()}
+
+    # -- primitive transfer ------------------------------------------------------
+    def _path_time(self, route: Sequence[int], nbytes: float) -> float:
+        if not route:
+            return 0.0
+        lat = sum(self.topo.link_latency(l) for l in route)
+        bw = min(self.topo.link_bandwidth(l) for l in route)
+        return lat + nbytes / bw  # Eq. (2), wormhole-pipelined
+
+    def transfer(self, src: int, dst: int, nbytes: float, priority: int = 0) -> Generator:
+        """Process: move ``nbytes`` from src to dst (holds the whole path —
+        'treating the link as an exclusive resource during execution')."""
+        self.bytes_moved += nbytes
+        self.transfer_count += 1
+        route = self.topo.route(src, dst)
+        t = self._path_time(route, nbytes)
+        if self.mode == "analytical" or not route:
+            yield self.env.timeout(t)
+            return
+        # deadlock-free acquisition: global link-id order
+        reqs = []
+        for lid in sorted(set(route)):
+            link = self.link(lid)
+            req = link.request(priority)
+            yield req
+            reqs.append((link, req))
+        yield self.env.timeout(t)
+        for link, req in reqs:
+            link.release(req)
+
+    # -- collectives ------------------------------------------------------------
+    def collective(self, kind: str, group: Sequence[int], nbytes: float,
+                   priority: int = 0, root: Optional[int] = None) -> Generator:
+        """Process: run a collective over ``group`` (device ids, ring order =
+        list order). ``nbytes`` is the per-participant payload."""
+        p = len(group)
+        if p <= 1 or nbytes <= 0:
+            yield self.env.timeout(0.0)
+            return
+        if self.mode == "detailed":
+            yield from self._collective_detailed(kind, list(group), nbytes, priority, root)
+        elif self.mode == "macro":
+            yield from self._collective_macro(kind, list(group), nbytes, priority, root)
+        else:
+            yield self.env.timeout(self._collective_closed_form(kind, list(group), nbytes, root))
+
+    # closed form on the actual topology ---------------------------------------
+    def _ring_links(self, group: List[int]) -> List[int]:
+        links: List[int] = []
+        for i, src in enumerate(group):
+            dst = group[(i + 1) % len(group)]
+            links.extend(self.topo.route(src, dst))
+        return links
+
+    def _chain_links(self, group: List[int], root: Optional[int]) -> List[int]:
+        """Chain path visiting the group in order, starting at root."""
+        order = list(group)
+        if root is not None and root in order:
+            order.remove(root)
+            order = [root] + order
+        links: List[int] = []
+        for a, b in zip(order, order[1:]):
+            links.extend(self.topo.route(a, b))
+        return links
+
+    def _collective_closed_form(self, kind: str, group: List[int], nbytes: float,
+                                root: Optional[int]) -> float:
+        p = len(group)
+        if kind == "broadcast":
+            # chain-pipelined (wormhole): the payload streams through the
+            # member chain once; time = hop latencies + size / bottleneck bw
+            links = self._chain_links(group, root)
+            return self._path_time(links, nbytes)
+        if kind == "reduce":
+            # converging transfers: p-1 full-size payloads funnel into the
+            # root's <=4 incident links (the §V-C strategy-2 cost driver)
+            root = group[0] if root is None else root
+            paths = [self.topo.route(d, root) for d in group if d != root]
+            if not paths:
+                return 0.0
+            bw = min(min(self.topo.link_bandwidth(l) for l in path)
+                     for path in paths if path)
+            fan_in = min(4, len(paths))
+            lat = max(sum(self.topo.link_latency(l) for l in path) for path in paths)
+            return lat + len(paths) * nbytes / (fan_in * bw)
+        # ring: pipelined chunks — every chunk crosses every inter-neighbour
+        # path, so the slowest path bounds the per-step rate (this is what
+        # breaks when the ring has an off-ring member: §V-C)
+        step_times = []
+        for i, src in enumerate(group):
+            dst = group[(i + 1) % p]
+            step_times.append(self._path_time(self.topo.route(src, dst),
+                                              _chunk_bytes(kind, nbytes, p)))
+        return collective_steps(kind, p) * max(step_times)
+
+    # macro: closed form + exclusive hold of the link footprint ----------------
+    def _collective_macro(self, kind: str, group: List[int], nbytes: float,
+                          priority: int, root: Optional[int]) -> Generator:
+        self.bytes_moved += nbytes * len(group)
+        self.transfer_count += 1
+        t = self._collective_closed_form(kind, group, nbytes, root)
+        footprint = sorted(set(self._ring_links(group)))
+        reqs = []
+        for lid in footprint:
+            link = self.link(lid)
+            req = link.request(priority)
+            yield req
+            reqs.append((link, req))
+        yield self.env.timeout(t)
+        for link, req in reqs:
+            link.release(req)
+
+    # detailed: per-step transfers ---------------------------------------------
+    def _collective_detailed(self, kind: str, group: List[int], nbytes: float,
+                             priority: int, root: Optional[int]) -> Generator:
+        env = self.env
+        p = len(group)
+        if kind == "broadcast":
+            # chain-pipelined stream holding the chain's link set once
+            self.bytes_moved += nbytes * (p - 1)
+            self.transfer_count += 1
+            links = self._chain_links(group, root)
+            t = self._path_time(links, nbytes)
+            reqs = []
+            for lid in sorted(set(links)):
+                link = self.link(lid)
+                req = link.request(priority)
+                yield req
+                reqs.append((link, req))
+            yield env.timeout(t)
+            for link, req in reqs:
+                link.release(req)
+            return
+        if kind == "reduce":
+            # converging full-size transfers (contend on root's links)
+            root = group[0] if root is None else root
+            procs = [env.process(self.transfer(d, root, nbytes, priority))
+                     for d in group if d != root]
+            if procs:
+                yield env.all_of(procs)
+            return
+        steps = collective_steps(kind, p)
+        chunk = _chunk_bytes(kind, nbytes, p)
+        for _ in range(steps):
+            procs = [env.process(self.transfer(group[i], group[(i + 1) % p], chunk, priority))
+                     for i in range(p)]
+            yield env.all_of(procs)
+
+    # -- inter-tile-group strategies (paper §V-C, Fig. 11) ----------------------
+
+    def group_to_group(
+        self,
+        src_group: Sequence[int],
+        dst_group: Sequence[int],
+        nbytes: float,
+        strategy: int = 1,
+        num_adapters: int = 1,
+        priority: int = 0,
+    ) -> Generator:
+        """Send a reduced tensor from one tile group to another.
+
+        Strategy 1 (Eq. 7): all-reduce in source -> point-to-point to the
+        adapters -> broadcast in destination.
+        Strategy 2 (Eq. 8): reduce onto the adapters' peers -> p2p ->
+        all-reduce among adapters -> broadcast in destination.
+        """
+        env = self.env
+        src, dst = list(src_group), list(dst_group)
+        k = max(1, min(num_adapters, len(src), len(dst)))
+        senders, adapters = src[:k], dst[:k]
+
+        if strategy == 1:
+            yield env.process(self.collective("all_reduce", src, nbytes, priority))
+            shard = nbytes / k
+            procs = [env.process(self.transfer(s, a, shard, priority))
+                     for s, a in zip(senders, adapters)]
+            yield env.all_of(procs)
+            yield from self._dest_broadcast(adapters, dst, nbytes, priority)
+        elif strategy == 2:
+            # reduce within k contiguous source subsets onto the k senders
+            m = (len(src) + k - 1) // k
+            subsets = [src[i * m:(i + 1) * m] for i in range(k) if src[i * m:(i + 1) * m]]
+            procs = [env.process(self.collective("reduce", sub, nbytes, priority, root=sub[0]))
+                     for sub in subsets if len(sub) > 1]
+            if procs:
+                yield env.all_of(procs)
+            shard = nbytes  # each adapter receives a partial full-size tensor
+            procs = [env.process(self.transfer(sub[0], a, shard, priority))
+                     for sub, a in zip(subsets, adapters)]
+            yield env.all_of(procs)
+            if k > 1:
+                yield env.process(self.collective("all_reduce", adapters, nbytes, priority))
+            yield from self._dest_broadcast(adapters, dst, nbytes, priority)
+        else:
+            raise ValueError(f"unknown strategy {strategy}")
+
+    def _dest_broadcast(self, adapters: List[int], dst: List[int], nbytes: float,
+                        priority: int) -> Generator:
+        env = self.env
+        rest = [d for d in dst if d not in adapters]
+        if not rest:
+            yield env.timeout(0.0)
+            return
+        # each adapter chain-broadcasts to a contiguous share of the rest
+        k = len(adapters)
+        m = (len(rest) + k - 1) // k
+        procs = []
+        for i, a in enumerate(adapters):
+            share = rest[i * m:(i + 1) * m]
+            if share:
+                procs.append(env.process(
+                    self.collective("broadcast", [a] + share, nbytes, priority, root=a)))
+        if procs:
+            yield env.all_of(procs)

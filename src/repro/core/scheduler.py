@@ -1,0 +1,347 @@
+"""Pipeline scheduler with Virtual Tile Aggregation — PALM §IV-A, Figs. 3-5.
+
+Every stage's tile group is represented by *one* simulated worker (the
+virtual tile): intra-group tiles have identical compute/memory cost by
+construction, so one representative carries the group's timing while the
+group-aggregate traffic is what hits shared resources (DRAM ports, NoC
+links). This is the paper's O(2N^2) -> O(N^2 + M) -> O(M) reduction; with
+``noc_mode="macro"`` the per-collective closed form makes the whole
+simulation O(M) events per micro-batch.
+
+Event taxonomy (paper Fig. 4/5): per stage and micro-batch we run
+``FD`` (forward), ``BD`` (backward: loss + optional re-computation +
+gradient), ``GU`` (gradient update: full-precision weight load/store),
+plus ``Act/Grad Pass`` NoC messages that *start* the neighbouring stage,
+and ``Data Fetch`` for stage 0. The Prior Selector is realised as the
+deterministic 1F1B/GPipe work list; DP gradient collectives are launched
+asynchronously so they overlap subsequent compute (Fig. 5 note).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, Generator, List, Optional, Tuple
+
+from .dram import DRAMModel
+from .events import Environment, Event
+from .hardware import HardwareSpec
+from .noc import NoCModel
+from .parallelism import BD, FD, GU, MappedGraph, ParallelPlan, StageMapping
+from .sram import OpAccess, StageMemory, allocate_stage, stage_memory
+
+__all__ = ["SimResult", "PipelineSimulator", "ideal_pipeline_time"]
+
+
+@dataclass
+class SimResult:
+    total_time: float
+    throughput: float                  # samples (sequences) / s
+    stage_memory: List[StageMemory]
+    recompute: bool
+    event_count: int
+    noc_bytes: float
+    dram_bytes: float
+    timeline: List[Tuple[int, str, int, float, float]] = field(default_factory=list)
+    stage_busy: Dict[int, float] = field(default_factory=dict)
+    noc_occupancy: Dict[int, float] = field(default_factory=dict)
+
+    @property
+    def bubble_ratio(self) -> float:
+        if not self.stage_busy or self.total_time <= 0:
+            return 0.0
+        avg_busy = sum(self.stage_busy.values()) / len(self.stage_busy)
+        return 1.0 - avg_busy / self.total_time
+
+
+def ideal_pipeline_time(fd_bd_per_stage: List[float], num_microbatches: int,
+                        gu_time: float = 0.0) -> float:
+    """Paper Eq. (1): (B/b - 1) * max_s(FD+BD) + sum_s(FD+BD) + GU."""
+    return ((num_microbatches - 1) * max(fd_bd_per_stage)
+            + sum(fd_bd_per_stage) + gu_time)
+
+
+class PipelineSimulator:
+    """Runs one training iteration (or an inference pipeline) of a mapped
+    graph and reports absolute time + throughput."""
+
+    def __init__(
+        self,
+        mapped: MappedGraph,
+        noc_mode: str = "macro",
+        collect_timeline: bool = False,
+        boundary_mode: str = "pairwise",   # "pairwise" | "strategy"
+    ):
+        self.mapped = mapped
+        self.plan: ParallelPlan = mapped.plan
+        self.hw: HardwareSpec = mapped.hardware
+        self.env = Environment()
+        self.noc = NoCModel(self.env, self.hw, mode=noc_mode)
+        self.dram = DRAMModel(self.env, self.hw, self.noc)
+        self.collect_timeline = collect_timeline
+        self.boundary_mode = boundary_mode
+
+        S = mapped.num_stages
+        M = self.plan.num_microbatches
+        # Act/Grad Pass mailboxes (adjacent stages share a message queue)
+        self.act_ready: List[List[Event]] = [
+            [self.env.event(f"act[{s}][{i}]") for i in range(M)] for s in range(S)]
+        self.grad_ready: List[List[Event]] = [
+            [self.env.event(f"grad[{s}][{i}]") for i in range(M)] for s in range(S)]
+        for i in range(M):
+            self.act_ready[0][i].succeed()  # stage 0 fetches its own data
+
+        # memory + recompute decision (auto: recompute iff footprint exceeds
+        # per-device DRAM capacity without it)
+        self.memory = [stage_memory(st, self.plan, self.hw) for st in mapped.stages]
+        if self.plan.recompute == "always":
+            self.recompute = True
+        elif self.plan.recompute == "never":
+            self.recompute = False
+        else:
+            cap = self.hw.dram.capacity_bytes
+            self.recompute = any(m.total > cap for m in self.memory)
+        if self.recompute:
+            for m in self.memory:
+                m.inflight_microbatches = 1  # only boundary acts retained
+
+        self.access: List[List[OpAccess]] = [
+            allocate_stage(st, self.plan, self.hw, recompute=self.recompute)
+            for st in mapped.stages]
+
+        self.timeline: List[Tuple[int, str, int, float, float]] = []
+        self.stage_busy: Dict[int, float] = {s: 0.0 for s in range(S)}
+        self._fd_done_t: Dict[Tuple[int, int], float] = {}
+        self._gu_done: List[Event] = [self.env.event(f"gu[{s}]") for s in range(S)]
+        # interleaved 1F1B: virtual stages sharing a tile group serialize
+        # on the group's compute resource (BD pre-empts queued FD — the
+        # Prior Selector, Fig. 4)
+        from .events import PriorityResource
+        self._compute_res: Dict[Tuple[int, ...], PriorityResource] = {}
+        if self.plan.interleave > 1:
+            for st in mapped.stages:
+                key = tuple(st.devices)
+                if key not in self._compute_res:
+                    self._compute_res[key] = PriorityResource(
+                        self.env, capacity=1, name=f"tiles{st.stage_id % self.plan.pp}")
+
+    def _acquire_compute(self, sid: int, priority: int):
+        key = tuple(self.mapped.stages[sid].devices)
+        res = self._compute_res.get(key)
+        if res is None:
+            return None, None
+        req = res.request(priority)
+        return res, req
+
+    # -- cost primitives -----------------------------------------------------
+    def _compute_time(self, flops_tile: float, matmul_fraction: float) -> float:
+        tile = self.hw.tile
+        mm = flops_tile * matmul_fraction
+        vec = flops_tile - mm
+        return tile.matmul_time(mm) + (tile.vector_time(vec) if vec > 0 else 0.0)
+
+    def _dram_and_compute(self, stage: StageMapping, act_bytes: float,
+                          weight_bytes: float, compute_s: float) -> Generator:
+        """One op's DRAM traffic + compute. With ``stream_overlap`` (the
+        dataflow double-buffering norm) they run concurrently; otherwise
+        sequentially, as Fig. 5's sub-process chain."""
+        env = self.env
+        if act_bytes + weight_bytes <= 0:
+            yield env.timeout(compute_s)
+            return
+        shards = stage.weight_shards if self.plan.weight_multicast \
+            else len(stage.devices)
+        dram = env.process(self.dram.group_access(
+            stage.devices, act_bytes, priority=1,
+            shared_bytes=weight_bytes, num_shards=shards))
+        if self.plan.stream_overlap:
+            compute = env.timeout(compute_s)
+            yield env.all_of([dram, compute])
+        else:
+            yield dram
+            yield env.timeout(compute_s)
+
+    def _stage_collectives(self, stage: StageMapping, comms, phase: str,
+                           priority: int) -> Generator:
+        """Run one op's intra-stage collectives for ``phase`` (all groups of
+        the axis operate concurrently)."""
+        env = self.env
+        precision = self.hw.precision_bytes
+        procs = []
+        for task in comms:
+            if task.phase != phase:
+                continue
+            groups = stage.groups.get(task.axis)
+            if not groups:
+                continue
+            # task.elems is already the per-participant payload (Table III)
+            per_dev_bytes = task.elems * precision
+            for g in groups:
+                procs.append(env.process(
+                    self.noc.collective(task.kind, g, per_dev_bytes, priority)))
+        if procs:
+            yield env.all_of(procs)
+        else:
+            yield env.timeout(0.0)
+
+    # -- FD / BD / GU bodies (Fig. 5) ------------------------------------------
+    def _run_fd(self, sid: int, mb: int) -> Generator:
+        stage = self.mapped.stages[sid]
+        env = self.env
+        yield self.act_ready[sid][mb]
+        res, req = self._acquire_compute(sid, priority=1)   # FD after BD
+        if req is not None:
+            yield req
+        start = env.now
+        if sid == 0 and stage.split_ops:
+            # Data Fetch: input micro-batch from DRAM
+            first = stage.split_ops[0]
+            nbytes = first.act_in_elems_tile * self.hw.precision_bytes
+            yield env.process(self.dram.group_access(stage.devices, nbytes))
+        for split, acc in zip(stage.split_ops, self.access[sid]):
+            yield from self._dram_and_compute(
+                stage, acc.fd_act, acc.fd_weight,
+                self._compute_time(split.fwd_flops_tile, split.matmul_fraction))
+            yield from self._stage_collectives(stage, split.comms, FD, priority=1)
+        self.stage_busy[sid] += env.now - start
+        self._fd_done_t[(sid, mb)] = env.now
+        if self.collect_timeline:
+            self.timeline.append((sid, FD, mb, start, env.now))
+        if res is not None:
+            res.release(req)
+        # Act Pass -> next stage (start signal)
+        if sid + 1 < self.mapped.num_stages:
+            yield from self._boundary_pass(sid, sid + 1, mb, kind="act")
+            self.act_ready[sid + 1][mb].succeed()
+        elif self.plan.training:
+            self.grad_ready[sid][mb].succeed()  # loss is computed locally
+
+    def _run_bd(self, sid: int, mb: int, pending_dp: List) -> Generator:
+        stage = self.mapped.stages[sid]
+        env = self.env
+        yield self.grad_ready[sid][mb]
+        res, req = self._acquire_compute(sid, priority=0)   # BD first (1F1B)
+        if req is not None:
+            yield req
+        start = env.now
+        for split, acc in zip(reversed(stage.split_ops), reversed(self.access[sid])):
+            compute = self._compute_time(split.bwd_flops_tile, split.matmul_fraction)
+            if self.recompute:  # Fig. 5 Recompute sub-process
+                compute += self._compute_time(split.fwd_flops_tile,
+                                              split.matmul_fraction)
+            yield from self._dram_and_compute(stage, acc.bd_act, acc.bd_weight,
+                                              compute)
+            yield from self._stage_collectives(stage, split.comms, BD, priority=1)
+            if mb == self.plan.num_microbatches - 1:
+                # DP gradient sync: async, overlaps later compute (Fig. 5)
+                pending_dp.append(env.process(
+                    self._stage_collectives(stage, split.comms, GU, priority=2)))
+        self.stage_busy[sid] += env.now - start
+        if self.collect_timeline:
+            self.timeline.append((sid, BD, mb, start, env.now))
+        if res is not None:
+            res.release(req)
+        if sid > 0:
+            yield from self._boundary_pass(sid, sid - 1, mb, kind="grad")
+            self.grad_ready[sid - 1][mb].succeed()
+
+    def _run_gu(self, sid: int, pending_dp: List) -> Generator:
+        stage = self.mapped.stages[sid]
+        env = self.env
+        if pending_dp:
+            yield env.all_of(pending_dp)
+        start = env.now
+        gu_bytes = sum(a.gu_bytes for a in self.access[sid])
+        if gu_bytes > 0:
+            # full-precision weight load from DRAM and store back (§IV-A);
+            # optimizer state is per-shard (not replicated across DP)
+            yield env.process(self.dram.group_access(
+                stage.devices, 0.0, shared_bytes=gu_bytes / 2,
+                num_shards=stage.weight_shards))
+            yield env.process(self.dram.group_access(
+                stage.devices, 0.0, write=True, shared_bytes=gu_bytes / 2,
+                num_shards=stage.weight_shards))
+        if self.collect_timeline:
+            self.timeline.append((sid, GU, 0, start, env.now))
+        self._gu_done[sid].succeed()
+
+    def _boundary_pass(self, src: int, dst: int, mb: int, kind: str) -> Generator:
+        """Act/Grad Pass between adjacent stages (NoC communication event)."""
+        env = self.env
+        s_from = self.mapped.stages[src]
+        s_to = self.mapped.stages[dst]
+        nbytes = self.mapped.boundary_elems(min(src, dst)) * self.hw.precision_bytes
+        if self.boundary_mode == "strategy" and len(s_from.devices) > 1:
+            yield from self.noc.group_to_group(
+                s_from.devices, s_to.devices, nbytes,
+                strategy=self.plan.comm_strategy,
+                num_adapters=max(1, len(s_to.devices) // 4))
+            return
+        # pairwise: rank i -> rank i (Megatron-style P2P), concurrent
+        n = min(len(s_from.devices), len(s_to.devices))
+        per = nbytes / n
+        procs = [env.process(self.noc.transfer(s_from.devices[i], s_to.devices[i],
+                                               per, priority=0))
+                 for i in range(n)]
+        yield env.all_of(procs)
+
+    # -- per-stage worker (Prior Selector as deterministic work list) --------
+    def _work_list(self, sid: int) -> List[Tuple[str, int]]:
+        S, M = self.mapped.num_stages, self.plan.num_microbatches
+        if not self.plan.training:
+            return [(FD, i) for i in range(M)]
+        if self.plan.schedule == "gpipe":
+            return [(FD, i) for i in range(M)] + [(BD, i) for i in range(M)]
+        # 1F1B: warmup forwards, then strict BD-before-FD alternation
+        w = min(S - sid, M)
+        order: List[Tuple[str, int]] = [(FD, i) for i in range(w)]
+        bd, fd = 0, w
+        while bd < M:
+            order.append((BD, bd)); bd += 1
+            if fd < M:
+                order.append((FD, fd)); fd += 1
+        return order
+
+    def _stage_proc(self, sid: int) -> Generator:
+        pending_dp: List = []
+        for kind, mb in self._work_list(sid):
+            if kind == FD:
+                yield from self._run_fd(sid, mb)
+            else:
+                yield from self._run_bd(sid, mb, pending_dp)
+        if self.plan.training:
+            yield from self._run_gu(sid, pending_dp)
+
+    # -- entry ----------------------------------------------------------------
+    def run(self) -> SimResult:
+        env = self.env
+        procs = [env.process(self._stage_proc(s), name=f"stage{s}")
+                 for s in range(self.mapped.num_stages)]
+        env.run(until_event=env.all_of(procs))
+        total = env.now
+
+        M = self.plan.num_microbatches
+        samples = self.plan.global_batch
+        if self.plan.training:
+            throughput = samples / total if total > 0 else 0.0
+        else:
+            # steady-state pipeline rate, drain/setup excluded (§V-A3)
+            finishes = sorted(t for (s, i), t in self._fd_done_t.items()
+                              if s == self.mapped.num_stages - 1)
+            mb_size = samples / M
+            if len(finishes) > 1:
+                throughput = (len(finishes) - 1) * mb_size / (finishes[-1] - finishes[0])
+            else:
+                throughput = samples / total if total > 0 else 0.0
+        return SimResult(
+            total_time=total,
+            throughput=throughput,
+            stage_memory=self.memory,
+            recompute=self.recompute,
+            event_count=env.event_count,
+            noc_bytes=self.noc.bytes_moved,
+            dram_bytes=self.dram.bytes_accessed,
+            timeline=self.timeline,
+            stage_busy=dict(self.stage_busy),
+            noc_occupancy=self.noc.occupancy_report() if self.noc._links else {},
+        )

@@ -1,0 +1,72 @@
+"""PALM top-level entry points (Fig. 2).
+
+``simulate`` runs one training iteration (or an inference pipeline) of a
+computation graph on a hardware spec under a parallelism plan and returns
+absolute performance. ``sweep_plans`` is the planner loop the paper uses
+in §V-B: iterate parallelism strategies directly against simulation
+results — the capability the paper says existing simulators lack.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from dataclasses import dataclass
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+from .graph import ComputationGraph
+from .hardware import HardwareSpec
+from .parallelism import MappedGraph, ParallelPlan, map_graph
+from .scheduler import PipelineSimulator, SimResult, ideal_pipeline_time
+
+__all__ = ["simulate", "sweep_plans", "PlanResult"]
+
+
+def simulate(
+    graph: ComputationGraph,
+    hardware: HardwareSpec,
+    plan: ParallelPlan,
+    noc_mode: str = "macro",
+    collect_timeline: bool = False,
+    boundary_mode: str = "pairwise",
+) -> SimResult:
+    """Run PALM once. ``graph`` must be built with per-iteration batch
+    ``plan.microbatch * plan.dp`` (the DP group's micro-batch)."""
+    mapped = map_graph(graph, hardware, plan)
+    sim = PipelineSimulator(mapped, noc_mode=noc_mode,
+                            collect_timeline=collect_timeline,
+                            boundary_mode=boundary_mode)
+    return sim.run()
+
+
+@dataclass
+class PlanResult:
+    plan: ParallelPlan
+    result: SimResult
+
+    @property
+    def throughput(self) -> float:
+        return self.result.throughput
+
+
+def sweep_plans(
+    graph_builder: Callable[[ParallelPlan], ComputationGraph],
+    hardware: HardwareSpec,
+    plans: Iterable[ParallelPlan],
+    noc_mode: str = "macro",
+    memory_cap: Optional[float] = None,
+) -> List[PlanResult]:
+    """Evaluate many parallelism strategies; returns results sorted by
+    throughput (best first). Plans whose per-tile footprint exceeds
+    ``memory_cap`` are dropped (the paper's capacity feasibility check)."""
+    out: List[PlanResult] = []
+    for plan in plans:
+        graph = graph_builder(plan)
+        res = simulate(graph, hardware, plan, noc_mode=noc_mode)
+        if memory_cap is not None:
+            worst = max(m.total for m in res.stage_memory)
+            if worst > memory_cap:
+                continue
+        out.append(PlanResult(plan=plan, result=res))
+    out.sort(key=lambda r: -r.throughput)
+    return out

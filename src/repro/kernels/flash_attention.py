@@ -1,0 +1,135 @@
+"""Flash attention (causal GQA, optional sliding window) as a Pallas TPU
+kernel.
+
+TPU-native adaptation (DESIGN.md §3): online-softmax accumulation in fp32
+VMEM scratch, MXU-aligned tiles (block_q x block_k multiples of 128 on
+the lane dim), grid (batch, q_head, q_block, kv_block) with the kv_block
+axis innermost-sequential so the (m, l, acc) carry lives in scratch
+across grid steps. GQA is expressed in the K/V index_map (q head ->
+kv head = h * n_kv // n_heads) so KV tiles are fetched once per group —
+no repeated-KV materialisation in HBM.
+
+Fully-masked tiles are skipped via ``pl.when`` (causal upper triangle and
+tiles beyond the sliding window), which is where the sub-quadratic win
+for window archs (hymba) comes from.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  block_q: int, block_k: int, seq_len: int, causal: bool,
+                  window: int, num_k_blocks: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+
+    # tile-level skip: strictly-future tiles (causal) / expired tiles (window)
+    live = True
+    if causal:
+        live = k_start <= q_start + block_q - 1
+    if window > 0:
+        live = jnp.logical_and(live, k_start + block_k - 1 > q_start - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)          # [bq, hd]
+        k = k_ref[0, 0].astype(jnp.float32)          # [bk, hd]
+        v = v_ref[0, 0].astype(jnp.float32)          # [bk, hd]
+        scale = q.shape[-1] ** -0.5
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # [bq,bk]
+
+        rows = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        cols = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = jnp.ones((block_q, block_k), dtype=bool)
+        if causal:
+            mask &= cols <= rows
+        if window > 0:
+            mask &= cols > rows - window
+        mask &= cols < seq_len
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                          # [bq, 1]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                       # [bq, bk]
+        correction = jnp.exp(m_prev - m_new)         # [bq, 1]
+        l_scr[...] = l_scr[...] * correction + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * correction + jax.lax.dot(p, v)
+        m_scr[...] = m_new
+
+    @pl.when(ik == num_k_blocks - 1)
+    def _finalize():
+        l = l_scr[...]
+        safe = jnp.where(l == 0.0, 1.0, l)           # fully-masked rows -> 0
+        o_ref[0, 0] = (acc_scr[...] / safe).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,              # [B, nh, S, hd]
+    k: jax.Array,              # [B, nkv, S, hd]
+    v: jax.Array,              # [B, nkv, S, hd]
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, nh, S, hd = q.shape
+    nkv = k.shape[1]
+    assert nh % nkv == 0, (nh, nkv)
+
+    # pad S to tile multiples (mask handles the tail)
+    blk = max(block_q, block_k)
+    S_pad = math.ceil(S / blk) * blk
+    if S_pad != S:
+        pad = ((0, 0), (0, 0), (0, S_pad - S), (0, 0))
+        q, k, v = (jnp.pad(t, pad) for t in (q, k, v))
+
+    nq = S_pad // block_q
+    nk = S_pad // block_k
+
+    kernel = functools.partial(
+        _flash_kernel, block_q=block_q, block_k=block_k, seq_len=S,
+        causal=causal, window=window, num_k_blocks=nk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, nh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, iq, ik: (b, h * nkv // nh, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, iq, ik: (b, h * nkv // nh, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd), lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, nh, S_pad, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running denom l
+            pltpu.VMEM((block_q, hd), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :S]

@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel (the per-kernel allclose
+reference demanded by the test suite). Layouts match the kernel entry
+points exactly (head-major attention, [T,H] rmsnorm)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    """q: [B,nh,S,hd]; k,v: [B,nkv,S,hd] -> [B,nh,S,hd]. Naive softmax."""
+    B, nh, S, hd = q.shape
+    nkv = k.shape[1]
+    g = nh // nkv
+    qg = q.reshape(B, nkv, g, S, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bkgqh,bksh->bkgqs", qg, kf) * hd ** -0.5
+    rows = jnp.arange(S)[:, None]
+    cols = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), dtype=bool)
+    if causal:
+        mask &= cols <= rows
+    if window > 0:
+        mask &= cols > rows - window
+    scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)
+    out = jnp.einsum("bkgqs,bksh->bkgqh", probs, vf)
+    return out.reshape(B, nh, S, hd).astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, A, Bm, Cm):
+    """Sequential SSD recurrence. x: [B,nh,S,hp]; dt: [B,nh,S]; A: [nh];
+    Bm/Cm: [B,S,N] -> [B,nh,S,hp]. O(S) scan, fp32 state."""
+    B, nh, S, hp = x.shape
+    N = Bm.shape[-1]
+    f32 = jnp.float32
+
+    def step(state, inp):
+        x_t, dt_t, b_t, c_t = inp                     # [B,nh,hp],[B,nh],[B,N],[B,N]
+        dec = jnp.exp(dt_t.astype(f32) * A.astype(f32))
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dt_t.astype(f32), x_t.astype(f32),
+                         b_t.astype(f32))
+        state = state * dec[..., None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", c_t.astype(f32), state)
+        return state, y
+
+    init = jnp.zeros((B, nh, hp, N), f32)
+    xs = (jnp.moveaxis(x, 2, 0), jnp.moveaxis(dt, 2, 0),
+          jnp.moveaxis(Bm, 1, 0), jnp.moveaxis(Cm, 1, 0))
+    _, ys = jax.lax.scan(step, init, xs)
+    return jnp.moveaxis(ys, 0, 2).astype(x.dtype)
+
+
+def rmsnorm_ref(x, w, eps=1e-5):
+    """x: [T,H]; w: [H]."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)[None, :]).astype(x.dtype)

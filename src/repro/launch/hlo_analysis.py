@@ -1,0 +1,68 @@
+"""HLO-text analysis: collective-communication byte accounting.
+
+``collective_bytes(text)`` sums the sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute
+instruction, per kind. XLA:CPU's optimized-HLO printer omits inline
+operand shapes, so we use the **result** shape — i.e. bytes *received*
+per device per op (all-gather: the gathered tensor; all-reduce: the
+reduced tensor; all-to-all: the exchanged total) on the post-GSPMD
+per-device program.
+
+The dry-run calls this on *unrolled probe* compiles (no while loops), so
+no trip-count correction is needed; the linear (L, G) model in dryrun.py
+extrapolates to the full depth/microbatch count.
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from typing import Dict, Tuple
+
+__all__ = ["collective_bytes", "DTYPE_BYTES"]
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+    "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# "%name = <result shapes> <opcode>(operands...)" — result shapes live
+# between '=' and the opcode keyword (XLA:CPU omits inline operand shapes).
+_OP_RE = re.compile(
+    r"=\s*(?P<result>[^=]*?)\s?"
+    r"(?P<kind>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?P<suffix>-start|-done)?\(")
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-kind result bytes (per device). '-done' ops are skipped so
+    async start/done pairs are counted once."""
+    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    out["total"] = 0.0
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        if m.group("suffix") == "-done":
+            continue
+        kind = m.group("kind")
+        nbytes = sum(_shape_bytes(d, s)
+                     for d, s in _SHAPE_RE.findall(m.group("result")))
+        out[kind] += nbytes
+        out["total"] += nbytes
+    return out

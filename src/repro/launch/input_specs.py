@@ -1,0 +1,58 @@
+"""ShapeDtypeStruct stand-ins for every model input (spec: MULTI-POD
+DRY-RUN step 2) — weak-type-correct, shardable, no device allocation.
+
+``train``   -> {tokens|embeds: [G, B_mb, S(, H)], labels: [G, B_mb, S]}
+``prefill`` -> {tokens|embeds: [B, S(, H)]}
+``decode``  -> (cache pytree, tokens [B] | embeds [B, H], pos scalar)
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeConfig
+from ..models.lm import RunCfg, init_cache
+
+__all__ = ["train_input_specs", "prefill_input_specs", "decode_input_specs",
+           "cache_specs"]
+
+SDS = jax.ShapeDtypeStruct
+
+
+def train_input_specs(arch: ArchConfig, shape: ShapeConfig,
+                      num_microbatches: int) -> Dict[str, Any]:
+    G = num_microbatches
+    B = shape.global_batch // G
+    S = shape.seq_len
+    batch: Dict[str, Any] = {"labels": SDS((G, B, S), jnp.int32)}
+    if arch.embeds_input:
+        batch["embeds"] = SDS((G, B, S, arch.d_model), jnp.bfloat16)
+    else:
+        batch["tokens"] = SDS((G, B, S), jnp.int32)
+    return batch
+
+
+def prefill_input_specs(arch: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    if arch.embeds_input:
+        return {"embeds": SDS((B, S, arch.d_model), jnp.bfloat16)}
+    return {"tokens": SDS((B, S), jnp.int32)}
+
+
+def cache_specs(arch: ArchConfig, batch: int, max_len: int, cfg: RunCfg) -> Any:
+    return jax.eval_shape(lambda: init_cache(arch, batch, max_len, cfg))
+
+
+def decode_input_specs(arch: ArchConfig, shape: ShapeConfig,
+                       cfg: RunCfg) -> Tuple[Any, Any, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    cache = cache_specs(arch, B, S, cfg)
+    if arch.embeds_input:
+        tokens = SDS((B, arch.d_model), jnp.bfloat16)
+    else:
+        tokens = SDS((B,), jnp.int32)
+    pos = SDS((), jnp.int32)
+    return cache, tokens, pos

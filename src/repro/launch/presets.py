@@ -1,0 +1,68 @@
+"""Per-(arch x shape) launch presets: microbatching, precision policy,
+sequence parallelism — the memory-fit levers of DESIGN.md §6.
+
+Defaults: fp32 params + fp32 Adam moments, fp32 grad accumulation,
+G microbatches such that each data-parallel row sees 1 sequence per
+microbatch. Heavy archs (nemotron-4-340b) switch moments + grad
+accumulation to bf16 and enable sequence-parallel residuals.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeConfig
+from ..models.lm import RunCfg
+from ..train.optim import OptimizerCfg
+from ..train.step import TrainCfg
+
+__all__ = ["train_cfg_for", "run_cfg_for", "microbatches_for"]
+
+# archs whose per-chip footprint needs the bf16-state policy
+_BF16_STATE = {"nemotron-4-340b"}
+# sequence-parallel residuals for the memory/collective-bound archs.
+# §Perf iteration 5 tried default-on: REFUTED for small archs — XLA:CPU
+# lowers reduce-scatter as all-reduce+slice, so the SP pattern is charged
+# the full AR volume *plus* the seq all-gathers (on TPU the RS is real and
+# SP wins); keep it selective and note the backend artifact.
+_SEQ_SHARD_ALL = False
+_SEQ_SHARD = {"nemotron-4-340b", "llava-next-34b", "dbrx-132b"}
+
+
+def microbatches_for(arch: ArchConfig, shape: ShapeConfig, dp_total: int) -> int:
+    if shape.kind != "train":
+        return 1
+    g = max(1, shape.global_batch // dp_total)
+    return g
+
+
+def run_cfg_for(arch: ArchConfig, shape: ShapeConfig) -> RunCfg:
+    # Perf iteration 1 (EXPERIMENTS.md §Perf): serving keeps bf16 params
+    # (fp32 masters are a training-only need) and 512-token query chunks
+    # at 32k context (halves the per-chunk fp32 score buffers).
+    train = shape.kind == "train"
+    q_chunk = (1024 if train else 512) if shape.seq_len > 2048 else 0
+    return RunCfg(
+        compute_dtype=jnp.bfloat16,
+        param_dtype=jnp.float32 if train else jnp.bfloat16,
+        q_chunk=q_chunk,
+        ssd_chunk=256,
+        remat=train,
+        scan_layers=True,
+        seq_shard=_SEQ_SHARD_ALL or arch.name in _SEQ_SHARD,
+    )
+
+
+def train_cfg_for(arch: ArchConfig, shape: ShapeConfig, dp_total: int) -> TrainCfg:
+    run = run_cfg_for(arch, shape)
+    bf16_state = arch.name in _BF16_STATE
+    opt = OptimizerCfg(moment_dtype=jnp.bfloat16 if bf16_state else jnp.float32)
+    return TrainCfg(
+        run=run,
+        opt=opt,
+        num_microbatches=microbatches_for(arch, shape, dp_total),
+        grad_accum_dtype=jnp.bfloat16 if bf16_state else jnp.float32,
+    )

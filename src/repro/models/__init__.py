@@ -1,0 +1,6 @@
+"""JAX model zoo for the assigned architectures (see repro.configs)."""
+
+from .lm import RunCfg, decode_step, forward, init_cache, init_params, loss_fn, param_count
+
+__all__ = ["RunCfg", "decode_step", "forward", "init_cache", "init_params",
+           "loss_fn", "param_count"]

@@ -1,0 +1,11 @@
+"""Distributed runtime: sharding rules, pipeline stage executor,
+gradient compression."""
+
+from .sharding import (
+    ShardingPlanner,
+    batch_pspec,
+    cache_pspecs,
+    param_pspecs,
+)
+
+__all__ = ["ShardingPlanner", "batch_pspec", "cache_pspecs", "param_pspecs"]

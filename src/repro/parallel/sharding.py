@@ -1,0 +1,188 @@
+"""Sharding rules: FSDP(data) x TP(model) x optional DP(pod), per leaf.
+
+The scheme (DESIGN.md §5):
+
+* every weight matrix is sharded on one dim by ``model`` (Megatron TP:
+  head/ffn/expert dims) and on another by ``data`` (ZeRO-3/FSDP; XLA
+  GSPMD inserts the per-layer all-gathers inside the layer scan and
+  reduce-scatters the gradients),
+* optimizer state mirrors the parameter shardings (ZeRO-1/2 for free),
+* activations: batch over ``(pod, data)``; with sequence parallelism the
+  residual stream is additionally sharded over ``model`` on the sequence
+  dim between blocks (knob: ``seq_shard`` — the nemotron-340B memory-fit
+  lever),
+* KV caches: batch over ``data``, sequence over ``model`` (decode-time
+  context parallelism); SSM states: head dim over ``model``.
+
+pjit *argument* shardings must divide evenly, so every rule is a
+fallback chain evaluated against the actual leaf shape + mesh: e.g.
+granite-moe's 40 experts don't divide the 16-way model axis, so expert
+weights fall back to intra-expert TP (F-dim over model); 49155-token
+vocabs fall back to replicated-vocab embeddings; batch-1 decode drops
+the data axis. Chosen fallbacks are deterministic and recorded in
+EXPERIMENTS.md §Dry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig
+
+__all__ = ["param_pspecs", "batch_pspec", "cache_pspecs", "ShardingPlanner"]
+
+FSDP = "data"
+TP = "model"
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        out = 1
+        for a in axis:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axis]
+
+
+def fit_spec(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> Optional[P]:
+    """Return the spec if every sharded dim divides evenly, else None."""
+    dims = list(spec) + [None] * (len(shape) - len(spec))
+    for d, axis in zip(shape, dims):
+        if axis is not None and d % _axis_size(mesh, axis) != 0:
+            return None
+    return P(*dims)
+
+
+def fit_first(candidates, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """First candidate that divides; last resort drops offending axes."""
+    for cand in candidates:
+        ok = fit_spec(cand, shape, mesh)
+        if ok is not None:
+            return ok
+    base = list(candidates[0]) + [None] * (len(shape) - len(candidates[0]))
+    out = [a if a is not None and d % _axis_size(mesh, a) == 0 else None
+           for d, a in zip(shape, base)]
+    return P(*out)
+
+
+def _leaf_candidates(path: Tuple[str, ...], ndim: int):
+    """Ordered sharding rules by (parent, name) — see module docstring."""
+    name = path[-1]
+    parent = path[-2] if len(path) > 1 else ""
+
+    if name == "embed":      # [V, H]
+        return [P(TP, FSDP), P(None, FSDP)]
+    if name == "lm_head":    # [H, V]
+        return [P(FSDP, TP), P(FSDP, None)]
+    if name == "final_norm":
+        return [P(None)]
+    if name in ("norm1", "norm2"):
+        return [P(None, None)]
+
+    if parent == "attn":
+        if name in ("wq", "wk", "wv"):   # [L, H, heads*hd]
+            return [P(None, FSDP, TP), P(None, FSDP, None)]
+        if name == "wo":                 # [L, heads*hd, H]
+            return [P(None, TP, FSDP), P(None, None, FSDP)]
+    if parent == "mlp":
+        if name in ("wi", "wg"):         # [L, H, F]
+            return [P(None, FSDP, TP), P(None, FSDP, None)]
+        if name == "wo":                 # [L, F, H]
+            return [P(None, TP, FSDP), P(None, None, FSDP)]
+    if parent == "moe":
+        if name == "router":             # [L, H, E]
+            return [P(None, FSDP, None)]
+        if name in ("wi", "wg"):         # [L, E, H, F]: EP, else intra-expert TP
+            return [P(None, TP, FSDP, None), P(None, None, FSDP, TP),
+                    P(None, None, FSDP, None)]
+        if name == "wo":                 # [L, E, F, H]
+            return [P(None, TP, None, FSDP), P(None, None, TP, FSDP),
+                    P(None, None, None, FSDP)]
+    if parent == "ssm":
+        if name == "in_proj":            # [L, H, d_in_proj]
+            return [P(None, FSDP, TP), P(None, FSDP, None)]
+        if name == "out_proj":           # [L, d_inner, H]
+            return [P(None, TP, FSDP), P(None, None, FSDP)]
+        if name == "conv_w":             # [L, K, conv_dim]
+            return [P(None, None, TP), P(None, None, None)]
+        if name in ("conv_b", "ssm_norm"):
+            return [P(None, TP), P(None, None)]
+        if name in ("A_log", "D", "dt_bias"):
+            return [P(None, None)]
+    return [P(*([None] * ndim))]
+
+
+def param_pspecs(params_or_shapes, mesh: Mesh) -> Any:
+    """PartitionSpec pytree matching a params pytree (works on shapes);
+    every spec is divisibility-checked against the mesh."""
+    def rule(kp, leaf):
+        path = tuple(getattr(k, "key", str(k)) for k in kp)
+        cands = _leaf_candidates(path, len(leaf.shape))
+        return fit_first(cands, tuple(leaf.shape), mesh)
+    return jax.tree_util.tree_map_with_path(rule, params_or_shapes)
+
+
+def batch_pspec(mesh: Mesh, leading_scan_dim: bool = False) -> P:
+    """Batch sharding: batch dim over (pod?, data)."""
+    axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    if leading_scan_dim:                      # [n_microbatch, B, S]
+        return P(None, axes)
+    return P(axes)
+
+
+def cache_pspecs(arch: ArchConfig, cache, mesh: Mesh) -> Any:
+    """Decode-cache shardings: KV [L,B,S,nkv,hd] -> batch over data,
+    sequence over model (context-parallel decode); SSM state
+    [L,B,nh,hp,N] -> heads (or head-dim) over model. Batch-1 decode
+    (long_500k) drops the data axis via the fallback chains."""
+    cands = {
+        "k": [P(None, FSDP, TP, None, None), P(None, None, TP, None, None),
+              P(None, None, None, None, None)],
+        "v": [P(None, FSDP, TP, None, None), P(None, None, TP, None, None),
+              P(None, None, None, None, None)],
+        "conv": [P(None, FSDP, None, TP), P(None, None, None, TP),
+                 P(None, None, None, None)],
+        "ssm": [P(None, FSDP, TP, None, None), P(None, FSDP, None, TP, None),
+                P(None, None, TP, None, None), P(None, None, None, TP, None),
+                P(None, None, None, None, None)],
+    }
+    return {k: fit_first(cands[k], tuple(cache[k].shape), mesh) for k in cache}
+
+
+@dataclass
+class ShardingPlanner:
+    """Bundles mesh + per-tree shardings for one launch configuration."""
+
+    mesh: Mesh
+    arch: ArchConfig
+
+    def named(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    def params(self, params_or_shapes) -> Any:
+        return jax.tree.map(self.named, param_pspecs(params_or_shapes, self.mesh),
+                            is_leaf=lambda x: isinstance(x, P))
+
+    def opt_state(self, params_or_shapes) -> Any:
+        """Optimizer state shardings: moments mirror the parameter
+        shardings (ZeRO: 256-way sharded states), scalars replicated.
+        Matches repro.train.optim's {"m": tree, "v": tree, "step": ()}."""
+        p = self.params(params_or_shapes)
+        return {"m": p, "v": p, "step": self.named(P())}
+
+    def batch(self, leading_scan_dim: bool = False, example_shape=None) -> NamedSharding:
+        spec = batch_pspec(self.mesh, leading_scan_dim)
+        if example_shape is not None:
+            spec = fit_first([spec], tuple(example_shape), self.mesh)
+        return self.named(spec)
+
+    def cache(self, cache) -> Any:
+        specs = cache_pspecs(self.arch, cache, self.mesh)
+        return jax.tree.map(self.named, specs, is_leaf=lambda x: isinstance(x, P))

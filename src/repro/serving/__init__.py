@@ -1,0 +1,5 @@
+"""Serving runtime: batched prefill + decode with sharded KV/SSM caches."""
+
+from .serve import make_prefill_step, make_serve_step, greedy_generate
+
+__all__ = ["make_prefill_step", "make_serve_step", "greedy_generate"]

@@ -1,0 +1,116 @@
+"""serve_step / prefill factories.
+
+Decode sharding (DESIGN.md §5): KV cache batch over ``data``, sequence
+over ``model`` (decode-time context parallelism — softmax over the
+sharded KV span turns into small partial-stat collectives); SSM states
+shard their head dim over ``model``. Parameters keep the FSDP x TP
+layout: for 340B-class serving this is weight-streaming (per-layer
+all-gather inside the scan), the Cerebras-style regime PALM cites [41],
+mapped to TPU.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from ..models.lm import RunCfg, decode_step, forward, init_cache
+from ..parallel.sharding import ShardingPlanner
+
+__all__ = ["make_serve_step", "make_prefill_step", "greedy_generate"]
+
+
+def _mesh_cfg(cfg: RunCfg, mesh: Optional[Mesh]) -> RunCfg:
+    if mesh is None:
+        return cfg
+    axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    return dataclasses.replace(cfg, mesh=mesh, batch_axes=axes)
+
+
+def make_serve_step(arch: ArchConfig, cfg: RunCfg, mesh: Optional[Mesh] = None):
+    """One greedy decode step: (params, cache, tokens|embeds, pos) ->
+    (next_tokens [B], logits [B,V], new_cache)."""
+    cfg = _mesh_cfg(cfg, mesh)
+
+    def serve_step(params, cache, tokens, pos):
+        kwargs = {"embeds": tokens} if arch.embeds_input else {"tokens": tokens}
+        logits, new_cache = decode_step(arch, params, cache, pos=pos, cfg=cfg, **kwargs)
+        next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tokens, logits, new_cache
+
+    if mesh is None:
+        return jax.jit(serve_step, donate_argnums=(1,))
+
+    planner = ShardingPlanner(mesh, arch)
+
+    def jit_with(params_shapes, cache_shapes, batch_size: int = 0):
+        from ..parallel.sharding import fit_first
+        p_sh = planner.params(params_shapes)
+        c_sh = planner.cache(cache_shapes)
+        b = batch_size or next(iter(jax.tree.leaves(cache_shapes))).shape[1]
+        t_spec = fit_first([P(("data",))], (b,), mesh)  # replicate if B=1
+        t_sh = planner.named(t_spec)
+        return jax.jit(serve_step,
+                       in_shardings=(p_sh, c_sh, t_sh, planner.named(P())),
+                       out_shardings=(t_sh, None, c_sh),
+                       donate_argnums=(1,))
+
+    serve_step.jit_with = jit_with
+    serve_step.planner = planner
+    return serve_step
+
+
+def make_prefill_step(arch: ArchConfig, cfg: RunCfg, mesh: Optional[Mesh] = None):
+    """Batched prefill: full forward over the prompt (logits only —
+    the dry-run's inference-prefill cell)."""
+    cfg = _mesh_cfg(cfg, mesh)
+
+    def prefill(params, batch):
+        # causal archs: next-token logits only (a full [B,S,V] would be
+        # petabyte-scale for 256k vocabs at 32k context)
+        positions = "last" if arch.causal else "all"
+        logits, _ = forward(arch, params,
+                            tokens=batch.get("tokens"),
+                            embeds=batch.get("embeds"), cfg=cfg,
+                            logits_positions=positions)
+        return logits
+
+    if mesh is None:
+        return jax.jit(prefill)
+
+    planner = ShardingPlanner(mesh, arch)
+
+    def jit_with(params_shapes, batch_shapes):
+        p_sh = planner.params(params_shapes)
+        b_sh = jax.tree.map(
+            lambda leaf: planner.batch(example_shape=leaf.shape), batch_shapes)
+        return jax.jit(prefill, in_shardings=(p_sh, b_sh), out_shardings=None)
+
+    prefill.jit_with = jit_with
+    return prefill
+
+
+def greedy_generate(arch: ArchConfig, params, prompt_tokens: jax.Array,
+                    max_new: int, cfg: RunCfg = RunCfg()):
+    """Reference end-to-end generation loop (CPU-scale; used by examples
+    and tests): prefill token-by-token then decode ``max_new`` tokens."""
+    B, S0 = prompt_tokens.shape
+    cache = init_cache(arch, B, S0 + max_new, cfg)
+    step = jax.jit(lambda p, c, t, i: decode_step(arch, p, c, tokens=t, pos=i, cfg=cfg))
+    tok = prompt_tokens[:, 0]
+    out = []
+    logits = None
+    for i in range(S0 + max_new - 1):
+        logits, cache = step(params, cache, tok, jnp.int32(i))
+        if i + 1 < S0:
+            tok = prompt_tokens[:, i + 1]
+        else:
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            out.append(tok)
+    return jnp.stack(out, axis=1)

@@ -1,0 +1,8 @@
+"""Training substrate: optimizer, train step, data pipeline, checkpointing,
+fault tolerance."""
+
+from .optim import OptimizerCfg, apply_optimizer, init_opt_state, lr_at
+from .step import TrainCfg, init_train_state, make_eval_step, make_train_step
+
+__all__ = ["OptimizerCfg", "apply_optimizer", "init_opt_state", "lr_at",
+           "TrainCfg", "init_train_state", "make_eval_step", "make_train_step"]

@@ -1,0 +1,138 @@
+"""Step-addressed checkpointing with atomic writes and restart semantics.
+
+Layout: ``<dir>/step_<N>/arrays.npz`` + ``manifest.json`` (tree structure,
+step, data-pipeline cursor). Writes go to ``step_<N>.tmp`` then rename —
+a crash mid-save never corrupts the latest checkpoint. ``keep_last``
+prunes old steps. ``restore_latest`` is what a restarted worker calls.
+
+On a real pod each host writes its process-local shards
+(``jax.experimental.multihost_utils``); on this single-process container
+arrays are saved whole. ``elastic.py`` reshards a checkpoint onto a
+different mesh shape.
+"""
+
+from __future__ import annotations
+
+import json
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "restore_latest",
+           "latest_step", "CheckpointManager"]
+
+_SEP = "/"
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(ckpt_dir, step: int, state: Dict[str, Any],
+                    extra: Optional[Dict] = None, keep_last: int = 3) -> Path:
+    """state: dict of pytrees (e.g. {"params": ..., "opt_state": ...})."""
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    final = ckpt_dir / f"step_{step:08d}"
+    tmp = ckpt_dir / f"step_{step:08d}.tmp"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+    arrays = {}
+    manifest = {"step": step, "trees": {}, "extra": extra or {}}
+    for name, tree in state.items():
+        flat = _flatten(tree)
+        manifest["trees"][name] = {
+            k: {"shape": list(v.shape), "dtype": str(v.dtype)} for k, v in flat.items()}
+        for k, v in flat.items():
+            arrays[f"{name}::{k}"] = v
+    np.savez(tmp / "arrays.npz", **arrays)
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)                      # atomic publish
+    # prune
+    steps = sorted(p for p in ckpt_dir.glob("step_????????") if p.is_dir())
+    for old in steps[:-keep_last]:
+        shutil.rmtree(old)
+    return final
+
+
+def latest_step(ckpt_dir) -> Optional[int]:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = sorted(int(p.name.split("_")[1]) for p in ckpt_dir.glob("step_????????"))
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(ckpt_dir, step: int, like: Dict[str, Any],
+                       shardings: Optional[Dict[str, Any]] = None
+                       ) -> Tuple[Dict[str, Any], Dict]:
+    """Restore into the structure of ``like`` (a dict of pytrees of arrays
+    or ShapeDtypeStructs). ``shardings`` optionally maps tree names to
+    sharding pytrees for device placement on a mesh."""
+    path = Path(ckpt_dir) / f"step_{step:08d}"
+    manifest = json.loads((path / "manifest.json").read_text())
+    data = np.load(path / "arrays.npz")
+    state = {}
+    for name, tree in like.items():
+        leaves_paths, treedef = jax.tree_util.tree_flatten_with_path(tree)
+        new_leaves = []
+        for kp, leaf in leaves_paths:
+            key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+            arr = data[f"{name}::{key}"]
+            if shardings is not None and name in shardings:
+                sh_leaf = jax.tree_util.tree_flatten(shardings[name])[0][len(new_leaves)]
+                arr = jax.device_put(arr, sh_leaf)
+            new_leaves.append(arr)
+        state[name] = jax.tree_util.tree_unflatten(treedef, new_leaves)
+    return state, manifest["extra"]
+
+
+def restore_latest(ckpt_dir, like, shardings=None):
+    step = latest_step(ckpt_dir)
+    if step is None:
+        return None, None, None
+    state, extra = restore_checkpoint(ckpt_dir, step, like, shardings)
+    return step, state, extra
+
+
+class CheckpointManager:
+    """Periodic async checkpointing: the save runs on a background thread
+    so the train loop is not blocked (fault-tolerance requirement)."""
+
+    def __init__(self, ckpt_dir, every_steps: int = 100, keep_last: int = 3):
+        self.dir = Path(ckpt_dir)
+        self.every = every_steps
+        self.keep_last = keep_last
+        self._pending: Optional[threading.Thread] = None
+
+    def maybe_save(self, step: int, state: Dict[str, Any], extra=None,
+                   block: bool = False):
+        if step % self.every != 0:
+            return False
+        self.wait()
+        # materialise on host before handing to the thread
+        host_state = jax.tree.map(lambda x: np.asarray(x), state)
+        self._pending = threading.Thread(
+            target=save_checkpoint,
+            args=(self.dir, step, host_state),
+            kwargs={"extra": extra, "keep_last": self.keep_last})
+        self._pending.start()
+        if block:
+            self.wait()
+        return True
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None

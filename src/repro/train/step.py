@@ -1,0 +1,142 @@
+"""Distributed train_step / eval_step factories.
+
+``make_train_step`` returns a jit-compiled function with full sharding
+annotations: FSDP x TP parameter/optimizer shardings, batch over
+(pod?, data), microbatch gradient accumulation via ``lax.scan`` (bounds
+activation memory — the executable analogue of PALM's micro-batching,
+Fig. 3), donated params/opt buffers, and optional cross-pod gradient
+compression.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from ..models.lm import RunCfg, forward, init_params, loss_fn
+from ..parallel.sharding import ShardingPlanner, param_pspecs
+from .optim import OptimizerCfg, apply_optimizer, init_opt_state
+
+__all__ = ["TrainCfg", "make_train_step", "make_eval_step", "init_train_state"]
+
+
+@dataclass(frozen=True)
+class TrainCfg:
+    run: RunCfg = RunCfg()
+    opt: OptimizerCfg = OptimizerCfg()
+    num_microbatches: int = 1
+    grad_accum_dtype: Any = jnp.float32    # bf16 = 340B memory policy
+
+
+def _with_mesh_cfg(cfg: TrainCfg, mesh: Optional[Mesh]) -> TrainCfg:
+    if mesh is None:
+        return cfg
+    axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    return dataclasses.replace(cfg, run=dataclasses.replace(
+        cfg.run, mesh=mesh, batch_axes=axes))
+
+
+def init_train_state(arch: ArchConfig, cfg: TrainCfg, key) -> Tuple[Any, Any]:
+    params = init_params(arch, key, cfg.run)
+    opt_state = init_opt_state(cfg.opt, params)
+    return params, opt_state
+
+
+def make_train_step(
+    arch: ArchConfig,
+    cfg: TrainCfg,
+    mesh: Optional[Mesh] = None,
+) -> Callable:
+    """Build the jitted train step.
+
+    Signature: ``train_step(params, opt_state, batch) ->
+    (params, opt_state, metrics)`` where batch leaves carry a leading
+    microbatch axis [G, B_mb, ...] (G == cfg.num_microbatches).
+    """
+    cfg = _with_mesh_cfg(cfg, mesh)
+    G = cfg.num_microbatches
+
+    def train_step(params, opt_state, batch):
+        def mb_loss(p, mb):
+            return loss_fn(arch, p, mb, cfg.run)
+
+        grad_fn = jax.value_and_grad(mb_loss, has_aux=True)
+
+        def shard_like_params(g):
+            # per-microbatch ZeRO-2: pin each microbatch's grads to the
+            # parameter shardings so XLA emits reduce-scatters, not
+            # all-reduces (EXPERIMENTS.md §Perf iteration 3)
+            if mesh is None:
+                return g
+            specs = param_pspecs(params, mesh)
+            return jax.tree.map(
+                lambda t, s: lax.with_sharding_constraint(t, NamedSharding(mesh, s)),
+                g, specs, is_leaf=lambda x: isinstance(x, P))
+
+        if G == 1:
+            mb = jax.tree.map(lambda t: t[0], batch)
+            (loss, metrics), grads = grad_fn(params, mb)
+        else:
+            def acc(carry, mb):
+                g_acc, l_acc = carry
+                (l, m), g = grad_fn(params, mb)
+                g = shard_like_params(g)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(cfg.grad_accum_dtype), g_acc, g)
+                return (g_acc, l_acc + l / G), m
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, cfg.grad_accum_dtype), params)
+            zeros = shard_like_params(zeros)
+            (grads, loss), metrics = lax.scan(acc, (zeros, 0.0), batch)
+            grads = jax.tree.map(lambda g: g / G, grads)
+            metrics = jax.tree.map(lambda m: m.mean(), metrics)
+
+        if mesh is not None:  # keep grads on the param shardings (ZeRO-2)
+            specs = param_pspecs(params, mesh)
+            grads = jax.tree.map(
+                lambda g, s: lax.with_sharding_constraint(g, NamedSharding(mesh, s)),
+                grads, specs, is_leaf=lambda x: isinstance(x, P))
+
+        new_params, new_opt, om = apply_optimizer(cfg.opt, params, grads, opt_state)
+        metrics = {**metrics, **om, "loss": loss if G > 1 else metrics["loss"]}
+        return new_params, new_opt, metrics
+
+    if mesh is None:
+        return jax.jit(train_step, donate_argnums=(0, 1))
+
+    planner = ShardingPlanner(mesh, arch)
+
+    def jit_with(params_shapes, batch_shapes):
+        p_sh = planner.params(params_shapes)
+        o_sh = planner.opt_state(params_shapes)
+        batch_sh = jax.tree.map(
+            lambda leaf: planner.batch(leading_scan_dim=True,
+                                       example_shape=leaf.shape), batch_shapes)
+        return jax.jit(
+            train_step,
+            in_shardings=(p_sh, o_sh, batch_sh),
+            out_shardings=(p_sh, o_sh, None),
+            donate_argnums=(0, 1),
+        )
+
+    train_step.jit_with = jit_with        # attach builder for launchers
+    train_step.planner = planner
+    return train_step
+
+
+def make_eval_step(arch: ArchConfig, cfg: TrainCfg, mesh: Optional[Mesh] = None):
+    cfg = _with_mesh_cfg(cfg, mesh)
+
+    def eval_step(params, batch):
+        loss, metrics = loss_fn(arch, params, batch, cfg.run)
+        return metrics
+
+    return jax.jit(eval_step)

@@ -1,0 +1,5 @@
+import sys
+from pathlib import Path
+
+# make `proptools` importable from test modules
+sys.path.insert(0, str(Path(__file__).resolve().parent))

@@ -1,0 +1,23 @@
+"""Property-test helper: `hypothesis` is unavailable offline, so we use
+seeded numpy draws over declared strategies (see DESIGN.md §8)."""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+
+def given(n_cases: int = 25, seed: int = 0):
+    """Decorator: call the test with (rng, case_index) n_cases times.
+    (Plain wrapper — no functools.wraps — so pytest does not mistake the
+    inner rng/case parameters for fixtures.)"""
+    def deco(fn):
+        def wrapper():
+            for i in range(n_cases):
+                rng = np.random.default_rng(seed * 10_000 + i)
+                fn(rng=rng, case=i)
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco

@@ -1,0 +1,137 @@
+"""DES kernel semantics: ordering, resources, conditions, determinism."""
+
+import pytest
+
+from repro.core.events import AllOf, AnyOf, Environment, PriorityResource, Resource
+from proptools import given
+
+
+def test_timeout_ordering():
+    env = Environment()
+    log = []
+
+    def proc(delay, tag):
+        yield env.timeout(delay)
+        log.append((env.now, tag))
+
+    env.process(proc(3, "c"))
+    env.process(proc(1, "a"))
+    env.process(proc(2, "b"))
+    env.run()
+    assert log == [(1, "a"), (2, "b"), (3, "c")]
+
+
+def test_same_time_fifo_determinism():
+    env = Environment()
+    log = []
+
+    def proc(tag):
+        yield env.timeout(1.0)
+        log.append(tag)
+
+    for t in "abcde":
+        env.process(proc(t))
+    env.run()
+    assert log == list("abcde")
+
+
+def test_resource_serializes():
+    env = Environment()
+    res = Resource(env, capacity=1)
+    spans = []
+
+    def user(tag, hold):
+        req = res.request()
+        yield req
+        start = env.now
+        yield env.timeout(hold)
+        res.release(req)
+        spans.append((tag, start, env.now))
+
+    env.process(user("a", 2.0))
+    env.process(user("b", 3.0))
+    env.run()
+    assert spans == [("a", 0.0, 2.0), ("b", 2.0, 5.0)]
+    assert res.utilization() == pytest.approx(1.0)
+
+
+def test_priority_resource_orders_waiters():
+    env = Environment()
+    res = PriorityResource(env, capacity=1)
+    order = []
+
+    def user(tag, prio):
+        req = res.request(priority=prio)
+        yield req
+        order.append(tag)
+        yield env.timeout(1.0)
+        res.release(req)
+
+    def spawn():
+        first = res.request()
+        yield first
+        env.process(user("fd", 1))
+        env.process(user("bd", 0))     # 1F1B: BD beats queued FD
+        yield env.timeout(1.0)
+        res.release(first)
+
+    env.process(spawn())
+    env.run()
+    assert order == ["bd", "fd"]
+
+
+def test_all_of_any_of():
+    env = Environment()
+    out = {}
+
+    def proc():
+        e1, e2 = env.timeout(1.0, value="x"), env.timeout(5.0, value="y")
+        got = yield env.any_of([e1, e2])
+        out["any_at"] = env.now
+        yield env.all_of([e2])
+        out["all_at"] = env.now
+
+    env.process(proc())
+    env.run()
+    assert out == {"any_at": 1.0, "all_at": 5.0}
+
+
+def test_process_return_value():
+    env = Environment()
+
+    def inner():
+        yield env.timeout(2.0)
+        return 42
+
+    def outer():
+        val = yield env.process(inner())
+        assert val == 42
+
+    env.process(outer())
+    env.run()
+    assert env.now == 2.0
+
+
+@given(n_cases=10)
+def test_prop_resource_capacity_never_exceeded(rng, case):
+    env = Environment()
+    cap = int(rng.integers(1, 4))
+    res = Resource(env, capacity=cap)
+    active = [0]
+    peak = [0]
+
+    def user(delay, hold):
+        yield env.timeout(delay)
+        req = res.request()
+        yield req
+        active[0] += 1
+        peak[0] = max(peak[0], active[0])
+        yield env.timeout(hold)
+        active[0] -= 1
+        res.release(req)
+
+    for _ in range(int(rng.integers(5, 20))):
+        env.process(user(float(rng.random() * 3), float(rng.random() * 2 + 0.01)))
+    env.run()
+    assert peak[0] <= cap
+    assert res.queue_len == 0 and res.in_use == 0

@@ -1,0 +1,79 @@
+"""Fault tolerance: straggler detection, restart-with-fault-injection,
+gradient compression (error feedback)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.parallel.compression import dequantize_int8, ef_compress_tree, quantize_int8
+from repro.train.fault_tolerance import StragglerMonitor, run_with_restart
+from proptools import given
+
+
+def test_straggler_monitor_flags_outlier():
+    mon = StragglerMonitor(threshold=2.0, grace_steps=3)
+    for step in range(20):
+        ev = mon.record(step, 0.1)
+        assert ev is None
+    ev = mon.record(20, 0.5)
+    assert ev is not None and ev["ratio"] == pytest.approx(5.0)
+    assert mon.events
+
+
+def test_run_with_restart_recovers_from_faults(tmp_path):
+    saved = {}
+
+    def save_fn(step, state):
+        if step % 3 == 0:
+            saved["ckpt"] = (step, state)
+
+    def restore_fn():
+        return saved.get("ckpt", (None, None))
+
+    faults = {4, 8}
+
+    def injector(step):
+        if step in faults:
+            faults.remove(step)
+            return True
+        return False
+
+    def step_fn(step, state):
+        return state + 1
+
+    final, info = run_with_restart(step_fn, 0, 10, save_fn, restore_fn,
+                                   fault_injector=injector)
+    assert info["restarts"] == 2
+    assert final == 10   # exactly-once semantics: state == steps applied
+
+
+@given(n_cases=8)
+def test_prop_quantize_roundtrip_bounded_error(rng, case):
+    x = jnp.asarray(rng.normal(size=(int(rng.integers(10, 500)),)) * 10)
+    q, s = quantize_int8(x)
+    back = dequantize_int8(q, s, x.shape, jnp.float32)
+    max_scale = float(jnp.max(s))
+    assert float(jnp.max(jnp.abs(back - x))) <= max_scale * 0.5 + 1e-6
+
+
+def test_error_feedback_is_unbiased_over_time():
+    """Accumulated compressed updates converge to accumulated true grads."""
+    rng = np.random.default_rng(0)
+    g_true = jnp.asarray(rng.normal(size=(256,)))
+    ef = None
+    acc_comp = jnp.zeros_like(g_true)
+    for _ in range(50):
+        comp, ef = ef_compress_tree(g_true, ef)
+        acc_comp = acc_comp + comp
+    acc_true = g_true * 50
+    # EF bounds the *cumulative* error by one quantization step
+    rel = float(jnp.linalg.norm(acc_comp - acc_true) / jnp.linalg.norm(acc_true))
+    assert rel < 0.01
+
+
+def test_ef_compress_tree_shapes():
+    grads = {"a": jnp.ones((8, 8)), "b": jnp.ones((3,))}
+    comp, ef = ef_compress_tree(grads, None)
+    assert jax.tree.structure(comp) == jax.tree.structure(grads)
+    assert comp["a"].shape == (8, 8)

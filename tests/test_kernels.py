@@ -1,0 +1,103 @@
+"""Per-kernel allclose sweeps vs the ref.py jnp oracles (interpret mode:
+this container is CPU-only; kernels target TPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import flash_attention, rmsnorm, ssd_scan
+from repro.kernels.ref import flash_attention_ref, rmsnorm_ref, ssd_scan_ref
+from repro.models.layers import ssm_decode_step
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _tol(dtype):
+    return dict(rtol=3e-2, atol=3e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("B,S,nh,nkv,hd", [
+    (1, 128, 4, 4, 64),     # MHA, exact tile multiple
+    (2, 200, 4, 2, 64),     # GQA, padded tail
+    (1, 384, 8, 1, 32),     # MQA, hd below lane width
+    (2, 256, 6, 3, 128),    # grouped, 128-wide heads
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("window", [0, 96])
+def test_flash_attention_sweep(B, S, nh, nkv, hd, dtype, window):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, nh, S, hd), dtype)
+    k = jax.random.normal(ks[1], (B, nkv, S, hd), dtype)
+    v = jax.random.normal(ks[2], (B, nkv, S, hd), dtype)
+    out = flash_attention(q, k, v, causal=True, window=window, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("B,nh,S,hp,N,chunk", [
+    (1, 2, 256, 64, 16, 128),
+    (2, 3, 300, 32, 64, 64),     # padded tail
+    (1, 4, 64, 16, 128, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_scan_sweep(B, nh, S, hp, N, chunk, dtype):
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (B, nh, S, hp), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, nh, S))).astype(jnp.float32)
+    A = -jnp.exp(jax.random.normal(ks[2], (nh,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (B, S, N), dtype)
+    Cm = jax.random.normal(ks[4], (B, S, N), dtype)
+    out = ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=True)
+    ref = ssd_scan_ref(x, dt, A, Bm, Cm)
+    tol = dict(rtol=5e-2, atol=5e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **tol)
+
+
+def test_ssd_kernel_state_equals_sequential_recurrence():
+    """The kernel's chunked math must equal the token-by-token SSD
+    recurrence used at decode time (train/serve consistency)."""
+    B, nh, S, hp, N = 1, 2, 96, 16, 32
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (B, nh, S, hp))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, nh, S)))
+    A = -jnp.exp(jax.random.normal(ks[2], (nh,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (B, S, N))
+    Cm = jax.random.normal(ks[4], (B, S, N))
+    out = ssd_scan(x, dt, A, Bm, Cm, chunk=32, interpret=True)
+    state = jnp.zeros((B, nh, hp, N))
+    ys = []
+    for t in range(S):
+        y, state = ssm_decode_step(x[:, :, t], dt[:, :, t], A, Bm[:, t],
+                                   Cm[:, t], state)
+        ys.append(y)
+    ref = jnp.stack(ys, axis=2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("T,H", [(64, 256), (100, 512), (256, 1024)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(T, H, dtype):
+    ks = jax.random.split(KEY, 2)
+    x = jax.random.normal(ks[0], (T, H), dtype)
+    w = jax.random.normal(ks[1], (H,), dtype)
+    out = rmsnorm(x, w, interpret=True)
+    ref = rmsnorm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_flash_attention_fully_masked_rows_are_zero():
+    """Window smaller than the pad tail: padded/fully-masked rows -> 0."""
+    B, nh, S, hd = 1, 2, 130, 64
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, nh, S, hd))
+    k = jax.random.normal(ks[1], (B, nh, S, hd))
+    v = jax.random.normal(ks[2], (B, nh, S, hd))
+    out = flash_attention(q, k, v, causal=True, interpret=True)
+    assert bool(jnp.all(jnp.isfinite(out)))

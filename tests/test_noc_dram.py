@@ -1,0 +1,137 @@
+"""NoC + DRAM bandwidth model (paper §IV-C Eq. 2-5, Fig. 6/7 mechanics)."""
+
+import pytest
+
+from repro.core import (
+    DRAMModel,
+    DRAMSpec,
+    Environment,
+    HardwareSpec,
+    Mesh2D,
+    NoCModel,
+    TileSpec,
+    grayskull,
+    wafer_scale,
+)
+from repro.core.noc import collective_steps, ring_time
+from proptools import given
+
+
+def _hw(rows=4, cols=4, bw=100e9, lat=1e-7):
+    topo = Mesh2D(rows, cols, intra_bw=bw, link_latency=lat)
+    return HardwareSpec(name="t", topology=topo,
+                        tile=TileSpec(flops=1e12, sram_bytes=1e6),
+                        dram=DRAMSpec(bandwidth=50e9, response_time=1e-7),
+                        dram_ports=(0,))
+
+
+def test_transfer_matches_eq2():
+    hw = _hw()
+    env = Environment()
+    noc = NoCModel(env, hw, mode="detailed")
+    nbytes = 1e6
+    proc = env.process(noc.transfer(0, 3, nbytes))  # 3 hops along row 0
+    env.run(until_event=proc)
+    expected = 3 * 1e-7 + nbytes / 100e9           # Eq. (2)
+    assert env.now == pytest.approx(expected, rel=1e-9)
+
+
+def test_contention_serializes_shared_link():
+    hw = _hw()
+    env = Environment()
+    noc = NoCModel(env, hw, mode="detailed")
+    p1 = env.process(noc.transfer(0, 3, 1e6))
+    p2 = env.process(noc.transfer(1, 3, 1e6))      # shares links with p1
+    env.run(until_event=env.all_of([p1, p2]))
+    single = 3 * 1e-7 + 1e6 / 100e9
+    assert env.now > 1.5 * single                   # serialized, not parallel
+
+
+def test_analytical_ignores_contention():
+    hw = _hw()
+    env = Environment()
+    noc = NoCModel(env, hw, mode="analytical")
+    p1 = env.process(noc.transfer(0, 3, 1e6))
+    p2 = env.process(noc.transfer(1, 3, 1e6))
+    env.run(until_event=env.all_of([p1, p2]))
+    single = 3 * 1e-7 + 1e6 / 100e9
+    assert env.now == pytest.approx(single, rel=1e-6)
+
+
+@given(n_cases=8)
+def test_prop_congestion_geq_analytical(rng, case):
+    """Fig. 7 invariant: event-driven time >= analytical for any task mix."""
+    hw = _hw()
+    n_tasks = int(rng.integers(2, 5))
+    pairs = [(int(rng.integers(0, 16)), int(rng.integers(0, 16)))
+             for _ in range(n_tasks)]
+    pairs = [(a, b) for a, b in pairs if a != b] or [(0, 3)]
+    sizes = rng.uniform(1e5, 5e6, size=len(pairs))
+    times = {}
+    for mode in ("detailed", "analytical"):
+        env = Environment()
+        noc = NoCModel(env, hw, mode=mode)
+        procs = [env.process(noc.transfer(a, b, float(s)))
+                 for (a, b), s in zip(pairs, sizes)]
+        env.run(until_event=env.all_of(procs))
+        times[mode] = env.now
+    assert times["detailed"] >= times["analytical"] - 1e-12
+
+
+def test_collective_macro_matches_detailed_uncontended():
+    hw = _hw(bw=300e9, lat=2e-6)
+    group = [0, 1, 2, 3]
+    for kind in ("all_reduce", "all_gather", "reduce_scatter", "all_to_all"):
+        out = {}
+        for mode in ("detailed", "macro"):
+            env = Environment()
+            noc = NoCModel(env, hw, mode=mode)
+            proc = env.process(noc.collective(kind, group, 4e6))
+            env.run(until_event=proc)
+            out[mode] = env.now
+        assert out["macro"] == pytest.approx(out["detailed"], rel=0.35), kind
+
+
+def test_dram_eq4_eq5():
+    hw = _hw()
+    env = Environment()
+    noc = NoCModel(env, hw, mode="detailed")
+    dram = DRAMModel(env, hw, noc)
+    nbytes = 1e6
+    proc = env.process(dram.access(3, nbytes))      # port at device 0: 3 hops
+    env.run(until_event=proc)
+    noc_time = 3 * 1e-7 + nbytes / 100e9            # Eq. (5) NoC leg
+    access = 1e-7 + nbytes / 50e9                   # Eq. (4)
+    assert env.now == pytest.approx(noc_time + access, rel=1e-9)
+
+
+def test_dram_channel_contention():
+    hw = _hw()
+    env = Environment()
+    noc = NoCModel(env, hw, mode="analytical")
+    dram = DRAMModel(env, hw, noc)
+    p1 = env.process(dram.access(1, 1e6))
+    p2 = env.process(dram.access(2, 1e6))           # same edge channel
+    env.run(until_event=env.all_of([p1, p2]))
+    single = 1e-7 + 1e6 / 50e9
+    assert env.now >= 2 * single                    # channel serializes
+
+
+def test_local_hbm_group_access_is_parallel():
+    hw = _hw()
+    hw = hw.with_(dram_ports=())                     # GPU/TPU: private HBM
+    env = Environment()
+    noc = NoCModel(env, hw, mode="analytical")
+    dram = DRAMModel(env, hw, noc)
+    proc = env.process(dram.group_access(range(16), 1e6))
+    env.run(until_event=proc)
+    assert env.now == pytest.approx(1e-7 + 1e6 / 50e9, rel=1e-6)
+
+
+def test_noc_bytes_accounting():
+    hw = _hw()
+    env = Environment()
+    noc = NoCModel(env, hw, mode="detailed")
+    proc = env.process(noc.transfer(0, 3, 123456.0))
+    env.run(until_event=proc)
+    assert noc.bytes_moved == 123456.0

@@ -1,0 +1,172 @@
+"""Alg. 1 SRAM allocation + Adaptive Parallelism Interface (Table III)."""
+
+import math
+
+import pytest
+
+from repro.core import (
+    Conv2,
+    Linear,
+    ParallelPlan,
+    TransformerLayer,
+    grayskull,
+    make_groups,
+    map_graph,
+    s_shape_layout,
+    line_layout,
+    split_op,
+    transformer_lm_graph,
+    wafer_scale,
+)
+from repro.core.graph import ComputationGraph, MoELayer, Pool
+from repro.core.parallelism import FD, BD, GU
+from repro.core.sram import allocate_stage, stage_memory
+from proptools import given
+
+
+# ---------------------------------------------------------------- Table III
+
+def test_linear_comm_sizes():
+    op = Linear(name="l", B=4, M=64, N=32, K=128)
+    s = split_op(op, {"b": 2, "m": 2, "n": 2, "k": 2})
+    fd = [c for c in s.comms if c.phase == FD]
+    assert len(fd) == 1 and fd[0].kind == "all_reduce" and fd[0].axis == "k"
+    assert fd[0].elems == op.B * op.M * op.N / 8          # BMN/(bmn)
+    bd = [c for c in s.comms if c.phase == BD]
+    assert bd[0].elems == op.B * op.N * op.K / 8          # BNK/(bnk), m-group
+    gu = [c for c in s.comms if c.phase == GU]
+    assert {c.axis for c in gu} == {"b", "n"}
+    assert all(c.elems == op.M * op.K / 4 for c in gu)    # MK/(mk)
+    assert s.fwd_flops_tile == op.fwd_flops() / 16
+
+
+def test_transformer_comm_is_megatron():
+    op = TransformerLayer(name="t", B=8, S=128, H=256, n_heads=8, n_kv=8,
+                          d_ff=1024, gated_mlp=False)
+    s = split_op(op, {"dp": 4, "tp": 2})
+    fd = [c for c in s.comms if c.phase == FD][0]
+    assert fd.elems == 2 * op.B * op.S * op.H / 4         # (2BSH/Nd, Nm)
+    gu = [c for c in s.comms if c.phase == GU][0]
+    assert gu.elems == op.param_count() / 2               # (params/Nm, Nd)
+
+
+def test_transformer_flops_reduce_to_paper_formula():
+    B, S, H = 2, 64, 128
+    op = TransformerLayer(name="t", B=B, S=S, H=H, n_heads=8, n_kv=8,
+                          d_ff=4 * H, gated_mlp=False, causal=False)
+    assert op.fwd_flops() == pytest.approx(24 * B * S * H ** 2 + 4 * B * S ** 2 * H)
+
+
+def test_moe_all_to_all():
+    op = MoELayer(name="m", B=4, S=64, H=128, n_experts=8, top_k=2, d_ff_expert=64)
+    s = split_op(op, {"dp": 2, "tp": 4})
+    a2a = [c for c in s.comms if c.kind == "all_to_all" and c.phase == FD]
+    assert len(a2a) == 2                                   # dispatch + combine
+    assert a2a[0].elems == op.B * op.S * op.top_k * op.H / 2
+
+
+# ------------------------------------------------------------------- groups
+
+def test_make_groups_contiguous_vs_spread():
+    devs = list(range(8))
+    g1 = make_groups(devs, {"dp": 2, "tp": 4}, axis_order=["dp", "tp"])
+    assert g1["tp"][0] == [0, 1, 2, 3]                     # comm1: contiguous
+    g2 = make_groups(devs, {"dp": 2, "tp": 4}, axis_order=["tp", "dp"])
+    assert g2["tp"][0] == [0, 2, 4, 6]                     # comm2: strided
+    # groups partition the device set
+    flat = sorted(d for g in g1["tp"] for d in g)
+    assert flat == devs
+
+
+def test_layouts():
+    topo = wafer_scale().topology
+    line = line_layout(topo, 4)
+    s = s_shape_layout(topo, 4)
+    assert len(line) == len(s) == 4
+    assert sorted(sum(line, [])) == sorted(sum(s, []))     # same tiles overall
+    assert line != s
+
+
+# -------------------------------------------------------------------- Alg 1
+
+def _stage_for(ops, plan, hw):
+    g = ComputationGraph(ops=ops, name="g")
+    return map_graph(g, hw, plan).stages[0]
+
+
+def test_alg1_weight_resident_streams_acts():
+    hw = wafer_scale()
+    plan = ParallelPlan(dp=1, tp=1, training=True, global_batch=1, microbatch=1)
+    tiny = Linear(name="l", B=1, M=64, N=128, K=64)        # 4k params: fits
+    st = _stage_for([tiny], plan, hw)
+    acc = allocate_stage(st, plan, hw, streaming_acts=False)[0]
+    assert acc.strategy in ("sram_resident", "activation_stream")
+
+
+def test_alg1_penalty_phi_choice():
+    hw = grayskull()                                        # 1 MB SRAM
+    plan = ParallelPlan(dp=1, tp=1, training=True, global_batch=1, microbatch=1)
+    # weights >> acts (both over SRAM cap) -> weight_stationary (phi1 < phi2)
+    ws_op = Linear(name="w", B=1, M=4096, N=512, K=4096)
+    st = _stage_for([ws_op], plan, hw)
+    acc = allocate_stage(st, plan, hw, streaming_acts=False)[0]
+    assert acc.strategy == "weight_stationary"
+    # acts >> weights (both over SRAM cap) -> input_stationary
+    is_op = Linear(name="i", B=1, M=240, N=12800, K=4096)
+    st = _stage_for([is_op], plan, hw)
+    acc2 = allocate_stage(st, plan, hw, streaming_acts=False)[0]
+    assert acc2.strategy == "input_stationary"
+
+
+@given(n_cases=10)
+def test_prop_alg1_chosen_strategy_minimizes_traffic(rng, case):
+    """Penalty-branch invariant: the chosen phi is the smaller one."""
+    hw = grayskull()
+    plan = ParallelPlan(dp=1, tp=1, training=True, global_batch=1, microbatch=1)
+    op = Linear(name="x", B=int(rng.integers(1, 8)),
+                M=int(rng.integers(512, 8192)), N=int(rng.integers(512, 8192)),
+                K=int(rng.integers(512, 4096)))
+    st = _stage_for([op], plan, hw)
+    acc = allocate_stage(st, plan, hw, streaming_acts=False)[0]
+    cap = hw.tile.sram_bytes
+    wt = op.param_count() * hw.precision_bytes
+    act = op.in_elems() * hw.precision_bytes
+    if acc.strategy == "weight_stationary":
+        assert math.ceil(wt / cap) * act <= math.ceil(act / cap) * wt
+    elif acc.strategy == "input_stationary":
+        assert math.ceil(act / cap) * wt <= math.ceil(wt / cap) * act
+
+
+def test_memory_gpipe_vs_1f1b():
+    """§IV-B: first stage stores B (GPipe) vs S (1F1B) microbatch acts."""
+    hw = wafer_scale()
+    g = transformer_lm_graph("t", 8, 256, 8, 128, 4, vocab=1000)
+    base = dict(pp=4, dp=2, tp=2, microbatch=2, global_batch=64)
+    m_g = map_graph(g, hw, ParallelPlan(schedule="gpipe", **base))
+    m_f = map_graph(g, hw, ParallelPlan(schedule="1f1b", **base))
+    plan_g, plan_f = m_g.plan, m_f.plan
+    s0_g = stage_memory(m_g.stages[0], plan_g, hw)
+    s0_f = stage_memory(m_f.stages[0], plan_f, hw)
+    assert s0_g.inflight_microbatches == plan_g.num_microbatches      # B
+    assert s0_f.inflight_microbatches == min(4, plan_f.num_microbatches)  # S
+    assert s0_g.activations >= s0_f.activations
+
+
+def test_zero_shards_optimizer_state():
+    hw = wafer_scale()
+    g = transformer_lm_graph("t", 4, 256, 8, 128, 4, vocab=1000)
+    base = dict(pp=2, dp=4, tp=2, microbatch=1, global_batch=16)
+    m0 = map_graph(g, hw, ParallelPlan(zero=0, **base))
+    m1 = map_graph(g, hw, ParallelPlan(zero=1, **base))
+    s0 = stage_memory(m0.stages[0], m0.plan, hw)
+    s1 = stage_memory(m1.stages[0], m1.plan, hw)
+    assert s1.opt_state == pytest.approx(s0.opt_state / 4)
+
+
+def test_stage_partition_covers_and_balances():
+    g = transformer_lm_graph("t", 12, 256, 8, 128, 4, vocab=1000)
+    for n in (2, 3, 6, 12, 14):
+        stages = g.partition_stages(n)
+        assert len(stages) == n
+        assert all(len(s) > 0 for s in stages)
+        assert sorted(sum(stages, [])) == list(range(len(g.ops)))
