@@ -13,7 +13,7 @@ wins (paper: 1.23x), and its time is U-shaped in the adapter count.
 
 from __future__ import annotations
 
-from repro.core import Environment, NoCModel, wafer_scale
+from repro.core import Environment, NoCMode, NoCModel, wafer_scale
 from .common import Report
 
 # BERT-base per-layer gradient ~ 12 * 768^2 * 2B ~ 14 MB
@@ -32,7 +32,7 @@ def _perimeter(topo, r0, c0, n=4):
 def strategy_time(src, dst, strategy: int, adapters: int) -> float:
     hw = wafer_scale()
     env = Environment()
-    noc = NoCModel(env, hw, mode="detailed")
+    noc = NoCModel(env, hw, mode=NoCMode.DETAILED)
     proc = env.process(noc.group_to_group(src, dst, NBYTES,
                                           strategy=strategy,
                                           num_adapters=adapters))

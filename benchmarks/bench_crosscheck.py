@@ -16,7 +16,7 @@ import json
 from pathlib import Path
 
 from repro.configs import ARCHS, get_config
-from repro.core import ParallelPlan, simulate, tpu_v5e_pod
+from repro.core import NoCMode, ParallelPlan, Schedule, simulate, tpu_v5e_pod
 from repro.core.workload import arch_to_graph
 from .common import Report
 
@@ -40,9 +40,9 @@ def palm_time(arch_name: str) -> float:
     arch = get_config(arch_name)
     hw = tpu_v5e_pod(16, 16)
     plan = ParallelPlan(pp=1, dp=16, tp=16, microbatch=1, global_batch=256,
-                        schedule="1f1b", recompute="never", training=True)
+                        schedule=Schedule.ONE_F_ONE_B, recompute="never", training=True)
     graph = arch_to_graph(arch, seq_len=4096, batch=16, training=True)
-    res = simulate(graph, hw, plan, noc_mode="macro")
+    res = simulate(graph, hw, plan, noc_mode=NoCMode.MACRO)
     return res.total_time
 
 

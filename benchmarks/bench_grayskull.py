@@ -9,7 +9,8 @@ int8 [50]; BERT-base: 2830 samples/s [40]). We sweep a small set of
 
 from __future__ import annotations
 
-from repro.core import ParallelPlan, bert_base_graph, grayskull, resnet50_graph, simulate
+from repro.core import (Layout, NoCMode, ParallelPlan, bert_base_graph,
+                        grayskull, resnet50_graph, simulate)
 from .common import Report, pct_err
 
 PUBLISHED = {"resnet50": 22431.0, "bert_base": 2830.0}
@@ -21,7 +22,7 @@ def best_throughput(builder, plans) -> float:
     best = 0.0
     for plan in plans:
         graph = builder(plan)
-        res = simulate(graph, hw, plan, noc_mode="macro")
+        res = simulate(graph, hw, plan, noc_mode=NoCMode.MACRO)
         best = max(best, res.throughput)
     return best
 
@@ -38,7 +39,7 @@ def run(report: Report):
     # per-core, so DRAM serialises with compute, per Fig. 5.
     plans_r = [ParallelPlan(pp=pp, dp=dp, tp=tp, microbatch=mb,
                             global_batch=mb * dp * 64, training=False,
-                            layout="s_shape", stream_overlap=False,
+                            layout=Layout.S_SHAPE, stream_overlap=False,
                             weight_multicast=False)
                for pp, dp, tp in ((52, 2, 1), (40, 3, 1), (28, 4, 1),
                                   (28, 2, 2), (24, 5, 1), (20, 3, 2),
@@ -49,7 +50,7 @@ def run(report: Report):
 
     plans_b = [ParallelPlan(pp=pp, dp=dp, tp=1, microbatch=mb,
                             global_batch=mb * dp * 64, training=False,
-                            layout="s_shape", stream_overlap=False,
+                            layout=Layout.S_SHAPE, stream_overlap=False,
                             weight_multicast=False)
                for pp, dp in ((13, 8), (13, 4), (6, 16)) for mb in (1, 2, 4)]
     results["bert_base"] = best_throughput(

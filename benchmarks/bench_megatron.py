@@ -16,7 +16,9 @@ from __future__ import annotations
 import dataclasses
 
 from repro.core import (
+    NoCMode,
     ParallelPlan,
+    Schedule,
     a100_cluster,
     simulate,
     transformer_lm_graph,
@@ -42,12 +44,12 @@ def simulate_model(name, layers, hidden, heads, tp, dp, pp, batch, mb):
     hw = a100_cluster(num_gpus, d_model=hidden)
     plan = ParallelPlan(
         pp=pp, dp=dp, tp=tp, microbatch=mb, global_batch=batch,
-        schedule="1f1b", optimizer="adam", recompute="always",
+        schedule=Schedule.ONE_F_ONE_B, optimizer="adam", recompute="always",
         training=True)
     graph = transformer_lm_graph(
         name, num_layers=layers, d_model=hidden, n_heads=heads,
         seq_len=SEQ, batch=mb * dp, vocab=VOCAB, gated_mlp=False)
-    return simulate(graph, hw, plan, noc_mode="macro")
+    return simulate(graph, hw, plan, noc_mode=NoCMode.MACRO)
 
 
 def run(report: Report):

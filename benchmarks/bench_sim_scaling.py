@@ -15,6 +15,8 @@ import time
 
 from repro.core import (
     DRAMSpec,
+    NoCMode,
+    Schedule,
     HardwareSpec,
     Mesh2D,
     ParallelPlan,
@@ -46,14 +48,14 @@ def run(report: Report):
     for n in (8, 16, 24, 32):
         hw = _mesh_hw(n)
         plan = ParallelPlan(pp=4, dp=2, tp=8, microbatch=1,
-                            global_batch=16, schedule="1f1b",
+                            global_batch=16, schedule=Schedule.ONE_F_ONE_B,
                             recompute="always", training=True)
         graph = transformer_lm_graph("T", 24, 4096, 32, 2048, 2, vocab=51200)
-        for mode in ("macro", "detailed"):
+        for mode in (NoCMode.MACRO, NoCMode.DETAILED):
             t0 = time.perf_counter()
             res = simulate(graph, hw, plan, noc_mode=mode)
             wall = (time.perf_counter() - t0) * 1e3
-            report.log(f"{n:6d} {n*n:6d} {mode:>9s} {res.event_count:9d} "
+            report.log(f"{n:6d} {n*n:6d} {str(mode):>9s} {res.event_count:9d} "
                        f"{wall:8.1f} {res.throughput:8.2f}")
             report.add(f"simscale_n{n}_{mode}", wall * 1e3,
                        f"events={res.event_count};thpt={res.throughput:.3f}")

@@ -1,0 +1,57 @@
+"""§V-B plan sweep through the Experiment API: process-pool SweepEngine
+must reproduce the serial ranking exactly while cutting wall-clock, and
+memory-cap pruning must happen before simulation (pruned plans cost a
+mapping, not an event-driven run)."""
+
+from __future__ import annotations
+
+import os
+import time
+
+from repro.api import Experiment, SearchSpace
+
+from .common import Report
+
+
+def _sweep_exp(memory_cap=None) -> Experiment:
+    return Experiment(
+        arch="yi-6b",
+        hardware="grayskull",
+        search=SearchSpace(max_plans=24, microbatch_sizes=(1, 2)),
+        global_batch=32,
+        seq_len=512,
+        memory_cap=memory_cap,
+    )
+
+
+def run(report: Report) -> None:
+    exp = _sweep_exp()
+
+    t0 = time.perf_counter()
+    serial = exp.sweep(workers=0)
+    t_serial = time.perf_counter() - t0
+
+    workers = min(8, os.cpu_count() or 1)
+    t0 = time.perf_counter()
+    pooled = exp.sweep(workers=workers)
+    t_pool = time.perf_counter() - t0
+
+    parity = [r.plan for r in serial.runs] == [r.plan for r in pooled.runs]
+    speedup = t_serial / t_pool if t_pool > 0 else float("inf")
+    report.log(f"{serial.num_candidates} candidate plans; "
+               f"serial {t_serial:.2f}s vs process[{workers}] {t_pool:.2f}s "
+               f"({speedup:.2f}x); ranking parity: {parity}")
+    report.add("sweep_serial", t_serial * 1e6, f"{serial.num_candidates}_plans")
+    report.add("sweep_pool", t_pool * 1e6, f"speedup_{speedup:.2f}x")
+    report.add("sweep_parity", 0.0, "ok" if parity else "MISMATCH")
+
+    # memory-cap pruning is pre-simulation: a tight cap must cut wall-clock,
+    # not just filter the output
+    cap = sorted(r.peak_memory_bytes for r in serial.runs)[len(serial.runs) // 2]
+    t0 = time.perf_counter()
+    pruned = _sweep_exp(memory_cap=cap).sweep(workers=0)
+    t_pruned = time.perf_counter() - t0
+    report.log(f"memory_cap={cap / 1e9:.2f} GB: {pruned.num_pruned_memory} plans "
+               f"pruned pre-simulation; {t_pruned:.2f}s vs {t_serial:.2f}s uncapped")
+    report.add("sweep_pruned", t_pruned * 1e6,
+               f"{pruned.num_pruned_memory}_pruned")

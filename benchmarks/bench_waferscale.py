@@ -13,7 +13,8 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.core import ParallelPlan, simulate, transformer_lm_graph, wafer_scale
+from repro.core import (BoundaryMode, Layout, NoCMode, ParallelPlan, Schedule,
+                        simulate, transformer_lm_graph, wafer_scale)
 from .common import Report, pct_err
 
 MODELS = {
@@ -26,8 +27,9 @@ PAPER_PALM = {"T-18B": 7.3457, "T-76B": 2.0652, "T-145B": 1.1238}
 SEQ = 2048
 
 
-def wafer_run(name, tp, dp, pp=20, layout="s_shape", tp_contiguous=True,
-              microbatch=1, num_microbatches=128, boundary_mode="pairwise"):
+def wafer_run(name, tp, dp, pp=20, layout=Layout.S_SHAPE, tp_contiguous=True,
+              microbatch=1, num_microbatches=128,
+              boundary_mode=BoundaryMode.PAIRWISE):
     """Fixed microbatch COUNT across sweep points so pipeline-bubble
     fraction is constant and Eq. (6)'s comm trade-off is what varies."""
     L, H, nh = MODELS[name]
@@ -36,12 +38,12 @@ def wafer_run(name, tp, dp, pp=20, layout="s_shape", tp_contiguous=True,
     # recompute="auto": PALM recomputes only under memory pressure (§IV-A);
     # the wafer streams activations to off-chip DRAM instead
     plan = ParallelPlan(pp=pp, dp=dp, tp=tp, microbatch=microbatch,
-                        global_batch=gb, schedule="1f1b", layout=layout,
+                        global_batch=gb, schedule=Schedule.ONE_F_ONE_B, layout=layout,
                         tp_contiguous=tp_contiguous, recompute="auto",
                         training=True)
     graph = transformer_lm_graph(name, L, H, nh, SEQ, microbatch * dp,
                                  vocab=51200, gated_mlp=False)
-    res = simulate(graph, hw, plan, noc_mode="macro",
+    res = simulate(graph, hw, plan, noc_mode=NoCMode.MACRO,
                    boundary_mode=boundary_mode)
     return res.throughput
 
@@ -86,10 +88,10 @@ def run(report: Report):
         tp = 4
         dp = 16 // tp
         variants = {
-            "s1": wafer_run(name, tp, dp, layout="s_shape", tp_contiguous=True),
-            "s2": wafer_run(name, tp, dp, layout="s_shape", tp_contiguous=False),
-            "l1": wafer_run(name, tp, dp, layout="line", tp_contiguous=True),
-            "l2": wafer_run(name, tp, dp, layout="line", tp_contiguous=False),
+            "s1": wafer_run(name, tp, dp, layout=Layout.S_SHAPE, tp_contiguous=True),
+            "s2": wafer_run(name, tp, dp, layout=Layout.S_SHAPE, tp_contiguous=False),
+            "l1": wafer_run(name, tp, dp, layout=Layout.LINE, tp_contiguous=True),
+            "l2": wafer_run(name, tp, dp, layout=Layout.LINE, tp_contiguous=False),
         }
         worst_parallelism = min(sweep[name].values())
         worst = min(min(variants.values()), worst_parallelism)

@@ -1,0 +1,51 @@
+"""Benchmark-suite registry.
+
+Each paper table/figure reproduction registers here once; the driver
+(``benchmarks/run.py``) and any downstream tooling iterate the registry
+instead of hard-coding module lists. A suite is a module exposing
+``run(report: Report) -> None``.
+"""
+
+from __future__ import annotations
+
+import importlib
+from dataclasses import dataclass
+from typing import List, Optional
+
+
+@dataclass(frozen=True)
+class Suite:
+    name: str           # CLI name (--only NAME)
+    module: str         # module under the benchmarks package
+    ref: str            # which paper table/figure (or deliverable) it covers
+
+
+SUITES: List[Suite] = [
+    Suite("allreduce", "bench_allreduce", "Fig 6"),
+    Suite("congestion", "bench_congestion", "Fig 7"),
+    Suite("megatron", "bench_megatron", "Table IV"),
+    Suite("grayskull", "bench_grayskull", "Table V"),
+    Suite("waferscale", "bench_waferscale", "Table VII + Fig 9/10"),
+    Suite("comm_strategies", "bench_comm_strategies", "Fig 11/12"),
+    Suite("sim_scaling", "bench_sim_scaling", "§IV-A complexity claim"),
+    Suite("roofline", "roofline", "deliverable (g)"),
+    Suite("crosscheck", "bench_crosscheck", "PALM vs XLA (beyond-paper)"),
+    Suite("sweep_engine", "bench_sweep_engine", "§V-B sweep: serial vs pool"),
+]
+
+
+def get_suite(name: str) -> Suite:
+    for s in SUITES:
+        if s.name == name:
+            return s
+    raise KeyError(f"unknown suite {name!r}; known: {[s.name for s in SUITES]}")
+
+
+def load_module(suite: Suite):
+    return importlib.import_module(f".{suite.module}", package=__package__)
+
+
+def iter_suites(only: Optional[str] = None) -> List[Suite]:
+    if only is not None:
+        return [get_suite(only)]
+    return list(SUITES)

@@ -1,9 +1,11 @@
-"""Benchmark driver — one module per paper table/figure.
+"""Benchmark driver — one registered suite per paper table/figure.
 
-    PYTHONPATH=src:. python -m benchmarks.run [--only NAME]
+    PYTHONPATH=src:. python -m benchmarks.run [--only NAME] [--list]
 
-Prints human-readable tables followed by the ``name,us_per_call,derived``
-CSV block (written to artifacts/bench.csv as well).
+Suites live in ``benchmarks/registry.py``; each is a module exposing
+``run(report)``. Prints human-readable tables followed by the
+``name,us_per_call,derived`` CSV block (written to artifacts/bench.csv
+as well).
 """
 
 from __future__ import annotations
@@ -14,51 +16,39 @@ import time
 from pathlib import Path
 
 from .common import Report
+from .registry import iter_suites, load_module
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", type=str, default=None)
+    ap.add_argument("--list", action="store_true",
+                    help="list registered suites and exit")
     args = ap.parse_args(argv)
 
-    from . import (
-        bench_allreduce,
-        bench_comm_strategies,
-        bench_congestion,
-        bench_crosscheck,
-        bench_grayskull,
-        bench_megatron,
-        bench_sim_scaling,
-        bench_waferscale,
-        roofline,
-    )
+    if args.list:
+        for s in iter_suites():
+            print(f"{s.name:16s} {s.module:24s} {s.ref}")
+        return 0
 
-    suites = [
-        ("allreduce", bench_allreduce),        # Fig 6
-        ("congestion", bench_congestion),      # Fig 7
-        ("megatron", bench_megatron),          # Table IV
-        ("grayskull", bench_grayskull),        # Table V
-        ("waferscale", bench_waferscale),      # Table VII + Fig 9/10
-        ("comm_strategies", bench_comm_strategies),  # Fig 11/12
-        ("sim_scaling", bench_sim_scaling),    # §IV-A complexity claim
-        ("roofline", roofline),                # deliverable (g)
-        ("crosscheck", bench_crosscheck),      # PALM vs XLA (beyond-paper)
-    ]
+    try:
+        suites = iter_suites(args.only)
+    except KeyError as e:
+        print(f"error: {e.args[0]}", file=sys.stderr)
+        return 2
 
     report = Report()
-    for name, mod in suites:
-        if args.only and name != args.only:
-            continue
-        report.log(f"\n######## {name} ########")
+    for suite in suites:
+        report.log(f"\n######## {suite.name} ({suite.ref}) ########")
         t0 = time.time()
         try:
-            mod.run(report)
+            load_module(suite).run(report)
         except Exception as e:  # keep the suite going; record the failure
             import traceback
-            report.log(f"[{name} FAILED] {e}")
+            report.log(f"[{suite.name} FAILED] {e}")
             traceback.print_exc()
-            report.add(f"{name}_FAILED", 0.0, repr(e))
-        report.log(f"[{name}: {time.time()-t0:.1f}s]")
+            report.add(f"{suite.name}_FAILED", 0.0, repr(e))
+        report.log(f"[{suite.name}: {time.time()-t0:.1f}s]")
 
     report.log("\n=== CSV (name,us_per_call,derived) ===")
     print(report.csv())

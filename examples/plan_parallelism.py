@@ -1,54 +1,67 @@
 """Reproduce the paper's §V-B parallelism exploration on an assigned
-architecture: sweep (pp, dp, tp, layout) with PALM and print the ranked
-table plus the mapping/comm-group deltas (Fig. 8/10 style).
+architecture: sweep (pp, dp, tp, layout, comm placement) with the typed
+Experiment API and print the ranked table (Fig. 8/10 style).
 
     PYTHONPATH=src python examples/plan_parallelism.py --arch dbrx-132b
+    PYTHONPATH=src python examples/plan_parallelism.py --arch yi-6b --workers 8
 """
 
 import argparse
 
-from repro.configs import get_config
-from repro.core import ParallelPlan, simulate, wafer_scale
-from repro.core.workload import arch_to_graph
+from repro.api import Experiment, Layout, SearchSpace
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="dbrx-132b")
     ap.add_argument("--seq-len", type=int, default=2048)
+    ap.add_argument("--workers", type=int, default=0,
+                    help="0 = serial; N = process-pool sweep")
+    ap.add_argument("--json", default=None, help="write SweepReport JSON here")
     args = ap.parse_args()
 
-    arch = get_config(args.arch)
-    hw = wafer_scale()
-    print(f"== {arch.name} on {hw.name} ({hw.num_devices} cores) ==")
-    print(f"{'pp':>3s} {'dp':>3s} {'tp':>3s} {'layout':>8s} {'comm':>5s} "
-          f"{'samples/s':>10s} {'bubble':>7s} {'mem/tile GB':>11s}")
-    rows = []
-    for pp in (10, 20):
-        for tp in (1, 2, 4, 8):
-            dp = 16 // tp
-            for layout in ("s_shape", "line"):
-                for contig in (True, False):
-                    plan = ParallelPlan(
-                        pp=pp, dp=dp, tp=tp, microbatch=1,
-                        global_batch=64 * dp, schedule="1f1b", layout=layout,
-                        tp_contiguous=contig)
-                    g = arch_to_graph(arch, args.seq_len, plan.microbatch * dp)
-                    try:
-                        res = simulate(g, hw, plan)
-                    except ValueError:
-                        continue
-                    mem = max(m.total for m in res.stage_memory) / 1e9
-                    rows.append((res.throughput, pp, dp, tp, layout, contig,
-                                 res.bubble_ratio, mem))
-    rows.sort(reverse=True)
-    for (thpt, pp, dp, tp, layout, contig, bubble, mem) in rows[:12]:
-        print(f"{pp:3d} {dp:3d} {tp:3d} {layout:>8s} "
-              f"{'comm1' if contig else 'comm2':>5s} {thpt:10.3f} "
-              f"{bubble:7.1%} {mem:11.2f}")
-    best = rows[0]
-    print(f"\nbest plan: pp={best[1]} dp={best[2]} tp={best[3]} {best[4]} "
-          f"{'comm1' if best[5] else 'comm2'} -> {best[0]:.3f} samples/s")
+    # the paper's exploration grid: pp in {10, 20}, 16-way (dp x tp) splits,
+    # both layouts, both TP comm-group placements (comm1/comm2). Each dp
+    # group gets global_batch = 64 * dp so every plan runs the same 64
+    # microbatches per replica (constant bubble fraction across dp) —
+    # one Experiment per dp, merged into a single ranking.
+    report = None
+    for tp in (1, 2, 4, 8):
+        dp = 16 // tp
+        exp = Experiment(
+            arch=args.arch,
+            hardware="wafer_scale",
+            search=SearchSpace(degrees=[(pp, dp, tp) for pp in (10, 20)],
+                               layouts=(Layout.S_SHAPE, Layout.LINE),
+                               tp_contiguous=(True, False),
+                               microbatch_sizes=(1,),
+                               max_plans=16),
+            seq_len=args.seq_len,
+            global_batch=64 * dp,
+        )
+        part = exp.sweep(workers=args.workers)
+        if report is None:
+            report = part
+        else:
+            report.runs.extend(part.runs)
+            report.num_candidates += part.num_candidates
+            report.num_pruned_memory += part.num_pruned_memory
+            report.num_failed += part.num_failed
+    report.runs.sort(key=lambda r: -r.throughput)
+
+    print(f"== {report.arch} on {report.hardware} "
+          f"({report.executor}; {report.num_candidates} candidates, "
+          f"{report.num_failed} infeasible) ==")
+    print(report.table(top=12))
+    best = report.best
+    p = best.plan
+    print(f"\nbest plan: pp={p.pp} dp={p.dp} tp={p.tp} {p.layout} "
+          f"{'comm1' if p.tp_contiguous else 'comm2'} "
+          f"-> {best.throughput:.3f} samples/s")
+    if args.json:
+        with open(args.json, "w") as f:
+            f.write(report.to_json(indent=2) + "\n")
+        print(f"[report written to {args.json}]")
 
 
 if __name__ == "__main__":

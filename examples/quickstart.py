@@ -1,39 +1,59 @@
 """Quickstart: simulate LLM training on a wafer-scale tiled accelerator
-with PALM and let the planner pick the parallelism.
+with PALM and let the planner pick the parallelism — all through the
+typed Experiment API.
 
     PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py --tiny   # CI smoke config
 """
 
-from repro.core import ParallelPlan, simulate, transformer_lm_graph, wafer_scale
-from repro.core.planner import PlannerCfg, plan_parallelism
-from repro.configs import get_config
+import argparse
+
+from repro.api import Experiment, Layout, ParallelPlan, Schedule, SearchSpace
+from repro.core import transformer_lm_graph
 
 
-def main():
-    hw = wafer_scale()   # paper Table VI: 5x4 tiles of 4x4 cores
+def main(tiny: bool = False):
+    # --- 1. one simulation ---
+    if tiny:
+        # smoke config: 4-layer toy transformer on a 4-chip pod
+        hardware = "tpu_v5e_2x2"
+        plan = ParallelPlan(pp=2, dp=2, tp=1, microbatch=1, global_batch=8,
+                            schedule=Schedule.ONE_F_ONE_B, layout=Layout.S_SHAPE)
+        builder = lambda p: transformer_lm_graph(
+            "T-tiny", 4, 256, 4, seq_len=128,
+            batch=p.microbatch * p.dp, vocab=1024, gated_mlp=False)
+        name = "T-tiny on tpu_v5e_2x2"
+    else:
+        # T-18B, the paper's §V-B baseline plan, on the Table VI wafer
+        hardware = "wafer_scale"   # 5x4 tiles of 4x4 cores
+        plan = ParallelPlan(pp=20, dp=2, tp=8, microbatch=1, global_batch=256,
+                            schedule=Schedule.ONE_F_ONE_B, layout=Layout.S_SHAPE)
+        builder = lambda p: transformer_lm_graph(
+            "T-18B", 40, 6144, 48, seq_len=2048,
+            batch=p.microbatch * p.dp, vocab=51200, gated_mlp=False)
+        name = "T-18B on wafer-scale"
 
-    # --- 1. one simulation: T-18B, the paper's §V-B baseline plan ---
-    plan = ParallelPlan(pp=20, dp=2, tp=8, microbatch=1, global_batch=256,
-                        schedule="1f1b", layout="s_shape")
-    graph = transformer_lm_graph("T-18B", 40, 6144, 48, seq_len=2048,
-                                 batch=plan.microbatch * plan.dp, vocab=51200,
-                                 gated_mlp=False)
-    res = simulate(graph, hw, plan)
-    print(f"T-18B on wafer-scale: {res.throughput:.2f} samples/s, "
-          f"bubble {res.bubble_ratio:.1%}, "
-          f"peak stage memory {max(m.total for m in res.stage_memory)/1e9:.2f} GB, "
-          f"{res.event_count} events")
+    rep = Experiment(hardware=hardware, plan=plan, graph_builder=builder).run()
+    print(f"{name}: {rep.throughput:.2f} samples/s, "
+          f"bubble {rep.bubble_ratio:.1%}, "
+          f"peak stage memory {rep.peak_memory_bytes / 1e9:.2f} GB, "
+          f"{rep.event_count} events")
 
     # --- 2. PALM as auto-parallelism planner for an assigned arch ---
-    arch = get_config("yi-6b")
-    results = plan_parallelism(arch, hw, PlannerCfg(
-        global_batch=128, seq_len=2048, max_plans=12, microbatch_sizes=(1, 2)))
-    print(f"\nplanner ranking for {arch.name} (top 5):")
-    for r in results[:5]:
-        p = r.plan
-        print(f"  pp={p.pp:<3d} dp={p.dp:<3d} tp={p.tp:<3d} mb={p.microbatch} "
-              f"{p.layout:8s} -> {r.throughput:8.2f} samples/s")
+    sweep = Experiment(
+        arch="yi-6b",
+        hardware="tpu_v5e_2x2" if tiny else "wafer_scale",
+        search=SearchSpace(max_plans=4 if tiny else 12,
+                           microbatch_sizes=(1, 2)),
+        global_batch=16 if tiny else 128,
+        seq_len=128 if tiny else 2048,
+    ).sweep()
+    print(f"\nplanner ranking for {sweep.arch} (top 5):")
+    print(sweep.table(top=5))
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="seconds-scale config for CI smoke runs")
+    main(**vars(ap.parse_args()))

@@ -1,0 +1,8 @@
+"""Entry point: ``python -m repro {simulate,sweep,plan}``."""
+
+import sys
+
+from .api.cli import main
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,38 @@
+"""Unified Experiment API — the canonical front door to the PALM simulator.
+
+One typed entry point for the three workflows the repo exposes:
+
+* **simulate** — ``Experiment(arch=..., plan=ParallelPlan(...)).run()``
+* **sweep**    — ``Experiment(arch=..., search=SearchSpace(...)).sweep()``
+* **plan**     — :func:`repro.core.planner.plan_parallelism` (built on the
+  same engine), or ``python -m repro plan`` from the shell.
+
+Strings like ``schedule="1f1b"`` are replaced by typed enums
+(:class:`Schedule`, :class:`Layout`, :class:`NoCMode`,
+:class:`BoundaryMode`); legacy strings are coerced with a
+DeprecationWarning for one release. Results come back as JSON-round-trip
+:class:`RunReport` / :class:`SweepReport` dataclasses.
+"""
+
+from ..core.enums import BoundaryMode, Layout, NoCMode, Schedule
+from ..core.parallelism import ParallelPlan
+from .experiment import Experiment, HARDWARE_PRESETS, SearchSpace, resolve_hardware
+from .report import RunReport, SweepReport, plan_from_dict, plan_to_dict
+from .sweep import SweepEngine
+
+__all__ = [
+    "BoundaryMode",
+    "Experiment",
+    "HARDWARE_PRESETS",
+    "Layout",
+    "NoCMode",
+    "ParallelPlan",
+    "RunReport",
+    "Schedule",
+    "SearchSpace",
+    "SweepEngine",
+    "SweepReport",
+    "plan_from_dict",
+    "plan_to_dict",
+    "resolve_hardware",
+]

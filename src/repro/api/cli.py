@@ -1,0 +1,169 @@
+"""``python -m repro`` — simulate / sweep / plan from the shell.
+
+    python -m repro simulate --arch yi-6b --hardware wafer_scale \
+        --pp 4 --dp 2 --tp 2 --global-batch 64
+    python -m repro sweep --arch yi-6b --hardware grayskull \
+        --global-batch 64 --max-plans 24 --workers 4 --json sweep.json
+    python -m repro plan --arch dbrx-132b --hardware wafer_scale
+
+Every enum-valued flag takes the typed values (``--schedule 1f1b``,
+``--noc-mode macro``); outputs are the RunReport / SweepReport JSON
+documents when ``--json`` is given, human tables otherwise.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import List, Optional
+
+from ..configs import list_archs
+from ..core.enums import BoundaryMode, Layout, NoCMode, Schedule
+from ..core.parallelism import ParallelPlan
+from .experiment import Experiment, HARDWARE_PRESETS, SearchSpace
+
+__all__ = ["main"]
+
+
+def _add_common(ap: argparse.ArgumentParser) -> None:
+    ap.add_argument("--arch", required=True,
+                    help=f"arch-config name (e.g. {', '.join(list_archs()[:3])}, "
+                         "T-18B, ...)")
+    ap.add_argument("--hardware", default="wafer_scale",
+                    help=f"preset: {', '.join(sorted(HARDWARE_PRESETS))} or a100x<N>")
+    ap.add_argument("--seq-len", type=int, default=2048)
+    ap.add_argument("--global-batch", type=int, default=256)
+    ap.add_argument("--inference", action="store_true",
+                    help="simulate an inference pipeline instead of training")
+    ap.add_argument("--noc-mode", type=NoCMode, choices=list(NoCMode),
+                    default=NoCMode.MACRO)
+    ap.add_argument("--boundary-mode", type=BoundaryMode,
+                    choices=list(BoundaryMode), default=BoundaryMode.PAIRWISE)
+    ap.add_argument("--json", type=Path, default=None, metavar="FILE",
+                    help="write the report JSON here ('-' for stdout)")
+
+
+def _add_plan_flags(ap: argparse.ArgumentParser) -> None:
+    ap.add_argument("--pp", type=int, default=1)
+    ap.add_argument("--dp", type=int, default=1)
+    ap.add_argument("--tp", type=int, default=1)
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--schedule", type=Schedule, choices=list(Schedule),
+                    default=Schedule.ONE_F_ONE_B)
+    ap.add_argument("--layout", type=Layout, choices=list(Layout),
+                    default=Layout.S_SHAPE)
+
+
+def _add_sweep_flags(ap: argparse.ArgumentParser) -> None:
+    ap.add_argument("--max-plans", type=int, default=64)
+    ap.add_argument("--microbatch-sizes", type=int, nargs="+", default=[1, 2, 4])
+    ap.add_argument("--schedules", type=Schedule, nargs="+",
+                    choices=list(Schedule), default=[Schedule.ONE_F_ONE_B])
+    ap.add_argument("--layouts", type=Layout, nargs="+",
+                    choices=list(Layout), default=[Layout.S_SHAPE, Layout.LINE])
+    ap.add_argument("--memory-cap", type=float, default=None,
+                    help="bytes per tile; infeasible plans pruned pre-simulation")
+    ap.add_argument("--workers", type=int, default=0,
+                    help="0 = serial, N = process pool of N, -1 = all cores")
+    ap.add_argument("--top", type=int, default=10)
+
+
+def _emit(report, json_target: Optional[Path]) -> None:
+    if json_target is None:
+        return
+    text = report.to_json(indent=2)
+    if str(json_target) == "-":
+        print(text)
+    else:
+        json_target.write_text(text + "\n")
+        print(f"[report written to {json_target}]")
+
+
+def _cmd_simulate(args) -> int:
+    plan = ParallelPlan(pp=args.pp, dp=args.dp, tp=args.tp,
+                        microbatch=args.microbatch,
+                        global_batch=args.global_batch,
+                        schedule=args.schedule, layout=args.layout,
+                        training=not args.inference)
+    exp = Experiment(arch=args.arch, hardware=args.hardware, plan=plan,
+                     seq_len=args.seq_len, global_batch=args.global_batch,
+                     training=not args.inference, noc_mode=args.noc_mode,
+                     boundary_mode=args.boundary_mode)
+    report = exp.run()
+    print(f"{report.arch} on {report.hardware}: {report.summary()}")
+    _emit(report, args.json)
+    return 0
+
+
+def _make_sweep_experiment(args) -> Experiment:
+    search = SearchSpace(schedules=tuple(args.schedules),
+                         layouts=tuple(args.layouts),
+                         microbatch_sizes=tuple(args.microbatch_sizes),
+                         max_plans=args.max_plans)
+    return Experiment(arch=args.arch, hardware=args.hardware, search=search,
+                      seq_len=args.seq_len, global_batch=args.global_batch,
+                      training=not args.inference, noc_mode=args.noc_mode,
+                      boundary_mode=args.boundary_mode,
+                      memory_cap=args.memory_cap)
+
+
+def _cmd_sweep(args) -> int:
+    exp = _make_sweep_experiment(args)
+    report = exp.sweep(workers=None if args.workers < 0 else args.workers)
+    print(f"== sweep: {report.arch} on {report.hardware} "
+          f"({report.executor}; {report.num_candidates} candidates, "
+          f"{report.num_pruned_memory} memory-pruned, "
+          f"{report.num_failed} failed) ==")
+    print(report.table(top=args.top))
+    _emit(report, args.json)
+    return 0 if report.runs else 1
+
+
+def _cmd_plan(args) -> int:
+    report = _make_sweep_experiment(args).sweep(
+        workers=None if args.workers < 0 else args.workers)
+    best = report.best
+    if best is None:
+        print("no feasible plan found", file=sys.stderr)
+        return 1
+    p = best.plan
+    print(f"best plan for {report.arch} on {report.hardware}:")
+    print(f"  pp={p.pp} dp={p.dp} tp={p.tp} microbatch={p.microbatch} "
+          f"schedule={p.schedule} layout={p.layout}")
+    print(f"  -> {best.throughput:.3f} samples/s, bubble {best.bubble_ratio:.1%}, "
+          f"peak memory {best.peak_memory_bytes / 1e9:.2f} GB/tile")
+    _emit(best if args.best_only else report, args.json)
+    return 0
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro",
+        description="PALM performance simulator — typed Experiment front door")
+    sub = ap.add_subparsers(dest="command", required=True)
+
+    sim = sub.add_parser("simulate", help="simulate one fixed parallel plan")
+    _add_common(sim)
+    _add_plan_flags(sim)
+    sim.set_defaults(fn=_cmd_simulate)
+
+    swp = sub.add_parser("sweep", help="rank a parallelism search space")
+    _add_common(swp)
+    _add_sweep_flags(swp)
+    swp.set_defaults(fn=_cmd_sweep)
+
+    pln = sub.add_parser("plan", help="print the best plan for an arch/hardware")
+    _add_common(pln)
+    _add_sweep_flags(pln)
+    pln.add_argument("--best-only", action="store_true",
+                     help="with --json, write only the best RunReport")
+    pln.set_defaults(fn=_cmd_plan)
+
+    args = ap.parse_args(argv)
+    try:
+        return args.fn(args)
+    except (ValueError, KeyError) as e:   # spec errors, not crashes
+        print(f"error: {e}", file=sys.stderr)
+        return 2

@@ -1,0 +1,251 @@
+"""Declarative experiment spec — the canonical PALM front door.
+
+An :class:`Experiment` names a workload (an arch-config registry entry or
+an explicit :class:`ArchConfig` / :class:`ComputationGraph`), a hardware
+spec (preset name or instance), and either one fixed
+:class:`ParallelPlan` or a typed :class:`SearchSpace` to sweep. It
+validates eagerly — bad pp/dp/tp factorizations, unknown schedules, or
+unsatisfiable batch settings fail before any simulation starts — which is
+what makes thousand-point sweeps practical.
+
+    from repro.api import Experiment, SearchSpace, Schedule
+
+    exp = Experiment(arch="yi-6b", hardware="wafer_scale",
+                     search=SearchSpace(schedules=(Schedule.ONE_F_ONE_B,)),
+                     global_batch=128, seq_len=2048)
+    report = exp.sweep(workers=8)      # SweepReport, ranked best-first
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Sequence, Tuple, Union
+
+from ..configs import get_config
+from ..configs.base import ArchConfig
+from ..core.enums import BoundaryMode, Layout, NoCMode, Schedule, coerce
+from ..core.graph import ComputationGraph
+from ..core.hardware import (
+    HardwareSpec,
+    a100_cluster,
+    grayskull,
+    tpu_v5e_pod,
+    wafer_scale,
+)
+from ..core.parallelism import ParallelPlan
+from ..core.workload import arch_to_graph
+from .report import RunReport, SweepReport
+
+__all__ = ["Experiment", "SearchSpace", "resolve_hardware", "HARDWARE_PRESETS"]
+
+HARDWARE_PRESETS = {
+    "grayskull": grayskull,
+    "wafer_scale": wafer_scale,
+    "tpu_v5e": tpu_v5e_pod,
+}
+
+
+def resolve_hardware(hw: Union[str, HardwareSpec]) -> HardwareSpec:
+    """Accept a HardwareSpec or a preset name (``a100x<N>`` builds a GPU
+    cluster of N devices)."""
+    if isinstance(hw, HardwareSpec):
+        return hw
+    if not isinstance(hw, str):
+        raise TypeError(f"hardware must be HardwareSpec or str, got {type(hw).__name__}")
+    if hw in HARDWARE_PRESETS:
+        return HARDWARE_PRESETS[hw]()
+    if hw.startswith("a100x"):
+        try:
+            return a100_cluster(int(hw[len("a100x"):]))
+        except ValueError:
+            pass
+    if hw.startswith("tpu_v5e_"):        # e.g. tpu_v5e_4x4
+        try:
+            rows, cols = hw[len("tpu_v5e_"):].split("x")
+            return tpu_v5e_pod(int(rows), int(cols))
+        except ValueError:
+            pass
+    raise ValueError(f"unknown hardware preset {hw!r}; known: "
+                     f"{sorted(HARDWARE_PRESETS) + ['a100x<N>', 'tpu_v5e_<R>x<C>']}")
+
+
+def _divisor_splits(n: int) -> List[Tuple[int, int, int]]:
+    """(pp, dp, tp) triples with pp*dp*tp == n."""
+    out = []
+    for pp in (d for d in range(1, n + 1) if n % d == 0):
+        rest = n // pp
+        for dp in (d for d in range(1, rest + 1) if rest % d == 0):
+            out.append((pp, dp, rest // dp))
+    return out
+
+
+@dataclass
+class SearchSpace:
+    """Typed sweep axes for parallelism search (§V-B).
+
+    ``degrees`` fixes explicit (pp, dp, tp) triples; when ``None`` every
+    divisor factorization of the device count is considered, filtered by
+    arch shape (pp bounded by layer count, tp by head/feature count).
+    """
+
+    degrees: Optional[Sequence[Tuple[int, int, int]]] = None
+    schedules: Sequence[Schedule] = (Schedule.ONE_F_ONE_B,)
+    layouts: Sequence[Layout] = (Layout.S_SHAPE, Layout.LINE)
+    microbatch_sizes: Sequence[int] = (1, 2, 4)
+    tp_contiguous: Sequence[bool] = (True,)
+    max_plans: int = 64
+
+    def __post_init__(self):
+        self.schedules = tuple(coerce(Schedule, s, "schedule") for s in self.schedules)
+        self.layouts = tuple(coerce(Layout, l, "layout") for l in self.layouts)
+        if self.max_plans < 1:
+            raise ValueError("max_plans must be >= 1")
+        if any(b < 1 for b in self.microbatch_sizes):
+            raise ValueError("microbatch sizes must be >= 1")
+
+    def enumerate_plans(self, hardware: HardwareSpec, global_batch: int,
+                        training: bool = True,
+                        arch: Optional[ArchConfig] = None) -> List[ParallelPlan]:
+        """Materialize the plan list, arch-filtered and budget-pruned
+        (diverse (pp, dp, tp) triples are kept first)."""
+        n = hardware.num_devices
+        triples = list(self.degrees) if self.degrees is not None else _divisor_splits(n)
+        plans: List[ParallelPlan] = []
+        for (pp, dp, tp) in triples:
+            if pp * dp * tp > n:
+                raise ValueError(
+                    f"plan (pp={pp}, dp={dp}, tp={tp}) needs {pp * dp * tp} "
+                    f"devices but {hardware.name} has {n}")
+            if arch is not None:
+                if pp > max(1, arch.num_layers):
+                    continue
+                if tp > max(arch.n_heads, arch.d_model // 64, 1):
+                    continue
+            for b in self.microbatch_sizes:
+                if global_batch % (b * dp):
+                    continue
+                for sched in (self.schedules if training else (Schedule.GPIPE,)):
+                    for layout in self.layouts:
+                        for contig in self.tp_contiguous:
+                            plans.append(ParallelPlan(
+                                pp=pp, dp=dp, tp=tp, microbatch=b,
+                                global_batch=global_batch, schedule=sched,
+                                layout=layout, tp_contiguous=contig,
+                                training=training))
+        # budget: prefer diverse (pp, dp, tp) triples first
+        seen, pruned = set(), []
+        for p in plans:
+            key = (p.pp, p.dp, p.tp)
+            if key not in seen or len(pruned) < self.max_plans // 2:
+                pruned.append(p)
+                seen.add(key)
+            if len(pruned) >= self.max_plans:
+                break
+        return pruned
+
+
+@dataclass
+class Experiment:
+    """One declarative simulation/sweep spec. Exactly one of ``plan`` /
+    ``search`` drives it: a fixed plan means :meth:`run`, a search space
+    means :meth:`sweep`."""
+
+    arch: Union[str, ArchConfig, None] = None
+    hardware: Union[str, HardwareSpec] = "wafer_scale"
+    plan: Optional[ParallelPlan] = None
+    search: Optional[SearchSpace] = None
+    graph_builder: Optional[Callable[[ParallelPlan], ComputationGraph]] = None
+    seq_len: int = 2048
+    global_batch: int = 256
+    training: bool = True
+    decode: bool = False                # serve-step graphs (1-token decode)
+    noc_mode: NoCMode = NoCMode.MACRO
+    boundary_mode: BoundaryMode = BoundaryMode.PAIRWISE
+    memory_cap: Optional[float] = None  # bytes per tile; pre-sim feasibility
+    collect_timeline: bool = False
+
+    def __post_init__(self):
+        self.noc_mode = coerce(NoCMode, self.noc_mode, "noc_mode")
+        self.boundary_mode = coerce(BoundaryMode, self.boundary_mode,
+                                    "boundary_mode")
+        self.validate()
+
+    # -- resolution ---------------------------------------------------------
+    @property
+    def arch_config(self) -> Optional[ArchConfig]:
+        if self.arch is None:
+            return None
+        return get_config(self.arch) if isinstance(self.arch, str) else self.arch
+
+    @functools.cached_property
+    def hardware_spec(self) -> HardwareSpec:
+        # cached: sweeps resolve the spec once per Experiment (per process),
+        # not once per plan evaluation
+        return resolve_hardware(self.hardware)
+
+    @property
+    def arch_name(self) -> str:
+        cfg = self.arch_config
+        return cfg.name if cfg is not None else "<custom graph>"
+
+    def build_graph(self, plan: ParallelPlan) -> ComputationGraph:
+        """Graph for one plan (per-iteration batch = microbatch * dp)."""
+        if self.graph_builder is not None:
+            return self.graph_builder(plan)
+        return arch_to_graph(self.arch_config, self.seq_len,
+                             plan.microbatch * plan.dp,
+                             training=self.training, decode=self.decode)
+
+    # -- validation ---------------------------------------------------------
+    def validate(self) -> None:
+        if self.plan is None and self.search is None:
+            raise ValueError("Experiment needs a fixed `plan` or a `search` space")
+        if self.plan is not None and self.search is not None:
+            raise ValueError("Experiment takes `plan` or `search`, not both")
+        if self.arch is None and self.graph_builder is None:
+            raise ValueError("Experiment needs an `arch` (registry name or "
+                             "ArchConfig) or a custom `graph_builder`")
+        if isinstance(self.arch, str):
+            get_config(self.arch)       # raises KeyError with known names
+        hw = self.hardware_spec          # raises on unknown preset
+        if self.plan is not None:
+            p = self.plan
+            need = p.pp * p.dp * p.tp
+            if need > hw.num_devices:
+                raise ValueError(
+                    f"plan (pp={p.pp}, dp={p.dp}, tp={p.tp}) needs {need} "
+                    f"devices but {hw.name} has {hw.num_devices}")
+            if p.global_batch % (p.microbatch * p.dp):
+                raise ValueError(
+                    f"global_batch {p.global_batch} not divisible by "
+                    f"microbatch*dp = {p.microbatch * p.dp}")
+        if self.seq_len < 1 or self.global_batch < 1:
+            raise ValueError("seq_len and global_batch must be >= 1")
+
+    # -- execution ----------------------------------------------------------
+    def run(self) -> RunReport:
+        """Simulate the fixed plan; returns a RunReport."""
+        if self.plan is None:
+            raise ValueError("run() needs a fixed plan; use sweep() for a search")
+        from .sweep import run_one          # local import: sweep imports report
+        return run_one(self, self.plan)
+
+    def sweep(self, workers: int = 0) -> SweepReport:
+        """Evaluate the search space; ``workers=0`` is serial, ``workers=N``
+        uses an N-process pool, ``workers=None`` uses all cores."""
+        if self.search is None:
+            if self.plan is not None:   # degenerate single-point sweep
+                plans = [self.plan]
+            else:
+                raise ValueError("sweep() needs a `search` space")
+        else:
+            plans = self.search.enumerate_plans(
+                self.hardware_spec, self.global_batch,
+                training=self.training, arch=self.arch_config)
+        from .sweep import SweepEngine
+        return SweepEngine(workers=workers).sweep(self, plans)
+
+    def with_(self, **kw) -> "Experiment":
+        return dataclasses.replace(self, **kw)

@@ -1,0 +1,154 @@
+"""Structured results for the Experiment API.
+
+A :class:`RunReport` is the digest of one simulation: the typed
+:class:`ParallelPlan` that ran, where it ran, and the performance PALM
+predicts. A :class:`SweepReport` is a ranked collection of RunReports
+plus sweep accounting (how many plans were pruned before simulation and
+why).
+
+Both round-trip through ``to_json`` / ``from_json`` so benchmarks and
+downstream tools can persist sweeps without pickling simulator objects;
+plans serialize as plain dicts (:func:`plan_to_dict`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+from ..core.enums import Layout, Schedule
+from ..core.parallelism import ParallelPlan
+from ..core.scheduler import SimResult
+
+__all__ = ["RunReport", "SweepReport", "plan_to_dict", "plan_from_dict"]
+
+# ParallelPlan fields that are not JSON-scalar and rarely swept; they are
+# serialized only when set so reports stay compact.
+_PLAN_OPTIONAL = ("stage_binding", "tile_binding")
+
+
+def plan_to_dict(plan: ParallelPlan) -> Dict[str, Any]:
+    d = dataclasses.asdict(plan)
+    d["schedule"] = str(plan.schedule)
+    d["layout"] = str(plan.layout)
+    for k in _PLAN_OPTIONAL:
+        if d.get(k) is None:
+            d.pop(k, None)
+    return d
+
+
+def plan_from_dict(d: Dict[str, Any]) -> ParallelPlan:
+    kw = dict(d)
+    kw["schedule"] = Schedule(kw.get("schedule", "1f1b"))
+    kw["layout"] = Layout(kw.get("layout", "s_shape"))
+    return ParallelPlan(**kw)
+
+
+@dataclass
+class RunReport:
+    """One simulated (plan, hardware, workload) point."""
+
+    arch: str
+    hardware: str
+    plan: ParallelPlan
+    total_time: float
+    throughput: float
+    bubble_ratio: float
+    peak_memory_bytes: float
+    recompute: bool
+    event_count: int
+    noc_bytes: float
+    dram_bytes: float
+    extra: Dict[str, Any] = field(default_factory=dict)
+
+    @classmethod
+    def from_sim(cls, arch: str, hardware: str, plan: ParallelPlan,
+                 result: SimResult, **extra: Any) -> "RunReport":
+        return cls(
+            arch=arch,
+            hardware=hardware,
+            plan=plan,
+            total_time=result.total_time,
+            throughput=result.throughput,
+            bubble_ratio=result.bubble_ratio,
+            peak_memory_bytes=max((m.total for m in result.stage_memory),
+                                  default=0.0),
+            recompute=result.recompute,
+            event_count=result.event_count,
+            noc_bytes=result.noc_bytes,
+            dram_bytes=result.dram_bytes,
+            extra=dict(extra),
+        )
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["plan"] = plan_to_dict(self.plan)
+        return d
+
+    def to_json(self, **kw: Any) -> str:
+        return json.dumps(self.to_dict(), **kw)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "RunReport":
+        d = dict(d)
+        d["plan"] = plan_from_dict(d["plan"])
+        return cls(**d)
+
+    @classmethod
+    def from_json(cls, s: str) -> "RunReport":
+        return cls.from_dict(json.loads(s))
+
+    def summary(self) -> str:
+        p = self.plan
+        return (f"pp={p.pp} dp={p.dp} tp={p.tp} mb={p.microbatch} "
+                f"{p.schedule}/{p.layout} -> {self.throughput:.2f} samples/s, "
+                f"bubble {self.bubble_ratio:.1%}, "
+                f"peak mem {self.peak_memory_bytes / 1e9:.2f} GB")
+
+
+@dataclass
+class SweepReport:
+    """Ranked sweep outcome (best plan first) + pruning accounting."""
+
+    arch: str
+    hardware: str
+    runs: List[RunReport]                # sorted by throughput, best first
+    num_candidates: int = 0              # plans enumerated
+    num_pruned_memory: int = 0           # dropped by the pre-sim memory check
+    num_failed: int = 0                  # raised during mapping/simulation
+    executor: str = "serial"
+
+    @property
+    def best(self) -> Optional[RunReport]:
+        return self.runs[0] if self.runs else None
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["runs"] = [r.to_dict() for r in self.runs]
+        return d
+
+    def to_json(self, **kw: Any) -> str:
+        return json.dumps(self.to_dict(), **kw)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "SweepReport":
+        d = dict(d)
+        d["runs"] = [RunReport.from_dict(r) for r in d.get("runs", [])]
+        return cls(**d)
+
+    @classmethod
+    def from_json(cls, s: str) -> "SweepReport":
+        return cls.from_dict(json.loads(s))
+
+    def table(self, top: int = 10) -> str:
+        lines = [f"{'pp':>3s} {'dp':>3s} {'tp':>3s} {'mb':>3s} {'schedule':>8s} "
+                 f"{'layout':>8s} {'samples/s':>10s} {'bubble':>7s} {'mem GB':>7s}"]
+        for r in self.runs[:top]:
+            p = r.plan
+            lines.append(
+                f"{p.pp:3d} {p.dp:3d} {p.tp:3d} {p.microbatch:3d} "
+                f"{str(p.schedule):>8s} {str(p.layout):>8s} {r.throughput:10.3f} "
+                f"{r.bubble_ratio:7.1%} {r.peak_memory_bytes / 1e9:7.2f}")
+        return "\n".join(lines)

@@ -1,0 +1,141 @@
+"""Parallel sweep engine for Experiment plan searches.
+
+Executes plan sweeps through a ``concurrent.futures`` process pool (or
+serially with ``workers=0``) with two structural optimizations over the
+legacy ``sweep_plans`` loop:
+
+* **Graph-construction memoization** — the workload graph depends only on
+  the per-iteration batch (``microbatch * dp``), not the full plan, so
+  plans sharing a batch share one graph build (per process).
+* **Early infeasibility pruning** — per-tile memory is a property of the
+  *mapped* graph, so the ``memory_cap`` check runs before the event-driven
+  simulation and infeasible plans cost a mapping, not a full run.
+
+Results are deterministic: the engine evaluates plans in enumeration
+order and ranks by simulated throughput, so serial and process-pool
+sweeps produce identical SweepReports.
+"""
+
+from __future__ import annotations
+
+import os
+import pickle
+import warnings
+from concurrent.futures import ProcessPoolExecutor
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from ..core.parallelism import ParallelPlan, map_graph
+from ..core.scheduler import PipelineSimulator, plan_memory
+from .report import RunReport, SweepReport
+
+__all__ = ["SweepEngine", "run_one"]
+
+# outcome tags for one plan evaluation
+_OK, _PRUNED, _FAILED = "ok", "pruned", "failed"
+
+
+def _evaluate(exp, plan: ParallelPlan, graph_cache: Dict) -> Tuple[str, object]:
+    """Evaluate one plan: build (memoized) graph, map, prune on memory,
+    simulate. Returns (tag, RunReport | reason)."""
+    try:
+        if exp.graph_builder is None:
+            key = plan.microbatch * plan.dp
+            graph = graph_cache.get(key)
+            if graph is None:
+                graph = exp.build_graph(plan)
+                graph_cache[key] = graph
+        else:
+            graph = exp.build_graph(plan)   # builder may depend on full plan
+        hw = exp.hardware_spec
+        mapped = map_graph(graph, hw, plan)
+        mem_plan = None
+        if exp.memory_cap is not None:
+            mem_plan = plan_memory(mapped)
+            if max(m.total for m in mem_plan[0]) > exp.memory_cap:
+                return (_PRUNED, None)
+        sim = PipelineSimulator(mapped, noc_mode=exp.noc_mode,
+                                boundary_mode=exp.boundary_mode,
+                                memory_plan=mem_plan)
+        result = sim.run()
+    except (ValueError, KeyError, TypeError) as e:
+        return (_FAILED, f"{type(e).__name__}: {e}")
+    return (_OK, RunReport.from_sim(exp.arch_name, hw.name, plan, result))
+
+
+def run_one(exp, plan: ParallelPlan) -> RunReport:
+    """Simulate one fixed plan (Experiment.run body)."""
+    graph = exp.build_graph(plan)
+    hw = exp.hardware_spec
+    mapped = map_graph(graph, hw, plan)
+    sim = PipelineSimulator(mapped, noc_mode=exp.noc_mode,
+                            boundary_mode=exp.boundary_mode,
+                            collect_timeline=exp.collect_timeline)
+    return RunReport.from_sim(exp.arch_name, hw.name, plan, sim.run())
+
+
+# -- process-pool plumbing ---------------------------------------------------
+# The Experiment is shipped once per worker (initializer) instead of once
+# per task; each worker keeps its own graph memo across tasks.
+_WORKER: Dict = {}
+
+
+def _init_worker(exp_bytes: bytes) -> None:
+    _WORKER["exp"] = pickle.loads(exp_bytes)
+    _WORKER["graphs"] = {}
+
+
+def _eval_in_worker(plan: ParallelPlan) -> Tuple[str, object]:
+    return _evaluate(_WORKER["exp"], plan, _WORKER["graphs"])
+
+
+class SweepEngine:
+    """Executes a plan sweep for an Experiment.
+
+    ``workers=0`` (default) runs serially in-process; ``workers=N`` uses an
+    N-process pool; ``workers=None`` uses one process per CPU.
+    """
+
+    def __init__(self, workers: Optional[int] = 0):
+        self.workers = os.cpu_count() if workers is None else workers
+
+    def sweep(self, exp, plans: Sequence[ParallelPlan]) -> SweepReport:
+        plans = list(plans)
+        outcomes, executor = self._evaluate_all(exp, plans)
+
+        runs: List[RunReport] = []
+        pruned = failed = 0
+        for tag, payload in outcomes:
+            if tag == _OK:
+                runs.append(payload)
+            elif tag == _PRUNED:
+                pruned += 1
+            else:
+                failed += 1
+        runs.sort(key=lambda r: -r.throughput)
+        return SweepReport(
+            arch=exp.arch_name,
+            hardware=exp.hardware_spec.name,
+            runs=runs,
+            num_candidates=len(plans),
+            num_pruned_memory=pruned,
+            num_failed=failed,
+            executor=executor,
+        )
+
+    def _evaluate_all(self, exp, plans: Sequence[ParallelPlan]):
+        if self.workers >= 2 and len(plans) > 1:
+            try:
+                exp_bytes = pickle.dumps(exp)
+            except Exception as e:   # e.g. lambda graph_builder
+                warnings.warn(
+                    f"experiment not picklable ({e}); sweeping serially",
+                    RuntimeWarning, stacklevel=3)
+            else:
+                n = min(self.workers, len(plans))
+                with ProcessPoolExecutor(
+                        max_workers=n,
+                        initializer=_init_worker,
+                        initargs=(exp_bytes,)) as pool:
+                    return list(pool.map(_eval_in_worker, plans)), f"process[{n}]"
+        graphs: Dict = {}
+        return [_evaluate(exp, plan, graphs) for plan in plans], "serial"

@@ -4,6 +4,7 @@ Paper: "PALM: A Efficient Performance Simulator for Tiled Accelerators
 with Large-scale Model Training" (Fang et al., 2024). See DESIGN.md.
 """
 
+from .enums import BoundaryMode, Layout, NoCMode, Schedule
 from .events import AllOf, AnyOf, Environment, Event, PriorityResource, Process, Resource, Timeout
 from .graph import (
     Attention,

@@ -30,6 +30,7 @@ import math
 from dataclasses import dataclass, field
 from typing import Dict, Generator, Iterable, List, Optional, Sequence, Tuple
 
+from .enums import NoCMode, coerce
 from .events import Environment, Resource
 from .hardware import HardwareSpec, Topology
 
@@ -69,13 +70,13 @@ def ring_time(kind: str, nbytes: float, p: int, bw: float, hop_latency: float,
 class NoCModel:
     """Event-driven NoC with pluggable fidelity."""
 
-    def __init__(self, env: Environment, hardware: HardwareSpec, mode: str = "detailed"):
-        if mode not in ("detailed", "macro", "analytical"):
-            raise ValueError(mode)
+    def __init__(self, env: Environment, hardware: HardwareSpec,
+                 mode: "NoCMode | str" = NoCMode.DETAILED):
+        # internal layer: coerce silently (the public entry points warn)
         self.env = env
         self.hw = hardware
         self.topo: Topology = hardware.topology
-        self.mode = mode
+        self.mode = coerce(NoCMode, mode, "mode", warn=False)
         self._links: Dict[int, Resource] = {}
         # instrumentation
         self.bytes_moved = 0.0
@@ -107,7 +108,7 @@ class NoCModel:
         self.transfer_count += 1
         route = self.topo.route(src, dst)
         t = self._path_time(route, nbytes)
-        if self.mode == "analytical" or not route:
+        if self.mode == NoCMode.ANALYTICAL or not route:
             yield self.env.timeout(t)
             return
         # deadlock-free acquisition: global link-id order
@@ -130,9 +131,9 @@ class NoCModel:
         if p <= 1 or nbytes <= 0:
             yield self.env.timeout(0.0)
             return
-        if self.mode == "detailed":
+        if self.mode == NoCMode.DETAILED:
             yield from self._collective_detailed(kind, list(group), nbytes, priority, root)
-        elif self.mode == "macro":
+        elif self.mode == NoCMode.MACRO:
             yield from self._collective_macro(kind, list(group), nbytes, priority, root)
         else:
             yield self.env.timeout(self._collective_closed_form(kind, list(group), nbytes, root))

@@ -6,21 +6,23 @@ event-driven simulator (the §V-B loop: "directly iterate parallelism
 strategies based on simulation results") and emit the best plan. The
 launchers consume the result to pick TP/DP/PP degrees, microbatch count,
 stage layout and comm strategy.
+
+Since the Experiment API landed this is a thin typed wrapper over
+:class:`repro.api.Experiment` + :class:`repro.api.SweepEngine`: plan
+enumeration lives in :class:`repro.api.SearchSpace`, evaluation in the
+(optionally process-parallel) sweep engine, and results come back as
+ranked :class:`repro.api.RunReport` objects (``.plan`` is the typed
+ParallelPlan, ``.throughput`` the simulated rate).
 """
 
 from __future__ import annotations
 
-import dataclasses
-import itertools
-import math
 from dataclasses import dataclass
-from typing import Callable, Iterable, List, Optional, Sequence
+from typing import List, Optional, Sequence, Union
 
 from ..configs.base import ArchConfig
+from .enums import Layout, NoCMode, Schedule
 from .hardware import HardwareSpec, tpu_v5e_pod
-from .parallelism import ParallelPlan
-from .simulator import PlanResult, simulate, sweep_plans
-from .workload import arch_to_graph
 
 __all__ = ["PlannerCfg", "plan_parallelism"]
 
@@ -30,62 +32,38 @@ class PlannerCfg:
     global_batch: int = 256
     seq_len: int = 4096
     training: bool = True
-    schedules: Sequence[str] = ("1f1b",)
-    layouts: Sequence[str] = ("s_shape", "line")
+    schedules: Sequence[Union[Schedule, str]] = (Schedule.ONE_F_ONE_B,)
+    layouts: Sequence[Union[Layout, str]] = (Layout.S_SHAPE, Layout.LINE)
     microbatch_sizes: Sequence[int] = (1, 2, 4)
     max_plans: int = 64
     memory_cap: Optional[float] = None     # bytes per tile
-    noc_mode: str = "macro"
-
-
-def _divisor_splits(n: int) -> List[tuple]:
-    """(pp, dp, tp) triples with pp*dp*tp == n."""
-    out = []
-    for pp in [d for d in range(1, n + 1) if n % d == 0]:
-        rest = n // pp
-        for dp in [d for d in range(1, rest + 1) if rest % d == 0]:
-            out.append((pp, dp, rest // dp))
-    return out
+    noc_mode: Union[NoCMode, str] = NoCMode.MACRO
+    workers: int = 0                       # 0 = serial; N = process pool
 
 
 def plan_parallelism(
     arch: ArchConfig,
     hardware: Optional[HardwareSpec] = None,
     cfg: PlannerCfg = PlannerCfg(),
-) -> List[PlanResult]:
+):
     """Sweep (pp, dp, tp, microbatch, layout, schedule) and rank by
-    simulated throughput. Returns sorted PlanResults (best first)."""
+    simulated throughput. Returns sorted RunReports (best first)."""
+    from ..api import Experiment, SearchSpace   # api builds on core
+
     hardware = hardware or tpu_v5e_pod()
-    n = hardware.num_devices
-
-    plans: List[ParallelPlan] = []
-    for (pp, dp, tp) in _divisor_splits(n):
-        if pp > max(1, arch.num_layers):
-            continue
-        if tp > max(arch.n_heads, arch.d_model // 64, 1):
-            continue
-        for b in cfg.microbatch_sizes:
-            if cfg.global_batch % (b * dp):
-                continue
-            for sched in (cfg.schedules if cfg.training else ("gpipe",)):
-                for layout in cfg.layouts:
-                    plans.append(ParallelPlan(
-                        pp=pp, dp=dp, tp=tp, microbatch=b,
-                        global_batch=cfg.global_batch, schedule=sched,
-                        layout=layout, training=cfg.training))
-    # budget: prefer diverse (pp, dp, tp) triples first
-    seen, pruned = set(), []
-    for p in plans:
-        key = (p.pp, p.dp, p.tp)
-        if key not in seen or len(pruned) < cfg.max_plans // 2:
-            pruned.append(p)
-            seen.add(key)
-        if len(pruned) >= cfg.max_plans:
-            break
-
-    def builder(plan: ParallelPlan):
-        return arch_to_graph(arch, cfg.seq_len, plan.microbatch * plan.dp,
-                             training=cfg.training)
-
-    return sweep_plans(builder, hardware, pruned, noc_mode=cfg.noc_mode,
-                       memory_cap=cfg.memory_cap)
+    exp = Experiment(
+        arch=arch,
+        hardware=hardware,
+        search=SearchSpace(
+            schedules=tuple(cfg.schedules),
+            layouts=tuple(cfg.layouts),
+            microbatch_sizes=tuple(cfg.microbatch_sizes),
+            max_plans=cfg.max_plans,
+        ),
+        seq_len=cfg.seq_len,
+        global_batch=cfg.global_batch,
+        training=cfg.training,
+        noc_mode=cfg.noc_mode,
+        memory_cap=cfg.memory_cap,
+    )
+    return exp.sweep(workers=cfg.workers).runs

@@ -24,13 +24,15 @@ from dataclasses import dataclass, field
 from typing import Dict, Generator, List, Optional, Tuple
 
 from .dram import DRAMModel
+from .enums import BoundaryMode, NoCMode, Schedule, coerce
 from .events import Environment, Event
 from .hardware import HardwareSpec
 from .noc import NoCModel
 from .parallelism import BD, FD, GU, MappedGraph, ParallelPlan, StageMapping
 from .sram import OpAccess, StageMemory, allocate_stage, stage_memory
 
-__all__ = ["SimResult", "PipelineSimulator", "ideal_pipeline_time"]
+__all__ = ["SimResult", "PipelineSimulator", "ideal_pipeline_time",
+           "decide_recompute", "estimate_stage_memory", "plan_memory"]
 
 
 @dataclass
@@ -61,6 +63,39 @@ def ideal_pipeline_time(fd_bd_per_stage: List[float], num_microbatches: int,
             + sum(fd_bd_per_stage) + gu_time)
 
 
+def decide_recompute(memory: List[StageMemory], plan: ParallelPlan,
+                     hardware: HardwareSpec) -> bool:
+    """Recompute decision (auto: recompute iff some stage's footprint
+    exceeds per-device DRAM capacity without it). Shared by the simulator
+    and the sweep engine's pre-simulation memory estimate so early pruning
+    sees exactly the memory the simulation would report."""
+    if plan.recompute == "always":
+        return True
+    if plan.recompute == "never":
+        return False
+    cap = hardware.dram.capacity_bytes
+    return any(m.total > cap for m in memory)
+
+
+def plan_memory(mapped: MappedGraph) -> Tuple[List[StageMemory], bool]:
+    """Per-stage memory of a mapped graph *before* simulation, with the
+    recompute decision applied — identical to ``SimResult.stage_memory``.
+    This is what makes memory-cap feasibility a pre-simulation check; the
+    result can be handed to :class:`PipelineSimulator` (``memory_plan``)
+    so a capped sweep sizes memory only once per plan."""
+    plan, hw = mapped.plan, mapped.hardware
+    memory = [stage_memory(st, plan, hw) for st in mapped.stages]
+    recompute = decide_recompute(memory, plan, hw)
+    if recompute:
+        for m in memory:
+            m.inflight_microbatches = 1  # only boundary acts retained
+    return memory, recompute
+
+
+def estimate_stage_memory(mapped: MappedGraph) -> List[StageMemory]:
+    return plan_memory(mapped)[0]
+
+
 class PipelineSimulator:
     """Runs one training iteration (or an inference pipeline) of a mapped
     graph and reports absolute time + throughput."""
@@ -68,18 +103,20 @@ class PipelineSimulator:
     def __init__(
         self,
         mapped: MappedGraph,
-        noc_mode: str = "macro",
+        noc_mode: "NoCMode | str" = NoCMode.MACRO,
         collect_timeline: bool = False,
-        boundary_mode: str = "pairwise",   # "pairwise" | "strategy"
+        boundary_mode: "BoundaryMode | str" = BoundaryMode.PAIRWISE,
+        memory_plan: Optional[Tuple[List[StageMemory], bool]] = None,
     ):
         self.mapped = mapped
         self.plan: ParallelPlan = mapped.plan
         self.hw: HardwareSpec = mapped.hardware
         self.env = Environment()
-        self.noc = NoCModel(self.env, self.hw, mode=noc_mode)
+        self.noc = NoCModel(self.env, self.hw,
+                            mode=coerce(NoCMode, noc_mode, "noc_mode"))
         self.dram = DRAMModel(self.env, self.hw, self.noc)
         self.collect_timeline = collect_timeline
-        self.boundary_mode = boundary_mode
+        self.boundary_mode = coerce(BoundaryMode, boundary_mode, "boundary_mode")
 
         S = mapped.num_stages
         M = self.plan.num_microbatches
@@ -92,18 +129,9 @@ class PipelineSimulator:
             self.act_ready[0][i].succeed()  # stage 0 fetches its own data
 
         # memory + recompute decision (auto: recompute iff footprint exceeds
-        # per-device DRAM capacity without it)
-        self.memory = [stage_memory(st, self.plan, self.hw) for st in mapped.stages]
-        if self.plan.recompute == "always":
-            self.recompute = True
-        elif self.plan.recompute == "never":
-            self.recompute = False
-        else:
-            cap = self.hw.dram.capacity_bytes
-            self.recompute = any(m.total > cap for m in self.memory)
-        if self.recompute:
-            for m in self.memory:
-                m.inflight_microbatches = 1  # only boundary acts retained
+        # per-device DRAM capacity without it); callers that already sized
+        # memory for feasibility pruning pass it in via ``memory_plan``
+        self.memory, self.recompute = memory_plan or plan_memory(mapped)
 
         self.access: List[List[OpAccess]] = [
             allocate_stage(st, self.plan, self.hw, recompute=self.recompute)
@@ -271,7 +299,7 @@ class PipelineSimulator:
         s_from = self.mapped.stages[src]
         s_to = self.mapped.stages[dst]
         nbytes = self.mapped.boundary_elems(min(src, dst)) * self.hw.precision_bytes
-        if self.boundary_mode == "strategy" and len(s_from.devices) > 1:
+        if self.boundary_mode == BoundaryMode.STRATEGY and len(s_from.devices) > 1:
             yield from self.noc.group_to_group(
                 s_from.devices, s_to.devices, nbytes,
                 strategy=self.plan.comm_strategy,
@@ -290,7 +318,7 @@ class PipelineSimulator:
         S, M = self.mapped.num_stages, self.plan.num_microbatches
         if not self.plan.training:
             return [(FD, i) for i in range(M)]
-        if self.plan.schedule == "gpipe":
+        if self.plan.schedule == Schedule.GPIPE:
             return [(FD, i) for i in range(M)] + [(BD, i) for i in range(M)]
         # 1F1B: warmup forwards, then strict BD-before-FD alternation
         w = min(S - sid, M)

@@ -5,19 +5,28 @@ computation graph on a hardware spec under a parallelism plan and returns
 absolute performance. ``sweep_plans`` is the planner loop the paper uses
 in §V-B: iterate parallelism strategies directly against simulation
 results — the capability the paper says existing simulators lack.
+
+These remain the low-level functional entry points; :mod:`repro.api`
+wraps them in the declarative :class:`~repro.api.Experiment` /
+:class:`~repro.api.SweepEngine` surface (typed enums, process-pool
+sweeps, JSON reports) which is the canonical front door.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import itertools
 from dataclasses import dataclass
-from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Callable, Iterable, List, Optional, Union
 
+from .enums import BoundaryMode, NoCMode, coerce
 from .graph import ComputationGraph
 from .hardware import HardwareSpec
 from .parallelism import MappedGraph, ParallelPlan, map_graph
-from .scheduler import PipelineSimulator, SimResult, ideal_pipeline_time
+from .scheduler import (
+    PipelineSimulator,
+    SimResult,
+    ideal_pipeline_time,
+    plan_memory,
+)
 
 __all__ = ["simulate", "sweep_plans", "PlanResult"]
 
@@ -26,12 +35,14 @@ def simulate(
     graph: ComputationGraph,
     hardware: HardwareSpec,
     plan: ParallelPlan,
-    noc_mode: str = "macro",
+    noc_mode: Union[NoCMode, str] = NoCMode.MACRO,
     collect_timeline: bool = False,
-    boundary_mode: str = "pairwise",
+    boundary_mode: Union[BoundaryMode, str] = BoundaryMode.PAIRWISE,
 ) -> SimResult:
     """Run PALM once. ``graph`` must be built with per-iteration batch
     ``plan.microbatch * plan.dp`` (the DP group's micro-batch)."""
+    noc_mode = coerce(NoCMode, noc_mode, "noc_mode")
+    boundary_mode = coerce(BoundaryMode, boundary_mode, "boundary_mode")
     mapped = map_graph(graph, hardware, plan)
     sim = PipelineSimulator(mapped, noc_mode=noc_mode,
                             collect_timeline=collect_timeline,
@@ -53,20 +64,25 @@ def sweep_plans(
     graph_builder: Callable[[ParallelPlan], ComputationGraph],
     hardware: HardwareSpec,
     plans: Iterable[ParallelPlan],
-    noc_mode: str = "macro",
+    noc_mode: Union[NoCMode, str] = NoCMode.MACRO,
     memory_cap: Optional[float] = None,
 ) -> List[PlanResult]:
     """Evaluate many parallelism strategies; returns results sorted by
     throughput (best first). Plans whose per-tile footprint exceeds
-    ``memory_cap`` are dropped (the paper's capacity feasibility check)."""
+    ``memory_cap`` are dropped (the paper's capacity feasibility check)
+    *before* simulation: the footprint is a property of the mapped graph,
+    so infeasible plans cost a mapping, not a full event-driven run."""
+    noc_mode = coerce(NoCMode, noc_mode, "noc_mode")
     out: List[PlanResult] = []
     for plan in plans:
         graph = graph_builder(plan)
-        res = simulate(graph, hardware, plan, noc_mode=noc_mode)
+        mapped = map_graph(graph, hardware, plan)
+        mem_plan = None
         if memory_cap is not None:
-            worst = max(m.total for m in res.stage_memory)
-            if worst > memory_cap:
+            mem_plan = plan_memory(mapped)
+            if max(m.total for m in mem_plan[0]) > memory_cap:
                 continue
-        out.append(PlanResult(plan=plan, result=res))
+        sim = PipelineSimulator(mapped, noc_mode=noc_mode, memory_plan=mem_plan)
+        out.append(PlanResult(plan=plan, result=sim.run()))
     out.sort(key=lambda r: -r.throughput)
     return out

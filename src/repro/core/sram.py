@@ -30,6 +30,7 @@ import math
 from dataclasses import dataclass
 from typing import List, Optional
 
+from .enums import Schedule
 from .hardware import HardwareSpec
 from .parallelism import ParallelPlan, SplitOp, StageMapping
 
@@ -214,7 +215,7 @@ def stage_memory(stage: StageMapping, plan: ParallelPlan, hardware: HardwareSpec
     S = plan.pp
     if not plan.training:
         inflight = 1
-    elif plan.schedule == "gpipe":
+    elif plan.schedule == Schedule.GPIPE:
         inflight = num_mb
     else:  # 1f1b
         inflight = min(max(1, S - stage.stage_id), num_mb)

@@ -1,5 +1,6 @@
 """Serving runtime: batched prefill + decode with sharded KV/SSM caches."""
 
-from .serve import make_prefill_step, make_serve_step, greedy_generate
+from .serve import make_prefill_step, make_serve_step, greedy_generate, plan_serving
 
-__all__ = ["make_prefill_step", "make_serve_step", "greedy_generate"]
+__all__ = ["make_prefill_step", "make_serve_step", "greedy_generate",
+           "plan_serving"]

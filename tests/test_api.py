@@ -1,0 +1,215 @@
+"""Unified Experiment API: enum coercion, validation, report round-trip,
+sweep-engine parity (serial vs process pool vs legacy sweep_plans)."""
+
+import pytest
+
+from repro.api import (
+    BoundaryMode,
+    Experiment,
+    Layout,
+    NoCMode,
+    ParallelPlan,
+    RunReport,
+    Schedule,
+    SearchSpace,
+    SweepEngine,
+    SweepReport,
+    resolve_hardware,
+)
+from repro.core import simulate, sweep_plans, transformer_lm_graph, tpu_v5e_pod
+from repro.core.enums import coerce
+
+
+# ---------------------------------------------------------------------------
+# enum coercion (legacy strings accepted with DeprecationWarning)
+# ---------------------------------------------------------------------------
+
+def test_coerce_accepts_enum_silently():
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert coerce(Schedule, Schedule.GPIPE, "schedule") is Schedule.GPIPE
+
+
+@pytest.mark.parametrize("cls,raw,member", [
+    (Schedule, "1f1b", Schedule.ONE_F_ONE_B),
+    (Schedule, "gpipe", Schedule.GPIPE),
+    (Layout, "s_shape", Layout.S_SHAPE),
+    (Layout, "line", Layout.LINE),
+    (NoCMode, "macro", NoCMode.MACRO),
+    (BoundaryMode, "strategy", BoundaryMode.STRATEGY),
+])
+def test_coerce_legacy_string_warns(cls, raw, member):
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        assert coerce(cls, raw, "x") is member
+
+
+def test_coerce_unknown_string_raises():
+    with pytest.raises(ValueError, match="unknown schedule"):
+        coerce(Schedule, "one_f_one_b", "schedule")
+
+
+def test_parallel_plan_coerces_legacy_strings():
+    with pytest.warns(DeprecationWarning):
+        plan = ParallelPlan(schedule="gpipe", layout="line")
+    assert plan.schedule is Schedule.GPIPE
+    assert plan.layout is Layout.LINE
+    # str-subclass enums keep legacy comparisons working
+    assert plan.schedule == "gpipe"
+
+
+def test_simulate_coerces_legacy_noc_mode():
+    g = transformer_lm_graph("t", 2, 128, 4, seq_len=64, batch=1, vocab=256)
+    hw = tpu_v5e_pod(2, 2)
+    with pytest.warns(DeprecationWarning):
+        res = simulate(g, hw, ParallelPlan(global_batch=2), noc_mode="macro")
+    assert res.throughput > 0
+
+
+def test_unknown_schedule_string_raises_in_plan():
+    with pytest.raises(ValueError, match="unknown schedule"):
+        ParallelPlan(schedule="2f2b")
+
+
+# ---------------------------------------------------------------------------
+# Experiment validation
+# ---------------------------------------------------------------------------
+
+def test_experiment_requires_plan_or_search():
+    with pytest.raises(ValueError, match="plan.*or.*search"):
+        Experiment(arch="yi-6b")
+    with pytest.raises(ValueError, match="not both"):
+        Experiment(arch="yi-6b", plan=ParallelPlan(),
+                   search=SearchSpace())
+
+
+def test_experiment_rejects_bad_factorization():
+    hw = tpu_v5e_pod(2, 2)      # 4 devices
+    with pytest.raises(ValueError, match="needs 8 devices"):
+        Experiment(arch="yi-6b", hardware=hw,
+                   plan=ParallelPlan(pp=2, dp=2, tp=2, global_batch=4))
+
+
+def test_experiment_rejects_bad_batch_split():
+    hw = tpu_v5e_pod(2, 2)
+    with pytest.raises(ValueError, match="not divisible"):
+        Experiment(arch="yi-6b", hardware=hw,
+                   plan=ParallelPlan(pp=1, dp=2, tp=2, microbatch=2,
+                                     global_batch=6))
+
+
+def test_experiment_rejects_unknown_names():
+    with pytest.raises(KeyError, match="unknown arch"):
+        Experiment(arch="not-a-model", plan=ParallelPlan())
+    with pytest.raises(ValueError, match="unknown hardware preset"):
+        Experiment(arch="yi-6b", hardware="cerebras-42", plan=ParallelPlan())
+
+
+def test_search_space_rejects_oversubscribed_degrees():
+    hw = tpu_v5e_pod(2, 2)
+    space = SearchSpace(degrees=[(2, 2, 2)])
+    with pytest.raises(ValueError, match="needs 8"):
+        space.enumerate_plans(hw, global_batch=8)
+
+
+def test_resolve_hardware_presets():
+    assert resolve_hardware("grayskull").name == "grayskull"
+    assert resolve_hardware("a100x16").num_devices == 16
+    assert resolve_hardware("tpu_v5e_2x2").num_devices == 4
+
+
+# ---------------------------------------------------------------------------
+# report JSON round-trip
+# ---------------------------------------------------------------------------
+
+def _tiny_experiment(**kw):
+    defaults = dict(
+        arch="yi-6b",
+        hardware=tpu_v5e_pod(2, 2),
+        seq_len=128,
+        global_batch=8,
+    )
+    defaults.update(kw)
+    return Experiment(**defaults)
+
+
+def test_run_report_json_round_trip():
+    exp = _tiny_experiment(plan=ParallelPlan(pp=2, dp=2, tp=1, global_batch=8))
+    rep = exp.run()
+    back = RunReport.from_json(rep.to_json())
+    assert back == rep
+    assert isinstance(back.plan, ParallelPlan)
+    assert back.plan.schedule is Schedule.ONE_F_ONE_B
+    assert back.throughput == rep.throughput
+
+
+def test_sweep_report_json_round_trip():
+    exp = _tiny_experiment(search=SearchSpace(
+        max_plans=4, microbatch_sizes=(1,), layouts=(Layout.S_SHAPE,)))
+    rep = exp.sweep()
+    assert rep.runs
+    back = SweepReport.from_json(rep.to_json())
+    assert back == rep
+
+
+# ---------------------------------------------------------------------------
+# sweep engine: parity + pruning
+# ---------------------------------------------------------------------------
+
+def test_sweep_engine_serial_matches_process_pool():
+    exp = _tiny_experiment(search=SearchSpace(
+        max_plans=6, microbatch_sizes=(1, 2)))
+    serial = exp.sweep(workers=0)
+    pooled = exp.sweep(workers=2)
+    assert serial.runs, "sweep produced no feasible plans"
+    assert [r.plan for r in serial.runs] == [r.plan for r in pooled.runs]
+    assert [r.throughput for r in serial.runs] == \
+           [r.throughput for r in pooled.runs]
+    assert pooled.executor.startswith("process")
+
+
+def test_sweep_engine_matches_legacy_sweep_plans():
+    """Acceptance: a >= 24-plan search space ranked by the process-pool
+    SweepEngine reproduces the legacy serial sweep_plans ranking."""
+    exp = _tiny_experiment(
+        global_batch=16,
+        search=SearchSpace(max_plans=48, microbatch_sizes=(1, 2, 4),
+                           tp_contiguous=(True, False)))
+    plans = exp.search.enumerate_plans(exp.hardware_spec, exp.global_batch,
+                                       training=True, arch=exp.arch_config)
+    assert len(plans) >= 24
+    legacy = sweep_plans(exp.build_graph, exp.hardware_spec, plans,
+                         noc_mode=NoCMode.MACRO)
+    engine = SweepEngine(workers=2).sweep(exp, plans)
+    assert engine.executor.startswith("process")
+    assert [r.plan for r in legacy] == [r.plan for r in engine.runs]
+    assert [r.throughput for r in legacy] == \
+           pytest.approx([r.throughput for r in engine.runs])
+
+
+def test_memory_cap_prunes_before_simulation():
+    exp = _tiny_experiment(search=SearchSpace(
+        max_plans=6, microbatch_sizes=(1, 2)))
+    base = exp.sweep()
+    mems = sorted(r.peak_memory_bytes for r in base.runs)
+    cap = mems[len(mems) // 2]          # prune the top half
+    capped = exp.with_(memory_cap=cap).sweep()
+    assert capped.num_pruned_memory > 0
+    assert all(r.peak_memory_bytes <= cap for r in capped.runs)
+    # parity with the legacy post-hoc filter: same surviving ranking
+    expect = [r.plan for r in base.runs if r.peak_memory_bytes <= cap]
+    assert [r.plan for r in capped.runs] == expect
+
+
+def test_graph_builder_experiments_sweep_serially():
+    exp = Experiment(
+        graph_builder=lambda p: transformer_lm_graph(
+            "t", 2, 128, 4, seq_len=64, batch=p.microbatch * p.dp, vocab=256),
+        hardware=tpu_v5e_pod(2, 2),
+        search=SearchSpace(max_plans=3, microbatch_sizes=(1,),
+                           layouts=(Layout.S_SHAPE,)),
+        global_batch=4,
+    )
+    with pytest.warns(RuntimeWarning, match="not picklable"):
+        rep = exp.sweep(workers=2)     # lambda builder -> serial fallback
+    assert rep.runs and rep.executor == "serial"

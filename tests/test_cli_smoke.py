@@ -1,0 +1,66 @@
+"""Smoke tests: the ``python -m repro`` CLI and the quickstart example
+run end-to-end on tiny configs (satellite of the Experiment API PR)."""
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+ENV = {**os.environ,
+       "PYTHONPATH": str(ROOT / "src") + os.pathsep + os.environ.get("PYTHONPATH", "")}
+
+
+def _run(args, timeout=300):
+    return subprocess.run([sys.executable, *args], capture_output=True,
+                          text=True, env=ENV, cwd=ROOT, timeout=timeout)
+
+
+def test_cli_simulate_tiny():
+    proc = _run(["-m", "repro", "simulate", "--arch", "yi-6b",
+                 "--hardware", "tpu_v5e_2x2", "--pp", "2", "--dp", "2",
+                 "--global-batch", "8", "--seq-len", "128", "--json", "-"])
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    payload = json.loads(proc.stdout[proc.stdout.index("{"):])
+    assert payload["arch"] == "yi-6b"
+    assert payload["throughput"] > 0
+    assert payload["plan"]["pp"] == 2
+
+
+def test_cli_sweep_tiny(tmp_path):
+    out = tmp_path / "sweep.json"
+    proc = _run(["-m", "repro", "sweep", "--arch", "yi-6b",
+                 "--hardware", "tpu_v5e_2x2", "--global-batch", "16",
+                 "--seq-len", "128", "--max-plans", "6",
+                 "--microbatch-sizes", "1", "2", "--workers", "2",
+                 "--json", str(out)])
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    report = json.loads(out.read_text())
+    assert report["executor"].startswith("process")
+    thpts = [r["throughput"] for r in report["runs"]]
+    assert thpts == sorted(thpts, reverse=True) and thpts
+
+
+def test_cli_plan_tiny():
+    proc = _run(["-m", "repro", "plan", "--arch", "yi-6b",
+                 "--hardware", "tpu_v5e_2x2", "--global-batch", "16",
+                 "--seq-len", "128", "--max-plans", "4"])
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "best plan for yi-6b" in proc.stdout
+
+
+def test_cli_rejects_unknown_enum_value():
+    proc = _run(["-m", "repro", "simulate", "--arch", "yi-6b",
+                 "--schedule", "2f2b"])
+    assert proc.returncode != 0
+    assert "invalid choice" in proc.stderr or "invalid" in proc.stderr
+
+
+@pytest.mark.slow
+def test_quickstart_tiny_runs():
+    proc = _run([str(ROOT / "examples" / "quickstart.py"), "--tiny"])
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "planner ranking" in proc.stdout

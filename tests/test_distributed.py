@@ -19,8 +19,19 @@ SCRIPT = textwrap.dedent("""
     import json, dataclasses
     import jax, jax.numpy as jnp
     import numpy as np
-    from jax.sharding import AxisType, PartitionSpec as P
+    from jax.sharding import PartitionSpec as P
     from jax.experimental.shard_map import shard_map
+
+    # jax.sharding.AxisType landed after 0.4.x; older JAX meshes are
+    # implicitly Auto, so just drop the kwarg there.
+    try:
+        from jax.sharding import AxisType
+        def make_mesh(shape, names):
+            return jax.make_mesh(shape, names,
+                                 axis_types=(AxisType.Auto,) * len(names))
+    except ImportError:
+        def make_mesh(shape, names):
+            return jax.make_mesh(shape, names)
 
     from repro.configs import get_config
     from repro.launch.train import scale_arch
@@ -32,8 +43,7 @@ SCRIPT = textwrap.dedent("""
     from repro.parallel.pipeline import pipeline_apply
 
     out = {}
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 4), ("data", "model"))
 
     # 1) sharded train step matches single-device numerics
     arch = scale_arch(get_config("yi-6b"), "tiny")
@@ -60,15 +70,14 @@ SCRIPT = textwrap.dedent("""
     out["param_max_diff"] = diff
 
     # 2) elastic reshard onto a smaller mesh
-    small = jax.make_mesh((2, 2), ("data", "model"),
-                          axis_types=(AxisType.Auto,) * 2)
+    small = make_mesh((2, 2), ("data", "model"))
     state = elastic_reshard({"params": p2, "opt_state": o2}, arch, small)
     d2 = max(float(np.max(np.abs(np.asarray(a, np.float32) - np.asarray(b, np.float32))))
              for a, b in zip(jax.tree.leaves(p2), jax.tree.leaves(state["params"])))
     out["reshard_diff"] = d2
 
     # 3) compressed psum ~= exact psum
-    pod_mesh = jax.make_mesh((8,), ("pod",), axis_types=(AxisType.Auto,))
+    pod_mesh = make_mesh((8,), ("pod",))
     x = jax.random.normal(jax.random.PRNGKey(1), (8, 512))
     exact = shard_map(lambda v: jax.lax.psum(v, "pod"), mesh=pod_mesh,
                       in_specs=P("pod"), out_specs=P("pod"))(x)
@@ -79,7 +88,7 @@ SCRIPT = textwrap.dedent("""
 
     # 4) shard_map GPipe pipeline == sequential stage application
     S, G, B, H = 4, 6, 2, 16
-    stage_mesh = jax.make_mesh((4,), ("pod",), axis_types=(AxisType.Auto,))
+    stage_mesh = make_mesh((4,), ("pod",))
     ks = jax.random.split(jax.random.PRNGKey(2), S)
     stage_w = jnp.stack([jax.random.normal(k, (H, H)) / jnp.sqrt(H) for k in ks])
     mbs = jax.random.normal(jax.random.PRNGKey(3), (G, B, H))
