@@ -3,28 +3,49 @@
 One typed entry point for the three workflows the repo exposes:
 
 * **simulate** — ``Experiment(arch=..., plan=ParallelPlan(...)).run()``
-* **sweep**    — ``Experiment(arch=..., search=SearchSpace(...)).sweep()``
+* **sweep**    — ``Experiment(arch=..., search=SearchSpace(...)).sweep()``,
+  optionally crossed with a :class:`HardwareSearchSpace` to rank
+  hardware x parallelism points (the paper's §VI exploration)
 * **plan**     — :func:`repro.core.planner.plan_parallelism` (built on the
   same engine), or ``python -m repro plan`` from the shell.
 
-Strings like ``schedule="1f1b"`` are replaced by typed enums
-(:class:`Schedule`, :class:`Layout`, :class:`NoCMode`,
-:class:`BoundaryMode`); legacy strings are coerced with a
-DeprecationWarning for one release. Results come back as JSON-round-trip
+Configuration is fully typed: enums (:class:`Schedule`, :class:`Layout`,
+:class:`NoCMode`, :class:`BoundaryMode`) for modes, declarative
+serializable :class:`HardwareSpec` for machines (presets are data —
+dump one with ``python -m repro hardware``, tweak the JSON, load it with
+``--hardware-json``). Results come back as JSON-round-trip
 :class:`RunReport` / :class:`SweepReport` dataclasses.
 """
 
 from ..core.enums import BoundaryMode, Layout, NoCMode, Schedule
+from ..core.hardware import (
+    GPUClusterSpec,
+    HardwareSpec,
+    HierarchicalSpec,
+    MeshSpec,
+    TopologySpec,
+)
 from ..core.parallelism import ParallelPlan
-from .experiment import Experiment, HARDWARE_PRESETS, SearchSpace, resolve_hardware
+from .experiment import (
+    Experiment,
+    HARDWARE_PRESETS,
+    HardwareSearchSpace,
+    SearchSpace,
+    resolve_hardware,
+)
 from .report import RunReport, SweepReport, plan_from_dict, plan_to_dict
 from .sweep import SweepEngine
 
 __all__ = [
     "BoundaryMode",
     "Experiment",
+    "GPUClusterSpec",
     "HARDWARE_PRESETS",
+    "HardwareSearchSpace",
+    "HardwareSpec",
+    "HierarchicalSpec",
     "Layout",
+    "MeshSpec",
     "NoCMode",
     "ParallelPlan",
     "RunReport",
@@ -32,6 +53,7 @@ __all__ = [
     "SearchSpace",
     "SweepEngine",
     "SweepReport",
+    "TopologySpec",
     "plan_from_dict",
     "plan_to_dict",
     "resolve_hardware",

@@ -1,14 +1,21 @@
-"""``python -m repro`` — simulate / sweep / plan from the shell.
+"""``python -m repro`` — simulate / sweep / plan / hardware from the shell.
 
     python -m repro simulate --arch yi-6b --hardware wafer_scale \
         --pp 4 --dp 2 --tp 2 --global-batch 64
     python -m repro sweep --arch yi-6b --hardware grayskull \
         --global-batch 64 --max-plans 24 --workers 4 --json sweep.json
+    python -m repro sweep --arch yi-6b --hardware wafer_scale \
+        --hw-flops 8e12 16e12 --hw-mesh 4x4 5x4 --global-batch 64
     python -m repro plan --arch dbrx-132b --hardware wafer_scale
+    python -m repro hardware --hardware wafer_scale > wafer.json
+    python -m repro simulate --arch yi-6b --hardware-json wafer.json ...
 
 Every enum-valued flag takes the typed values (``--schedule 1f1b``,
-``--noc-mode macro``); outputs are the RunReport / SweepReport JSON
-documents when ``--json`` is given, human tables otherwise.
+``--noc-mode macro``); hardware is a preset name, an ``a100x<N>`` /
+``tpu_v5e_<R>x<C>`` parameterized name, or a ``--hardware-json`` file
+(the schema ``python -m repro hardware`` emits). Outputs are the
+RunReport / SweepReport JSON documents when ``--json`` is given, human
+tables otherwise.
 """
 
 from __future__ import annotations
@@ -17,22 +24,60 @@ import argparse
 import json
 import sys
 from pathlib import Path
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 from ..configs import list_archs
 from ..core.enums import BoundaryMode, Layout, NoCMode, Schedule
+from ..core.hardware import HardwareSpec
 from ..core.parallelism import ParallelPlan
-from .experiment import Experiment, HARDWARE_PRESETS, SearchSpace
+from .experiment import (
+    Experiment,
+    HARDWARE_PRESETS,
+    HardwareSearchSpace,
+    SearchSpace,
+    resolve_hardware,
+)
 
 __all__ = ["main"]
+
+
+def _mesh_shape(s: str) -> Tuple[int, int]:
+    try:
+        r, c = s.lower().split("x")
+        return (int(r), int(c))
+    except ValueError:
+        raise argparse.ArgumentTypeError(f"mesh shape must be RxC, got {s!r}")
+
+
+def _add_hardware(ap: argparse.ArgumentParser) -> None:
+    ap.add_argument("--hardware", default="wafer_scale",
+                    help=f"preset: {', '.join(sorted(HARDWARE_PRESETS))}, "
+                         "a100x<N>, or tpu_v5e_<R>x<C>")
+    ap.add_argument("--hardware-json", type=Path, default=None, metavar="FILE",
+                    help="load the HardwareSpec from this JSON file "
+                         "(overrides --hardware; schema: "
+                         "`python -m repro hardware`)")
+    ap.add_argument("--d-model", type=int, default=None,
+                    help="calibrate the a100 sustained-GEMM efficiency curve "
+                         "at this hidden size (a100x<N> only)")
+
+
+def _resolve_hardware_args(args) -> "HardwareSpec | str":
+    if args.hardware_json is not None:
+        if args.d_model is not None:
+            raise ValueError("--d-model calibrates the a100x<N> preset; it "
+                             "cannot recalibrate a --hardware-json file")
+        return HardwareSpec.from_json(args.hardware_json.read_text())
+    if args.d_model is not None:
+        return resolve_hardware(args.hardware, d_model=args.d_model)
+    return args.hardware
 
 
 def _add_common(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--arch", required=True,
                     help=f"arch-config name (e.g. {', '.join(list_archs()[:3])}, "
                          "T-18B, ...)")
-    ap.add_argument("--hardware", default="wafer_scale",
-                    help=f"preset: {', '.join(sorted(HARDWARE_PRESETS))} or a100x<N>")
+    _add_hardware(ap)
     ap.add_argument("--seq-len", type=int, default=2048)
     ap.add_argument("--global-batch", type=int, default=256)
     ap.add_argument("--inference", action="store_true",
@@ -63,11 +108,54 @@ def _add_sweep_flags(ap: argparse.ArgumentParser) -> None:
                     choices=list(Schedule), default=[Schedule.ONE_F_ONE_B])
     ap.add_argument("--layouts", type=Layout, nargs="+",
                     choices=list(Layout), default=[Layout.S_SHAPE, Layout.LINE])
+    ap.add_argument("--interleave", type=int, nargs="+", default=[1],
+                    help="virtual-stage degrees (interleaved 1F1B)")
+    ap.add_argument("--zero-stages", type=int, nargs="+", default=[0],
+                    choices=[0, 1, 2, 3], help="ZeRO optimizer-sharding stages")
+    ap.add_argument("--comm-strategies", type=int, nargs="+", default=[1],
+                    choices=[1, 2],
+                    help="inter-tile-group boundary strategies (Fig. 11; "
+                         "needs --boundary-mode strategy to differ)")
     ap.add_argument("--memory-cap", type=float, default=None,
                     help="bytes per tile; infeasible plans pruned pre-simulation")
     ap.add_argument("--workers", type=int, default=0,
                     help="0 = serial, N = process pool of N, -1 = all cores")
     ap.add_argument("--top", type=int, default=10)
+    hw = ap.add_argument_group(
+        "hardware search (cross the plan sweep with hardware variants)")
+    hw.add_argument("--hw-flops", type=float, nargs="+", default=[],
+                    help="per-tile peak FLOP/s values to sweep")
+    hw.add_argument("--hw-sram", type=float, nargs="+", default=[],
+                    help="per-tile SRAM bytes to sweep")
+    hw.add_argument("--hw-intra-bw", type=float, nargs="+", default=[],
+                    help="intra-tile NoC bandwidths (bytes/s) to sweep")
+    hw.add_argument("--hw-inter-bw", type=float, nargs="+", default=[],
+                    help="inter-tile NoC bandwidths (bytes/s) to sweep")
+    hw.add_argument("--hw-mesh", type=_mesh_shape, nargs="+", default=[],
+                    metavar="RxC", help="mesh shapes to sweep (e.g. 8x8 16x16)")
+    hw.add_argument("--hw-dram-channels", type=int, nargs="+", default=[],
+                    help="DRAM channel counts to sweep")
+    hw.add_argument("--hw-dram-bw", type=float, nargs="+", default=[],
+                    help="DRAM channel bandwidths (bytes/s) to sweep")
+    hw.add_argument("--hw-max-specs", type=int, default=32,
+                    help="cap on enumerated hardware variants")
+
+
+def _hardware_search(args) -> Optional[HardwareSearchSpace]:
+    space = HardwareSearchSpace(
+        tile_flops=tuple(args.hw_flops),
+        sram_bytes=tuple(args.hw_sram),
+        intra_bw=tuple(args.hw_intra_bw),
+        inter_bw=tuple(args.hw_inter_bw),
+        mesh_shapes=tuple(args.hw_mesh),
+        dram_channels=tuple(args.hw_dram_channels),
+        dram_bandwidth=tuple(args.hw_dram_bw),
+        max_specs=args.hw_max_specs,
+    )
+    has_axes = any((space.tile_flops, space.sram_bytes, space.intra_bw,
+                    space.inter_bw, space.mesh_shapes, space.dram_channels,
+                    space.dram_bandwidth))
+    return space if has_axes else None
 
 
 def _emit(report, json_target: Optional[Path]) -> None:
@@ -87,8 +175,9 @@ def _cmd_simulate(args) -> int:
                         global_batch=args.global_batch,
                         schedule=args.schedule, layout=args.layout,
                         training=not args.inference)
-    exp = Experiment(arch=args.arch, hardware=args.hardware, plan=plan,
-                     seq_len=args.seq_len, global_batch=args.global_batch,
+    exp = Experiment(arch=args.arch, hardware=_resolve_hardware_args(args),
+                     plan=plan, seq_len=args.seq_len,
+                     global_batch=args.global_batch,
                      training=not args.inference, noc_mode=args.noc_mode,
                      boundary_mode=args.boundary_mode)
     report = exp.run()
@@ -101,8 +190,12 @@ def _make_sweep_experiment(args) -> Experiment:
     search = SearchSpace(schedules=tuple(args.schedules),
                          layouts=tuple(args.layouts),
                          microbatch_sizes=tuple(args.microbatch_sizes),
+                         interleave=tuple(args.interleave),
+                         zero_stages=tuple(args.zero_stages),
+                         comm_strategies=tuple(args.comm_strategies),
                          max_plans=args.max_plans)
-    return Experiment(arch=args.arch, hardware=args.hardware, search=search,
+    return Experiment(arch=args.arch, hardware=_resolve_hardware_args(args),
+                      search=search, hardware_search=_hardware_search(args),
                       seq_len=args.seq_len, global_batch=args.global_batch,
                       training=not args.inference, noc_mode=args.noc_mode,
                       boundary_mode=args.boundary_mode,
@@ -112,8 +205,10 @@ def _make_sweep_experiment(args) -> Experiment:
 def _cmd_sweep(args) -> int:
     exp = _make_sweep_experiment(args)
     report = exp.sweep(workers=None if args.workers < 0 else args.workers)
+    hw_note = (f", {report.num_hardware} hardware variants"
+               if report.num_hardware > 1 else "")
     print(f"== sweep: {report.arch} on {report.hardware} "
-          f"({report.executor}; {report.num_candidates} candidates, "
+          f"({report.executor}; {report.num_candidates} candidates{hw_note}, "
           f"{report.num_pruned_memory} memory-pruned, "
           f"{report.num_failed} failed) ==")
     print(report.table(top=args.top))
@@ -130,11 +225,26 @@ def _cmd_plan(args) -> int:
         return 1
     p = best.plan
     print(f"best plan for {report.arch} on {report.hardware}:")
+    if report.num_hardware > 1:
+        print(f"  hardware: {best.hardware}")
     print(f"  pp={p.pp} dp={p.dp} tp={p.tp} microbatch={p.microbatch} "
           f"schedule={p.schedule} layout={p.layout}")
     print(f"  -> {best.throughput:.3f} samples/s, bubble {best.bubble_ratio:.1%}, "
           f"peak memory {best.peak_memory_bytes / 1e9:.2f} GB/tile")
     _emit(best if args.best_only else report, args.json)
+    return 0
+
+
+def _cmd_hardware(args) -> int:
+    """Dump a resolved HardwareSpec as JSON (the --hardware-json schema)."""
+    hw = _resolve_hardware_args(args)
+    spec = resolve_hardware(hw) if isinstance(hw, str) else hw
+    text = spec.to_json(indent=2)
+    if args.json is None or str(args.json) == "-":
+        print(text)
+    else:
+        args.json.write_text(text + "\n")
+        print(f"[hardware spec written to {args.json}]", file=sys.stderr)
     return 0
 
 
@@ -149,7 +259,7 @@ def main(argv: Optional[List[str]] = None) -> int:
     _add_plan_flags(sim)
     sim.set_defaults(fn=_cmd_simulate)
 
-    swp = sub.add_parser("sweep", help="rank a parallelism search space")
+    swp = sub.add_parser("sweep", help="rank a (hardware x) parallelism search space")
     _add_common(swp)
     _add_sweep_flags(swp)
     swp.set_defaults(fn=_cmd_sweep)
@@ -160,6 +270,14 @@ def main(argv: Optional[List[str]] = None) -> int:
     pln.add_argument("--best-only", action="store_true",
                      help="with --json, write only the best RunReport")
     pln.set_defaults(fn=_cmd_plan)
+
+    hwc = sub.add_parser(
+        "hardware",
+        help="dump a hardware preset as tweakable --hardware-json JSON")
+    _add_hardware(hwc)
+    hwc.add_argument("--json", type=Path, default=None, metavar="FILE",
+                     help="write the spec here instead of stdout")
+    hwc.set_defaults(fn=_cmd_hardware)
 
     args = ap.parse_args(argv)
     try:

@@ -2,11 +2,13 @@
 
 An :class:`Experiment` names a workload (an arch-config registry entry or
 an explicit :class:`ArchConfig` / :class:`ComputationGraph`), a hardware
-spec (preset name or instance), and either one fixed
-:class:`ParallelPlan` or a typed :class:`SearchSpace` to sweep. It
-validates eagerly — bad pp/dp/tp factorizations, unknown schedules, or
-unsatisfiable batch settings fail before any simulation starts — which is
-what makes thousand-point sweeps practical.
+spec (preset name, :class:`HardwareSpec`, or a ``--hardware-json`` file),
+and either one fixed :class:`ParallelPlan` or a typed :class:`SearchSpace`
+to sweep — optionally crossed with a :class:`HardwareSearchSpace` so one
+sweep ranks hardware x parallelism points (the paper's §VI hardware
+exploration). It validates eagerly — bad pp/dp/tp factorizations, unknown
+schedules, or unsatisfiable batch settings fail before any simulation
+starts — which is what makes thousand-point sweeps practical.
 
     from repro.api import Experiment, SearchSpace, Schedule
 
@@ -20,47 +22,58 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import itertools
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional, Sequence, Tuple, Union
 
 from ..configs import get_config
 from ..configs.base import ArchConfig
-from ..core.enums import BoundaryMode, Layout, NoCMode, Schedule, coerce
+from ..core.enums import BoundaryMode, Layout, NoCMode, Schedule
 from ..core.graph import ComputationGraph
 from ..core.hardware import (
+    HARDWARE_PRESETS,
+    GPUClusterSpec,
     HardwareSpec,
+    HierarchicalSpec,
+    MeshSpec,
+    TopologySpec,
     a100_cluster,
-    grayskull,
     tpu_v5e_pod,
-    wafer_scale,
 )
 from ..core.parallelism import ParallelPlan
 from ..core.workload import arch_to_graph
 from .report import RunReport, SweepReport
 
-__all__ = ["Experiment", "SearchSpace", "resolve_hardware", "HARDWARE_PRESETS"]
-
-HARDWARE_PRESETS = {
-    "grayskull": grayskull,
-    "wafer_scale": wafer_scale,
-    "tpu_v5e": tpu_v5e_pod,
-}
+__all__ = ["Experiment", "SearchSpace", "HardwareSearchSpace",
+           "resolve_hardware", "HARDWARE_PRESETS"]
 
 
-def resolve_hardware(hw: Union[str, HardwareSpec]) -> HardwareSpec:
+def resolve_hardware(hw: Union[str, HardwareSpec],
+                     d_model: Optional[int] = None) -> HardwareSpec:
     """Accept a HardwareSpec or a preset name (``a100x<N>`` builds a GPU
-    cluster of N devices)."""
+    cluster of N devices, ``tpu_v5e_<R>x<C>`` a pod slice).
+
+    ``d_model`` selects the point on the a100 sustained-GEMM efficiency
+    curve (cuBLAS efficiency grows with matrix size); it is only
+    meaningful for ``a100x<N>`` names.
+    """
     if isinstance(hw, HardwareSpec):
+        if d_model is not None:
+            raise ValueError("d_model calibration applies to the a100x<N> "
+                             "preset name, not an explicit HardwareSpec")
         return hw
     if not isinstance(hw, str):
         raise TypeError(f"hardware must be HardwareSpec or str, got {type(hw).__name__}")
-    if hw in HARDWARE_PRESETS:
-        return HARDWARE_PRESETS[hw]()
     if hw.startswith("a100x"):
         try:
-            return a100_cluster(int(hw[len("a100x"):]))
+            return a100_cluster(int(hw[len("a100x"):]), d_model=d_model)
         except ValueError:
             pass
+    if d_model is not None:
+        raise ValueError(f"d_model calibration only applies to a100x<N>, "
+                         f"not {hw!r}")
+    if hw in HARDWARE_PRESETS:
+        return HARDWARE_PRESETS[hw]()
     if hw.startswith("tpu_v5e_"):        # e.g. tpu_v5e_4x4
         try:
             rows, cols = hw[len("tpu_v5e_"):].split("x")
@@ -88,6 +101,10 @@ class SearchSpace:
     ``degrees`` fixes explicit (pp, dp, tp) triples; when ``None`` every
     divisor factorization of the device count is considered, filtered by
     arch shape (pp bounded by layer count, tp by head/feature count).
+    ``interleave`` sweeps virtual-stage counts (interleaved 1F1B),
+    ``zero_stages`` the ZeRO optimizer-sharding stage, and
+    ``comm_strategies`` the inter-tile-group boundary strategy (Fig. 11;
+    only distinguishable under ``BoundaryMode.STRATEGY``).
     """
 
     degrees: Optional[Sequence[Tuple[int, int, int]]] = None
@@ -95,15 +112,24 @@ class SearchSpace:
     layouts: Sequence[Layout] = (Layout.S_SHAPE, Layout.LINE)
     microbatch_sizes: Sequence[int] = (1, 2, 4)
     tp_contiguous: Sequence[bool] = (True,)
+    interleave: Sequence[int] = (1,)
+    zero_stages: Sequence[int] = (0,)
+    comm_strategies: Sequence[int] = (1,)
     max_plans: int = 64
 
     def __post_init__(self):
-        self.schedules = tuple(coerce(Schedule, s, "schedule") for s in self.schedules)
-        self.layouts = tuple(coerce(Layout, l, "layout") for l in self.layouts)
+        self.schedules = tuple(Schedule(s) for s in self.schedules)
+        self.layouts = tuple(Layout(l) for l in self.layouts)
         if self.max_plans < 1:
             raise ValueError("max_plans must be >= 1")
         if any(b < 1 for b in self.microbatch_sizes):
             raise ValueError("microbatch sizes must be >= 1")
+        if any(v < 1 for v in self.interleave):
+            raise ValueError("interleave degrees must be >= 1")
+        if any(z not in (0, 1, 2, 3) for z in self.zero_stages):
+            raise ValueError("zero_stages must be in 0..3")
+        if any(c not in (1, 2) for c in self.comm_strategies):
+            raise ValueError("comm_strategies must be 1 or 2 (Fig. 11)")
 
     def enumerate_plans(self, hardware: HardwareSpec, global_batch: int,
                         training: bool = True,
@@ -129,11 +155,22 @@ class SearchSpace:
                 for sched in (self.schedules if training else (Schedule.GPIPE,)):
                     for layout in self.layouts:
                         for contig in self.tp_contiguous:
-                            plans.append(ParallelPlan(
-                                pp=pp, dp=dp, tp=tp, microbatch=b,
-                                global_batch=global_batch, schedule=sched,
-                                layout=layout, tp_contiguous=contig,
-                                training=training))
+                            for virt in self.interleave:
+                                if virt > 1 and pp == 1:
+                                    continue   # interleaving needs a pipeline
+                                if arch is not None and \
+                                        pp * virt > max(1, arch.num_layers):
+                                    continue
+                                for zero in self.zero_stages:
+                                    for strat in self.comm_strategies:
+                                        plans.append(ParallelPlan(
+                                            pp=pp, dp=dp, tp=tp, microbatch=b,
+                                            global_batch=global_batch,
+                                            schedule=sched, layout=layout,
+                                            tp_contiguous=contig,
+                                            interleave=virt, zero=zero,
+                                            comm_strategy=strat,
+                                            training=training))
         # budget: prefer diverse (pp, dp, tp) triples first
         seen, pruned = set(), []
         for p in plans:
@@ -146,16 +183,175 @@ class SearchSpace:
         return pruned
 
 
+# ---------------------------------------------------------------------------
+# Hardware search space (§VI hardware exploration)
+# ---------------------------------------------------------------------------
+
+def _fmt(v: float) -> str:
+    """Compact axis value for variant names: 16e12 -> '16T', 2.56e11 -> '256G'."""
+    for scale, suffix in ((1e12, "T"), (1e9, "G"), (1e6, "M"), (1e3, "K")):
+        if abs(v) >= scale:
+            x = v / scale
+            return (f"{x:.0f}" if x == int(x) else f"{x:g}") + suffix
+    return f"{v:g}"
+
+
+@dataclass
+class HardwareSearchSpace:
+    """Sweep axes over a base :class:`HardwareSpec` (tile compute/SRAM, NoC
+    bandwidths, mesh shape, DRAM channels/bandwidth).
+
+    Each axis left empty keeps the base value; the cartesian product of
+    the provided axes (capped at ``max_specs``) is materialized as derived
+    HardwareSpecs via the declarative topology specs, so topology axes
+    (``intra_bw``/``inter_bw``/``mesh_shapes``) require the base topology
+    to be a :class:`MeshSpec` or :class:`HierarchicalSpec`.
+
+    When the mesh shape changes, edge DRAM ports are re-placed evenly
+    along the west edge (column 0), preserving the base port count.
+    """
+
+    tile_flops: Sequence[float] = ()
+    sram_bytes: Sequence[float] = ()
+    intra_bw: Sequence[float] = ()
+    inter_bw: Sequence[float] = ()
+    mesh_shapes: Sequence[Tuple[int, int]] = ()
+    dram_channels: Sequence[int] = ()
+    dram_bandwidth: Sequence[float] = ()
+    max_specs: int = 32
+
+    def __post_init__(self):
+        self.mesh_shapes = tuple((int(r), int(c)) for r, c in self.mesh_shapes)
+        if self.max_specs < 1:
+            raise ValueError("max_specs must be >= 1")
+
+    # axis name -> (values, variant-name tag, formatter)
+    def _axes(self):
+        return [
+            ("tile_flops", self.tile_flops, "flops", _fmt),
+            ("sram_bytes", self.sram_bytes, "sram", _fmt),
+            ("intra_bw", self.intra_bw, "intra", _fmt),
+            ("inter_bw", self.inter_bw, "inter", _fmt),
+            ("mesh_shape", self.mesh_shapes, "mesh", lambda v: f"{v[0]}x{v[1]}"),
+            ("dram_channels", self.dram_channels, "ch", str),
+            ("dram_bandwidth", self.dram_bandwidth, "dram", _fmt),
+        ]
+
+    def enumerate_specs(self, base: HardwareSpec) -> List[HardwareSpec]:
+        """Derived HardwareSpecs (cartesian product of the provided axes),
+        capped at ``max_specs``."""
+        axes = [(name, tuple(vals) or (None,), tag, fmt)
+                for name, vals, tag, fmt in self._axes()]
+        specs: List[HardwareSpec] = []
+        for combo in itertools.product(*(vals for _, vals, _, _ in axes)):
+            if len(specs) >= self.max_specs:
+                break
+            chosen = {name: v for (name, _, _, _), v in zip(axes, combo)
+                      if v is not None}
+            tags = [f"{tag}{fmt(chosen[name])}"
+                    for name, _, tag, fmt in axes if name in chosen]
+            specs.append(self._derive(base, chosen, tags))
+        return specs
+
+    def _derive(self, base: HardwareSpec, chosen: dict,
+                tags: List[str]) -> HardwareSpec:
+        tile = base.tile
+        if "tile_flops" in chosen:
+            tile = dataclasses.replace(tile, flops=chosen["tile_flops"])
+        if "sram_bytes" in chosen:
+            tile = dataclasses.replace(tile, sram_bytes=chosen["sram_bytes"])
+        dram = base.dram
+        if "dram_channels" in chosen:
+            dram = dataclasses.replace(dram, channels=chosen["dram_channels"])
+        if "dram_bandwidth" in chosen:
+            dram = dataclasses.replace(dram, bandwidth=chosen["dram_bandwidth"])
+
+        topo_axes = {k: chosen[k] for k in ("intra_bw", "inter_bw", "mesh_shape")
+                     if k in chosen}
+        topo_spec: Optional[TopologySpec] = base.topology_spec
+        dram_ports = base.dram_ports
+        if topo_axes:
+            if topo_spec is None:
+                raise ValueError(
+                    f"hardware {base.name!r} has no declarative topology spec; "
+                    "topology axes (intra_bw/inter_bw/mesh_shapes) need one")
+            topo_spec = self._mutate_topology(topo_spec, topo_axes)
+            if "mesh_shape" in topo_axes and dram_ports:
+                dram_ports = _west_edge_ports(topo_spec, len(dram_ports))
+
+        name = base.name + ("~" + "~".join(tags) if tags else "")
+        return HardwareSpec(
+            name=name,
+            topology=topo_spec if topo_spec is not None else base.topology,
+            tile=tile, dram=dram, dram_ports=dram_ports,
+            precision_bytes=base.precision_bytes)
+
+    @staticmethod
+    def _mutate_topology(spec: TopologySpec, axes: dict) -> TopologySpec:
+        if isinstance(spec, MeshSpec):
+            kw = {}
+            if "intra_bw" in axes:
+                kw["intra_bw"] = axes["intra_bw"]
+            if "inter_bw" in axes:
+                kw["inter_bw"] = axes["inter_bw"]
+            if "mesh_shape" in axes:
+                kw["rows"], kw["cols"] = axes["mesh_shape"]
+                tr, tc = spec.tile_shape
+                if kw["rows"] % tr or kw["cols"] % tc:
+                    # silently flattening to tile_shape (1,1) would turn every
+                    # link into a slow inter-tile hop — refuse instead
+                    raise ValueError(
+                        f"mesh shape {kw['rows']}x{kw['cols']} does not divide "
+                        f"the base tile_shape {spec.tile_shape}; pick divisible "
+                        "shapes (or use a HierarchicalSpec base, where "
+                        "mesh_shapes varies the inter-tile grid)")
+            return dataclasses.replace(spec, **kw)
+        if isinstance(spec, HierarchicalSpec):
+            kw = {}
+            if "intra_bw" in axes:
+                kw["tile"] = dataclasses.replace(spec.tile,
+                                                 intra_bw=axes["intra_bw"])
+            if "inter_bw" in axes:
+                kw["inter_bw"] = axes["inter_bw"]
+            if "mesh_shape" in axes:
+                # mesh_shape names the inter-tile grid for hierarchical specs
+                kw["grid_rows"], kw["grid_cols"] = axes["mesh_shape"]
+            return dataclasses.replace(spec, **kw)
+        if isinstance(spec, GPUClusterSpec):
+            kw = {}
+            if "intra_bw" in axes:
+                kw["nvlink_bw"] = axes["intra_bw"]
+            if "inter_bw" in axes:
+                kw["nic_bw"] = axes["inter_bw"]
+            if "mesh_shape" in axes:
+                raise ValueError("mesh_shapes does not apply to a GPU cluster; "
+                                 "sweep hardware names (a100x<N>) instead")
+            return dataclasses.replace(spec, **kw)
+        raise ValueError(f"cannot sweep topology axes of {type(spec).__name__}")
+
+
+def _west_edge_ports(spec: TopologySpec, count: int) -> Tuple[int, ...]:
+    """Re-place ``count`` DRAM ports evenly along column 0 of a mesh spec."""
+    if isinstance(spec, HierarchicalSpec):
+        spec = spec.flatten()
+    rows, cols = spec.rows, spec.cols
+    count = max(1, min(count, rows))
+    picked = sorted({(i * rows) // count for i in range(count)})
+    return tuple(r * cols for r in picked)
+
+
 @dataclass
 class Experiment:
     """One declarative simulation/sweep spec. Exactly one of ``plan`` /
     ``search`` drives it: a fixed plan means :meth:`run`, a search space
-    means :meth:`sweep`."""
+    means :meth:`sweep`. Adding a ``hardware_search`` crosses either with
+    hardware variants derived from ``hardware``."""
 
     arch: Union[str, ArchConfig, None] = None
     hardware: Union[str, HardwareSpec] = "wafer_scale"
     plan: Optional[ParallelPlan] = None
     search: Optional[SearchSpace] = None
+    hardware_search: Optional[HardwareSearchSpace] = None
     graph_builder: Optional[Callable[[ParallelPlan], ComputationGraph]] = None
     seq_len: int = 2048
     global_batch: int = 256
@@ -167,9 +363,8 @@ class Experiment:
     collect_timeline: bool = False
 
     def __post_init__(self):
-        self.noc_mode = coerce(NoCMode, self.noc_mode, "noc_mode")
-        self.boundary_mode = coerce(BoundaryMode, self.boundary_mode,
-                                    "boundary_mode")
+        self.noc_mode = NoCMode(self.noc_mode)
+        self.boundary_mode = BoundaryMode(self.boundary_mode)
         self.validate()
 
     # -- resolution ---------------------------------------------------------
@@ -234,7 +429,11 @@ class Experiment:
 
     def sweep(self, workers: int = 0) -> SweepReport:
         """Evaluate the search space; ``workers=0`` is serial, ``workers=N``
-        uses an N-process pool, ``workers=None`` uses all cores."""
+        uses an N-process pool, ``workers=None`` uses all cores. With a
+        ``hardware_search``, every hardware variant is swept and the
+        merged report ranks hardware x parallelism points."""
+        if self.hardware_search is not None:
+            return self._sweep_hardware(workers)
         if self.search is None:
             if self.plan is not None:   # degenerate single-point sweep
                 plans = [self.plan]
@@ -246,6 +445,33 @@ class Experiment:
                 training=self.training, arch=self.arch_config)
         from .sweep import SweepEngine
         return SweepEngine(workers=workers).sweep(self, plans)
+
+    def _sweep_hardware(self, workers: int) -> SweepReport:
+        base = self.hardware_spec
+        specs = self.hardware_search.enumerate_specs(base)
+        reports: List[SweepReport] = []
+        failed = 0
+        for spec in specs:
+            try:
+                # a variant can be too small for a fixed plan or for explicit
+                # search degrees — count it failed, keep the other variants
+                sub = self.with_(hardware=spec, hardware_search=None)
+                reports.append(sub.sweep(workers=workers))
+            except ValueError:
+                failed += 1
+        runs = sorted((r for rep in reports for r in rep.runs),
+                      key=lambda r: -r.throughput)
+        return SweepReport(
+            arch=self.arch_name,
+            hardware=(base.name if len(specs) == 1
+                      else f"{base.name} (x{len(specs)} hardware variants)"),
+            runs=runs,
+            num_candidates=sum(r.num_candidates for r in reports),
+            num_pruned_memory=sum(r.num_pruned_memory for r in reports),
+            num_failed=failed + sum(r.num_failed for r in reports),
+            executor=reports[0].executor if reports else "serial",
+            num_hardware=len(specs),
+        )
 
     def with_(self, **kw) -> "Experiment":
         return dataclasses.replace(self, **kw)

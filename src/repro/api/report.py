@@ -119,6 +119,7 @@ class SweepReport:
     num_pruned_memory: int = 0           # dropped by the pre-sim memory check
     num_failed: int = 0                  # raised during mapping/simulation
     executor: str = "serial"
+    num_hardware: int = 1                # hardware variants swept (§VI search)
 
     @property
     def best(self) -> Optional[RunReport]:
@@ -143,12 +144,19 @@ class SweepReport:
         return cls.from_dict(json.loads(s))
 
     def table(self, top: int = 10) -> str:
-        lines = [f"{'pp':>3s} {'dp':>3s} {'tp':>3s} {'mb':>3s} {'schedule':>8s} "
-                 f"{'layout':>8s} {'samples/s':>10s} {'bubble':>7s} {'mem GB':>7s}"]
+        # hardware column only for hardware x parallelism sweeps
+        hw_col = self.num_hardware > 1
+        width = max([len("hardware")] +
+                    [len(r.hardware) for r in self.runs[:top]]) if hw_col else 0
+        head = f"{'hardware':>{width}s} " if hw_col else ""
+        lines = [f"{head}{'pp':>3s} {'dp':>3s} {'tp':>3s} {'mb':>3s} "
+                 f"{'schedule':>8s} {'layout':>8s} {'samples/s':>10s} "
+                 f"{'bubble':>7s} {'mem GB':>7s}"]
         for r in self.runs[:top]:
             p = r.plan
+            prefix = f"{r.hardware:>{width}s} " if hw_col else ""
             lines.append(
-                f"{p.pp:3d} {p.dp:3d} {p.tp:3d} {p.microbatch:3d} "
+                f"{prefix}{p.pp:3d} {p.dp:3d} {p.tp:3d} {p.microbatch:3d} "
                 f"{str(p.schedule):>8s} {str(p.layout):>8s} {r.throughput:10.3f} "
                 f"{r.bubble_ratio:7.1%} {r.peak_memory_bytes / 1e9:7.2f}")
         return "\n".join(lines)

@@ -25,15 +25,22 @@ from .graph import (
 from .hardware import (
     DRAMSpec,
     GPUCluster,
+    GPUClusterSpec,
+    HARDWARE_PRESETS,
     HardwareSpec,
+    HierarchicalSpec,
     Mesh2D,
+    MeshSpec,
     TileSpec,
     Topology,
+    TopologySpec,
+    Torus2D,
     a100_cluster,
     grayskull,
     tpu_v5e_pod,
     wafer_scale,
 )
+from .topology import spec_of, topology_spec_from_dict
 from .noc import NoCModel, collective_steps, ring_time
 from .dram import DRAMModel
 from .parallelism import (

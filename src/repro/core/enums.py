@@ -1,60 +1,31 @@
 """Typed configuration enums for the simulator front door.
 
-Historically ``simulate`` / ``PipelineSimulator`` / ``ParallelPlan`` took
-bare strings (``noc_mode="macro"``, ``schedule="1f1b"``, ...), which made
-large sweeps error-prone: a typo silently fell through to a ``ValueError``
-deep inside the scheduler, or — worse — matched nothing and picked a
-default branch. These enums are the canonical spelling; every entry point
-still accepts the legacy strings via :func:`coerce` for one release,
-emitting a :class:`DeprecationWarning`.
-
-All enums subclass ``str`` so existing comparisons (``plan.schedule ==
-"gpipe"``) and string formatting keep working during the migration.
+These are the canonical spelling for every mode/schedule/layout kwarg.
+All enums subclass ``str``, so the canonical value strings construct the
+member directly (``NoCMode("macro") is NoCMode.MACRO``) and comparisons
+like ``plan.schedule == "gpipe"`` keep working; anything else raises
+``ValueError`` listing the accepted values. The legacy case-insensitive
+string-coercion path (and its DeprecationWarnings) was removed one
+release after the enums landed — pass the enum member or its exact
+value.
 """
 
 from __future__ import annotations
 
 import enum
-import warnings
-from typing import Type, TypeVar, Union
 
-__all__ = ["NoCMode", "BoundaryMode", "Schedule", "Layout", "coerce"]
-
-E = TypeVar("E", bound="_StrEnum")
+__all__ = ["NoCMode", "BoundaryMode", "Schedule", "Layout"]
 
 
 class _StrEnum(str, enum.Enum):
     def __str__(self) -> str:  # argparse/json print the bare value
         return self.value
 
-
-def coerce(cls: Type[E], value: Union[str, E], param: str = "",
-           warn: bool = True) -> E:
-    """Return ``value`` as a member of ``cls``.
-
-    Enum members pass through; legacy strings are matched case-insensitively
-    against member values and (when ``warn``) trigger a DeprecationWarning
-    naming the typed replacement. Unknown strings raise ``ValueError`` with
-    the full list of accepted values.
-    """
-    if isinstance(value, cls):
-        return value
-    if isinstance(value, str):
-        try:
-            member = cls(value.lower())
-        except ValueError:
-            valid = ", ".join(repr(m.value) for m in cls)
-            raise ValueError(
-                f"unknown {param or cls.__name__} {value!r}; expected one of {valid}"
-            ) from None
-        if warn:
-            warnings.warn(
-                f"passing {param or cls.__name__} as a string is deprecated; "
-                f"use {cls.__name__}.{member.name}",
-                DeprecationWarning, stacklevel=3)
-        return member
-    raise TypeError(f"{param or cls.__name__} must be {cls.__name__} or str, "
-                    f"got {type(value).__name__}")
+    @classmethod
+    def _missing_(cls, value):
+        valid = ", ".join(repr(m.value) for m in cls)
+        raise ValueError(
+            f"unknown {cls.__name__} {value!r}; expected one of {valid}")
 
 
 class NoCMode(_StrEnum):

@@ -2,34 +2,58 @@
 
 A :class:`HardwareSpec` is pure data: tile compute/SRAM, NoC topology +
 bandwidths, and DRAM channel placement. PALM models a *two-level* tiled
-accelerator (tiles composed of cores); we flatten both levels into one 2-D
-grid of *cores* whose link bandwidth depends on whether a hop crosses a tile
-boundary — faithful to Table VI while keeping routing uniform.
+accelerator (tiles composed of cores); the declarative topology specs in
+:mod:`repro.core.topology` express both levels (``HierarchicalSpec``) and
+compile them into one flattened 2-D core grid whose link bandwidth
+depends on whether a hop crosses a tile boundary — faithful to Table VI
+while keeping routing uniform.
 
-Topologies are pluggable because the paper validates against a GPU cluster
-("we replace the underlying 2D topology of PALM with GPU topology", §V-A2):
+The hardware layer is declarative end to end: every preset below is
+built from a :class:`~repro.core.topology.TopologySpec`, and a
+``HardwareSpec`` round-trips losslessly through ``to_dict``/``from_dict``
+(and ``to_json``/``from_json``), so machines are data users can dump,
+tweak, diff, and sweep (:class:`repro.api.HardwareSearchSpace`).
 
-* :class:`Mesh2D`       — X-Y dimension-ordered routing on a 2-D mesh.
-* :class:`GPUCluster`   — two-level fat topology: GPUs under a node switch
-  (NVLink/NVSwitch), nodes under a cluster switch (IB NICs).
-
-Presets at the bottom reproduce the hardware used in the paper's case
-studies plus the TPU v5e pod used for the roofline cross-check.
+Presets reproduce the hardware used in the paper's case studies plus the
+TPU v5e pod used for the roofline cross-check; ``HARDWARE_PRESETS`` maps
+names to builders (parameterized ``a100x<N>`` / ``tpu_v5e_<R>x<C>`` names
+are resolved by :func:`repro.api.resolve_hardware`).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import json
+import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from .topology import (
+    GPUCluster,
+    GPUClusterSpec,
+    HierarchicalSpec,
+    Mesh2D,
+    MeshSpec,
+    Topology,
+    TopologySpec,
+    Torus2D,
+    spec_of,
+    topology_spec_from_dict,
+)
 
 __all__ = [
     "TileSpec",
     "DRAMSpec",
     "Topology",
     "Mesh2D",
+    "Torus2D",
     "GPUCluster",
+    "TopologySpec",
+    "MeshSpec",
+    "GPUClusterSpec",
+    "HierarchicalSpec",
     "HardwareSpec",
+    "HARDWARE_PRESETS",
     "grayskull",
     "wafer_scale",
     "a100_cluster",
@@ -56,6 +80,13 @@ class TileSpec:
     def vector_time(self, flop: float) -> float:
         return flop / (self.flops * self.vector_efficiency)
 
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "TileSpec":
+        return cls(**d)
+
 
 @dataclass(frozen=True)
 class DRAMSpec:
@@ -66,169 +97,30 @@ class DRAMSpec:
     channels: int = 1             # number of shared channels (edges)
     capacity_bytes: float = float("inf")  # per-device DRAM capacity (recompute trigger)
 
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        # JSON has no Infinity: unbounded capacity serializes as null
+        if math.isinf(d["capacity_bytes"]):
+            d["capacity_bytes"] = None
+        return d
 
-class Topology:
-    """Routing interface: a topology enumerates directed links and routes."""
-
-    num_devices: int
-
-    def route(self, src: int, dst: int) -> List[int]:
-        """Return the list of link ids traversed from ``src`` to ``dst``."""
-        raise NotImplementedError
-
-    def num_links(self) -> int:
-        raise NotImplementedError
-
-    def link_bandwidth(self, link_id: int) -> float:
-        raise NotImplementedError
-
-    def link_latency(self, link_id: int) -> float:
-        raise NotImplementedError
-
-    def hops(self, src: int, dst: int) -> int:
-        return len(self.route(src, dst))
-
-    def coords(self, device: int) -> Tuple[int, int]:
-        raise NotImplementedError
-
-
-class Mesh2D(Topology):
-    """2-D mesh with X-Y dimension-ordered routing.
-
-    Two-level bandwidth: a hop whose endpoints lie in different *tiles*
-    (``tile_shape`` groups of cores) uses ``inter_bw``; hops inside a tile
-    use ``intra_bw``. With ``tile_shape=(1,1)`` it degenerates to a flat
-    mesh (Grayskull-style single-level).
-    """
-
-    def __init__(
-        self,
-        rows: int,
-        cols: int,
-        intra_bw: float,
-        inter_bw: Optional[float] = None,
-        link_latency: float = 5e-8,
-        tile_shape: Tuple[int, int] = (1, 1),
-    ):
-        self.rows, self.cols = rows, cols
-        self.num_devices = rows * cols
-        self.intra_bw = intra_bw
-        self.inter_bw = intra_bw if inter_bw is None else inter_bw
-        self._latency = link_latency
-        self.tile_shape = tile_shape
-        # link id layout: horizontal links then vertical links, both directed.
-        #   h-link (r, c, dir): between (r,c) and (r,c+1); dir 0 = east, 1 = west
-        #   v-link (r, c, dir): between (r,c) and (r+1,c); dir 0 = south, 1 = north
-        self._num_h = rows * (cols - 1) * 2
-        self._num_v = (rows - 1) * cols * 2
-
-    # -- indexing -----------------------------------------------------------
-    def device(self, r: int, c: int) -> int:
-        return r * self.cols + c
-
-    def coords(self, device: int) -> Tuple[int, int]:
-        return divmod(device, self.cols)
-
-    def _h_link(self, r: int, c: int, westward: bool) -> int:
-        return (r * (self.cols - 1) + c) * 2 + int(westward)
-
-    def _v_link(self, r: int, c: int, northward: bool) -> int:
-        return self._num_h + (r * self.cols + c) * 2 + int(northward)
-
-    def num_links(self) -> int:
-        return self._num_h + self._num_v
-
-    # -- routing --------------------------------------------------------------
-    def route(self, src: int, dst: int) -> List[int]:
-        (r0, c0), (r1, c1) = self.coords(src), self.coords(dst)
-        links: List[int] = []
-        c = c0
-        while c < c1:
-            links.append(self._h_link(r0, c, westward=False))
-            c += 1
-        while c > c1:
-            links.append(self._h_link(r0, c - 1, westward=True))
-            c -= 1
-        r = r0
-        while r < r1:
-            links.append(self._v_link(r, c1, northward=False))
-            r += 1
-        while r > r1:
-            links.append(self._v_link(r - 1, c1, northward=True))
-            r -= 1
-        return links
-
-    # -- link properties -------------------------------------------------------
-    def _link_endpoints(self, link_id: int) -> Tuple[Tuple[int, int], Tuple[int, int]]:
-        if link_id < self._num_h:
-            base, westward = divmod(link_id, 2)
-            r, c = divmod(base, self.cols - 1)
-            return (r, c), (r, c + 1)
-        base, northward = divmod(link_id - self._num_h, 2)
-        r, c = divmod(base, self.cols)
-        return (r, c), (r + 1, c)
-
-    def link_bandwidth(self, link_id: int) -> float:
-        (r0, c0), (r1, c1) = self._link_endpoints(link_id)
-        tr, tc = self.tile_shape
-        same_tile = (r0 // tr == r1 // tr) and (c0 // tc == c1 // tc)
-        return self.intra_bw if same_tile else self.inter_bw
-
-    def link_latency(self, link_id: int) -> float:
-        return self._latency
-
-
-class GPUCluster(Topology):
-    """Two-level GPU cluster: node switch (NVLink) + cluster switch (IB).
-
-    Link ids: for each GPU g, links ``2g`` (up to node switch) and ``2g+1``
-    (down). For each node n, links ``2G + 2n`` (node up to cluster) and
-    ``2G + 2n + 1`` (down). Intra-node routes use only NVLink up/down;
-    inter-node routes traverse NVLink up, NIC up, NIC down, NVLink down.
-    """
-
-    def __init__(
-        self,
-        num_gpus: int,
-        gpus_per_node: int = 8,
-        nvlink_bw: float = 300 * GB,     # A100 NVLink3 per direction
-        nic_bw: float = 25 * GB,         # 8x200Gb/s HDR per node / 8 GPUs
-        nvlink_latency: float = 2e-6,
-        nic_latency: float = 5e-6,
-    ):
-        self.num_devices = num_gpus
-        self.gpus_per_node = gpus_per_node
-        self.num_nodes = (num_gpus + gpus_per_node - 1) // gpus_per_node
-        self.nvlink_bw, self.nic_bw = nvlink_bw, nic_bw
-        self._nv_lat, self._nic_lat = nvlink_latency, nic_latency
-
-    def coords(self, device: int) -> Tuple[int, int]:
-        return divmod(device, self.gpus_per_node)  # (node, local rank)
-
-    def num_links(self) -> int:
-        return 2 * self.num_devices + 2 * self.num_nodes
-
-    def route(self, src: int, dst: int) -> List[int]:
-        if src == dst:
-            return []
-        n_src, n_dst = src // self.gpus_per_node, dst // self.gpus_per_node
-        if n_src == n_dst:
-            return [2 * src, 2 * dst + 1]
-        base = 2 * self.num_devices
-        return [2 * src, base + 2 * n_src, base + 2 * n_dst + 1, 2 * dst + 1]
-
-    def link_bandwidth(self, link_id: int) -> float:
-        if link_id < 2 * self.num_devices:
-            return self.nvlink_bw
-        return self.nic_bw * self.gpus_per_node  # node NIC aggregate
-
-    def link_latency(self, link_id: int) -> float:
-        return self._nv_lat if link_id < 2 * self.num_devices else self._nic_lat
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "DRAMSpec":
+        kw = dict(d)
+        if kw.get("capacity_bytes") is None:
+            kw["capacity_bytes"] = float("inf")
+        return cls(**kw)
 
 
 @dataclass
 class HardwareSpec:
-    """Complete machine description consumed by the simulator."""
+    """Complete machine description consumed by the simulator.
+
+    ``topology`` accepts either a compiled :class:`Topology` or a
+    declarative :class:`TopologySpec` (which is compiled on construction
+    and kept in ``topology_spec`` for serialization). Specs built from a
+    spec — including every preset — round-trip through JSON losslessly.
+    """
 
     name: str
     topology: Topology
@@ -238,6 +130,19 @@ class HardwareSpec:
     # device has local HBM (GPU/TPU style, no NoC traversal to reach DRAM).
     dram_ports: Tuple[int, ...] = ()
     precision_bytes: int = 2
+    topology_spec: Optional[TopologySpec] = None
+    _port_cache: Dict[int, Optional[int]] = field(
+        default_factory=dict, init=False, repr=False, compare=False)
+
+    def __post_init__(self):
+        if isinstance(self.topology, TopologySpec):
+            self.topology_spec = self.topology
+            self.topology = self.topology.compile()
+        elif self.topology_spec is None:
+            # best effort: recover the spec from known compiled classes so
+            # hand-built HardwareSpecs still serialize
+            self.topology_spec = spec_of(self.topology)
+        self.dram_ports = tuple(self.dram_ports)
 
     @property
     def num_devices(self) -> int:
@@ -246,14 +151,59 @@ class HardwareSpec:
     def nearest_dram_port(self, device: int) -> Optional[int]:
         if not self.dram_ports:
             return None
-        return min(self.dram_ports, key=lambda p: self.topology.hops(device, p))
+        port = self._port_cache.get(device)
+        if port is None:
+            port = min(self.dram_ports,
+                       key=lambda p: self.topology.hops(device, p))
+            self._port_cache[device] = port
+        return port
 
     def with_(self, **kw) -> "HardwareSpec":
+        if "topology" in kw and "topology_spec" not in kw:
+            kw["topology_spec"] = None   # don't carry a stale spec
         return dataclasses.replace(self, **kw)
+
+    # -- serialization -------------------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        if self.topology_spec is None:
+            raise ValueError(
+                f"hardware {self.name!r} has a custom {type(self.topology).__name__} "
+                "topology with no declarative spec; build it from a TopologySpec "
+                "to serialize")
+        return {
+            "name": self.name,
+            "topology": self.topology_spec.to_dict(),
+            "tile": self.tile.to_dict(),
+            "dram": self.dram.to_dict(),
+            "dram_ports": list(self.dram_ports),
+            "precision_bytes": self.precision_bytes,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "HardwareSpec":
+        try:
+            return cls(
+                name=d["name"],
+                topology=topology_spec_from_dict(d["topology"]),
+                tile=TileSpec.from_dict(d["tile"]),
+                dram=DRAMSpec.from_dict(d["dram"]),
+                dram_ports=tuple(d.get("dram_ports", ())),
+                precision_bytes=d.get("precision_bytes", 2),
+            )
+        except (KeyError, TypeError) as e:
+            raise ValueError(f"bad hardware dict: {e}") from None
+
+    def to_json(self, **kw: Any) -> str:
+        return json.dumps(self.to_dict(), **kw)
+
+    @classmethod
+    def from_json(cls, s: str) -> "HardwareSpec":
+        return cls.from_dict(json.loads(s))
 
 
 # --------------------------------------------------------------------------
-# Presets used by the paper's case studies
+# Presets used by the paper's case studies (all built from declarative
+# topology specs, so `HardwareSpec.to_json()` works on every one of them)
 # --------------------------------------------------------------------------
 
 def grayskull() -> HardwareSpec:
@@ -263,12 +213,12 @@ def grayskull() -> HardwareSpec:
     ~1 MB SRAM/core (120 MB total), 8 channels LPDDR4 ~100 GB/s aggregate,
     NoC ~192 GB/s per link direction.
     """
-    topo = Mesh2D(10, 12, intra_bw=192 * GB, link_latency=5e-8)
+    spec = MeshSpec(rows=10, cols=12, intra_bw=192 * GB, link_latency=5e-8)
     # DRAM ports on the top edge (row 0), matching the board's 8 channels.
     ports = tuple(range(0, 12, 2))[:8]
     return HardwareSpec(
         name="grayskull",
-        topology=topo,
+        topology=spec,
         tile=TileSpec(flops=3.07 * TFLOPS, sram_bytes=1.0 * MB,
                       compute_efficiency=0.65, vector_efficiency=0.20),
         dram=DRAMSpec(bandwidth=100 * GB / 8, response_time=2e-7, channels=8),
@@ -283,14 +233,17 @@ def wafer_scale() -> HardwareSpec:
     256 TFLOPS fp16 + 60 MB SRAM per *tile* => 16 TFLOPS + 3.75 MB per core.
     intra-tile NoC 1024 GB/s, inter-tile 256 GB/s, edge DRAM 256 GB/s/tile.
     """
-    topo = Mesh2D(5 * 4, 4 * 4, intra_bw=1024 * GB, inter_bw=256 * GB,
-                  link_latency=2e-8, tile_shape=(4, 4))
+    spec = HierarchicalSpec(
+        tile=MeshSpec(rows=4, cols=4, intra_bw=1024 * GB, link_latency=2e-8),
+        grid_rows=5, grid_cols=4, inter_bw=256 * GB)
+    mesh = spec.flatten()
     # Edge-shared DRAM: one port per tile-row on both vertical edges.
-    ports = tuple(topo.device(r, 0) for r in range(0, 20, 4)) + tuple(
-        topo.device(r, 15) for r in range(0, 20, 4))
+    dev = lambda r, c: r * mesh.cols + c
+    ports = tuple(dev(r, 0) for r in range(0, mesh.rows, 4)) + tuple(
+        dev(r, mesh.cols - 1) for r in range(0, mesh.rows, 4))
     return HardwareSpec(
         name="wafer_scale",
-        topology=topo,
+        topology=spec,
         tile=TileSpec(flops=16 * TFLOPS, sram_bytes=3.75 * MB,
                       compute_efficiency=0.55, vector_efficiency=0.15),
         dram=DRAMSpec(bandwidth=256 * GB, response_time=3e-7, channels=10),
@@ -305,7 +258,8 @@ def a100_cluster(num_gpus: int, d_model: Optional[int] = None) -> HardwareSpec:
     312 TFLOP/s bf16 peak. Sustained GEMM efficiency on A100 grows with
     matrix size (cuBLAS: ~52% at K~6k up to ~63% at K~20k — visible in
     Megatron's own per-GPU numbers, 135 TF/s @18B vs 163 TF/s @530B);
-    ``d_model`` selects the point on that curve. 40 MB L2 as the "SRAM"
+    ``d_model`` selects the point on that curve (also reachable from the
+    CLI: ``--hardware a100x64 --d-model 12288``). 40 MB L2 as the "SRAM"
     level, 1.94 TB/s HBM2e local to each GPU (no NoC traversal =>
     dram_ports=()).
     """
@@ -315,7 +269,7 @@ def a100_cluster(num_gpus: int, d_model: Optional[int] = None) -> HardwareSpec:
         eff = min(0.65, max(0.45, 0.475 + 7.3e-6 * d_model))
     return HardwareSpec(
         name=f"a100x{num_gpus}",
-        topology=GPUCluster(num_gpus),
+        topology=GPUClusterSpec(num_gpus=num_gpus),
         tile=TileSpec(flops=312 * TFLOPS, sram_bytes=40 * MB,
                       compute_efficiency=eff, vector_efficiency=0.10),
         dram=DRAMSpec(bandwidth=1.94e12, response_time=1e-7, channels=num_gpus,
@@ -329,15 +283,25 @@ def tpu_v5e_pod(rows: int = 16, cols: int = 16) -> HardwareSpec:
     """TPU v5e pod slice for the roofline cross-check (see DESIGN.md §3).
 
     197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s per ICI link, 2-D torus
-    (modelled as a mesh — simulator routes are upper bounds on torus).
+    (modelled as a mesh — simulator routes are upper bounds on torus;
+    build ``MeshSpec(..., torus=True)`` for the wraparound variant).
     """
-    topo = Mesh2D(rows, cols, intra_bw=50 * GB, link_latency=1e-6)
+    spec = MeshSpec(rows=rows, cols=cols, intra_bw=50 * GB, link_latency=1e-6)
     return HardwareSpec(
         name=f"tpu_v5e_{rows}x{cols}",
-        topology=topo,
+        topology=spec,
         tile=TileSpec(flops=197 * TFLOPS, sram_bytes=128 * MB,
                       compute_efficiency=0.55, vector_efficiency=0.12),
         dram=DRAMSpec(bandwidth=819 * GB, response_time=1e-7, channels=rows * cols),
         dram_ports=(),
         precision_bytes=2,
     )
+
+
+# name -> zero-arg builder; parameterized families (a100x<N>, tpu_v5e_<R>x<C>)
+# are parsed by repro.api.resolve_hardware on top of this registry.
+HARDWARE_PRESETS = {
+    "grayskull": grayskull,
+    "wafer_scale": wafer_scale,
+    "tpu_v5e": tpu_v5e_pod,
+}

@@ -30,7 +30,7 @@ import math
 from dataclasses import dataclass, field
 from typing import Dict, Generator, Iterable, List, Optional, Sequence, Tuple
 
-from .enums import NoCMode, coerce
+from .enums import NoCMode
 from .events import Environment, Resource
 from .hardware import HardwareSpec, Topology
 
@@ -71,13 +71,15 @@ class NoCModel:
     """Event-driven NoC with pluggable fidelity."""
 
     def __init__(self, env: Environment, hardware: HardwareSpec,
-                 mode: "NoCMode | str" = NoCMode.DETAILED):
-        # internal layer: coerce silently (the public entry points warn)
+                 mode: NoCMode = NoCMode.DETAILED):
         self.env = env
         self.hw = hardware
         self.topo: Topology = hardware.topology
-        self.mode = coerce(NoCMode, mode, "mode", warn=False)
+        self.mode = NoCMode(mode)
         self._links: Dict[int, Resource] = {}
+        # ring-collective link footprints, keyed by the group tuple (macro
+        # mode re-runs the same groups every micro-batch)
+        self._footprint_cache: Dict[Tuple[int, ...], List[int]] = {}
         # instrumentation
         self.bytes_moved = 0.0
         self.transfer_count = 0
@@ -106,14 +108,15 @@ class NoCModel:
         'treating the link as an exclusive resource during execution')."""
         self.bytes_moved += nbytes
         self.transfer_count += 1
-        route = self.topo.route(src, dst)
-        t = self._path_time(route, nbytes)
-        if self.mode == NoCMode.ANALYTICAL or not route:
+        # Eq. (2) via the topology's cached path metrics (O(1) per pair)
+        hops, lat, bw = self.topo.path_metrics(src, dst)
+        t = lat + nbytes / bw if hops else 0.0
+        if self.mode == NoCMode.ANALYTICAL or not hops:
             yield self.env.timeout(t)
             return
-        # deadlock-free acquisition: global link-id order
+        # deadlock-free acquisition: global link-id order (cached per pair)
         reqs = []
-        for lid in sorted(set(route)):
+        for lid in self.topo.route_links(src, dst):
             link = self.link(lid)
             req = link.request(priority)
             yield req
@@ -146,6 +149,17 @@ class NoCModel:
             links.extend(self.topo.route(src, dst))
         return links
 
+    def _ring_footprint(self, group: List[int]) -> List[int]:
+        """Sorted de-duplicated ring link set (cached per group)."""
+        if not getattr(self.topo, "cache_routing", False):
+            return sorted(set(self._ring_links(group)))
+        key = tuple(group)
+        fp = self._footprint_cache.get(key)
+        if fp is None:
+            fp = sorted(set(self._ring_links(group)))
+            self._footprint_cache[key] = fp
+        return fp
+
     def _chain_links(self, group: List[int], root: Optional[int]) -> List[int]:
         """Chain path visiting the group in order, starting at root."""
         order = list(group)
@@ -169,22 +183,22 @@ class NoCModel:
             # converging transfers: p-1 full-size payloads funnel into the
             # root's <=4 incident links (the §V-C strategy-2 cost driver)
             root = group[0] if root is None else root
-            paths = [self.topo.route(d, root) for d in group if d != root]
-            if not paths:
+            metrics = [self.topo.path_metrics(d, root)
+                       for d in group if d != root]
+            if not metrics:
                 return 0.0
-            bw = min(min(self.topo.link_bandwidth(l) for l in path)
-                     for path in paths if path)
-            fan_in = min(4, len(paths))
-            lat = max(sum(self.topo.link_latency(l) for l in path) for path in paths)
-            return lat + len(paths) * nbytes / (fan_in * bw)
+            bw = min((m[2] for m in metrics if m[0]), default=float("inf"))
+            fan_in = min(4, len(metrics))
+            lat = max(m[1] for m in metrics)
+            return lat + len(metrics) * nbytes / (fan_in * bw)
         # ring: pipelined chunks — every chunk crosses every inter-neighbour
         # path, so the slowest path bounds the per-step rate (this is what
         # breaks when the ring has an off-ring member: §V-C)
+        chunk = _chunk_bytes(kind, nbytes, p)
         step_times = []
         for i, src in enumerate(group):
-            dst = group[(i + 1) % p]
-            step_times.append(self._path_time(self.topo.route(src, dst),
-                                              _chunk_bytes(kind, nbytes, p)))
+            hops, lat, bw = self.topo.path_metrics(src, group[(i + 1) % p])
+            step_times.append(lat + chunk / bw if hops else 0.0)
         return collective_steps(kind, p) * max(step_times)
 
     # macro: closed form + exclusive hold of the link footprint ----------------
@@ -193,7 +207,7 @@ class NoCModel:
         self.bytes_moved += nbytes * len(group)
         self.transfer_count += 1
         t = self._collective_closed_form(kind, group, nbytes, root)
-        footprint = sorted(set(self._ring_links(group)))
+        footprint = self._ring_footprint(group)
         reqs = []
         for lid in footprint:
             link = self.link(lid)

@@ -24,7 +24,7 @@ from dataclasses import dataclass, field
 from typing import Dict, Generator, List, Optional, Tuple
 
 from .dram import DRAMModel
-from .enums import BoundaryMode, NoCMode, Schedule, coerce
+from .enums import BoundaryMode, NoCMode, Schedule
 from .events import Environment, Event
 from .hardware import HardwareSpec
 from .noc import NoCModel
@@ -103,20 +103,19 @@ class PipelineSimulator:
     def __init__(
         self,
         mapped: MappedGraph,
-        noc_mode: "NoCMode | str" = NoCMode.MACRO,
+        noc_mode: NoCMode = NoCMode.MACRO,
         collect_timeline: bool = False,
-        boundary_mode: "BoundaryMode | str" = BoundaryMode.PAIRWISE,
+        boundary_mode: BoundaryMode = BoundaryMode.PAIRWISE,
         memory_plan: Optional[Tuple[List[StageMemory], bool]] = None,
     ):
         self.mapped = mapped
         self.plan: ParallelPlan = mapped.plan
         self.hw: HardwareSpec = mapped.hardware
         self.env = Environment()
-        self.noc = NoCModel(self.env, self.hw,
-                            mode=coerce(NoCMode, noc_mode, "noc_mode"))
+        self.noc = NoCModel(self.env, self.hw, mode=NoCMode(noc_mode))
         self.dram = DRAMModel(self.env, self.hw, self.noc)
         self.collect_timeline = collect_timeline
-        self.boundary_mode = coerce(BoundaryMode, boundary_mode, "boundary_mode")
+        self.boundary_mode = BoundaryMode(boundary_mode)
 
         S = mapped.num_stages
         M = self.plan.num_microbatches

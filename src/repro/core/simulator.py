@@ -15,9 +15,9 @@ sweeps, JSON reports) which is the canonical front door.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Iterable, List, Optional, Union
+from typing import Callable, Iterable, List, Optional
 
-from .enums import BoundaryMode, NoCMode, coerce
+from .enums import BoundaryMode, NoCMode
 from .graph import ComputationGraph
 from .hardware import HardwareSpec
 from .parallelism import MappedGraph, ParallelPlan, map_graph
@@ -35,14 +35,14 @@ def simulate(
     graph: ComputationGraph,
     hardware: HardwareSpec,
     plan: ParallelPlan,
-    noc_mode: Union[NoCMode, str] = NoCMode.MACRO,
+    noc_mode: NoCMode = NoCMode.MACRO,
     collect_timeline: bool = False,
-    boundary_mode: Union[BoundaryMode, str] = BoundaryMode.PAIRWISE,
+    boundary_mode: BoundaryMode = BoundaryMode.PAIRWISE,
 ) -> SimResult:
     """Run PALM once. ``graph`` must be built with per-iteration batch
     ``plan.microbatch * plan.dp`` (the DP group's micro-batch)."""
-    noc_mode = coerce(NoCMode, noc_mode, "noc_mode")
-    boundary_mode = coerce(BoundaryMode, boundary_mode, "boundary_mode")
+    noc_mode = NoCMode(noc_mode)
+    boundary_mode = BoundaryMode(boundary_mode)
     mapped = map_graph(graph, hardware, plan)
     sim = PipelineSimulator(mapped, noc_mode=noc_mode,
                             collect_timeline=collect_timeline,
@@ -64,7 +64,7 @@ def sweep_plans(
     graph_builder: Callable[[ParallelPlan], ComputationGraph],
     hardware: HardwareSpec,
     plans: Iterable[ParallelPlan],
-    noc_mode: Union[NoCMode, str] = NoCMode.MACRO,
+    noc_mode: NoCMode = NoCMode.MACRO,
     memory_cap: Optional[float] = None,
 ) -> List[PlanResult]:
     """Evaluate many parallelism strategies; returns results sorted by
@@ -72,7 +72,7 @@ def sweep_plans(
     ``memory_cap`` are dropped (the paper's capacity feasibility check)
     *before* simulation: the footprint is a property of the mapped graph,
     so infeasible plans cost a mapping, not a full event-driven run."""
-    noc_mode = coerce(NoCMode, noc_mode, "noc_mode")
+    noc_mode = NoCMode(noc_mode)
     out: List[PlanResult] = []
     for plan in plans:
         graph = graph_builder(plan)

@@ -1,11 +1,15 @@
-"""Unified Experiment API: enum coercion, validation, report round-trip,
-sweep-engine parity (serial vs process pool vs legacy sweep_plans)."""
+"""Unified Experiment API: typed enums, validation, report round-trip,
+sweep-engine parity (serial vs process pool vs legacy sweep_plans),
+hardware x parallelism search."""
+
+import warnings
 
 import pytest
 
 from repro.api import (
     BoundaryMode,
     Experiment,
+    HardwareSearchSpace,
     Layout,
     NoCMode,
     ParallelPlan,
@@ -17,19 +21,12 @@ from repro.api import (
     resolve_hardware,
 )
 from repro.core import simulate, sweep_plans, transformer_lm_graph, tpu_v5e_pod
-from repro.core.enums import coerce
 
 
 # ---------------------------------------------------------------------------
-# enum coercion (legacy strings accepted with DeprecationWarning)
+# typed enums (the legacy case-insensitive coercion path is gone: members
+# and their exact canonical values construct silently, anything else raises)
 # ---------------------------------------------------------------------------
-
-def test_coerce_accepts_enum_silently():
-    import warnings
-    with warnings.catch_warnings():
-        warnings.simplefilter("error")
-        assert coerce(Schedule, Schedule.GPIPE, "schedule") is Schedule.GPIPE
-
 
 @pytest.mark.parametrize("cls,raw,member", [
     (Schedule, "1f1b", Schedule.ONE_F_ONE_B),
@@ -39,35 +36,40 @@ def test_coerce_accepts_enum_silently():
     (NoCMode, "macro", NoCMode.MACRO),
     (BoundaryMode, "strategy", BoundaryMode.STRATEGY),
 ])
-def test_coerce_legacy_string_warns(cls, raw, member):
-    with pytest.warns(DeprecationWarning, match="deprecated"):
-        assert coerce(cls, raw, "x") is member
+def test_enum_constructs_from_canonical_value_silently(cls, raw, member):
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")     # no DeprecationWarning anymore
+        assert cls(raw) is member
+        assert cls(member) is member
 
 
-def test_coerce_unknown_string_raises():
-    with pytest.raises(ValueError, match="unknown schedule"):
-        coerce(Schedule, "one_f_one_b", "schedule")
+@pytest.mark.parametrize("bad", ["one_f_one_b", "GPIPE", "2f2b", ""])
+def test_enum_rejects_non_canonical_strings(bad):
+    with pytest.raises(ValueError, match="unknown Schedule"):
+        Schedule(bad)
 
 
-def test_parallel_plan_coerces_legacy_strings():
-    with pytest.warns(DeprecationWarning):
-        plan = ParallelPlan(schedule="gpipe", layout="line")
+def test_parallel_plan_is_strictly_typed():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        plan = ParallelPlan(schedule=Schedule.GPIPE, layout=Layout.LINE)
     assert plan.schedule is Schedule.GPIPE
     assert plan.layout is Layout.LINE
-    # str-subclass enums keep legacy comparisons working
+    # str-subclass enums keep value comparisons working
     assert plan.schedule == "gpipe"
 
 
-def test_simulate_coerces_legacy_noc_mode():
+def test_simulate_accepts_canonical_mode_without_warning():
     g = transformer_lm_graph("t", 2, 128, 4, seq_len=64, batch=1, vocab=256)
     hw = tpu_v5e_pod(2, 2)
-    with pytest.warns(DeprecationWarning):
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
         res = simulate(g, hw, ParallelPlan(global_batch=2), noc_mode="macro")
     assert res.throughput > 0
 
 
 def test_unknown_schedule_string_raises_in_plan():
-    with pytest.raises(ValueError, match="unknown schedule"):
+    with pytest.raises(ValueError, match="unknown Schedule"):
         ParallelPlan(schedule="2f2b")
 
 
@@ -213,3 +215,134 @@ def test_graph_builder_experiments_sweep_serially():
     with pytest.warns(RuntimeWarning, match="not picklable"):
         rep = exp.sweep(workers=2)     # lambda builder -> serial fallback
     assert rep.runs and rep.executor == "serial"
+
+
+# ---------------------------------------------------------------------------
+# extended SearchSpace axes: interleave / zero / comm_strategy
+# ---------------------------------------------------------------------------
+
+def test_search_space_sweeps_interleave_zero_and_comm_strategy():
+    hw = tpu_v5e_pod(2, 2)
+    space = SearchSpace(degrees=[(2, 2, 1)], microbatch_sizes=(1,),
+                        layouts=(Layout.S_SHAPE,),
+                        interleave=(1, 2), zero_stages=(0, 2),
+                        comm_strategies=(1, 2), max_plans=64)
+    plans = space.enumerate_plans(hw, global_batch=8)
+    assert {p.interleave for p in plans} == {1, 2}
+    assert {p.zero for p in plans} == {0, 2}
+    assert {p.comm_strategy for p in plans} == {1, 2}
+    assert len(plans) == 2 * 2 * 2
+
+
+def test_search_space_interleave_needs_pipeline_and_respects_layers():
+    hw = tpu_v5e_pod(2, 2)
+    space = SearchSpace(degrees=[(1, 4, 1)], microbatch_sizes=(1,),
+                        layouts=(Layout.S_SHAPE,), interleave=(1, 2))
+    plans = space.enumerate_plans(hw, global_batch=8)
+    assert {p.interleave for p in plans} == {1}     # pp=1 can't interleave
+
+
+def test_search_space_rejects_bad_new_axes():
+    with pytest.raises(ValueError, match="zero_stages"):
+        SearchSpace(zero_stages=(4,))
+    with pytest.raises(ValueError, match="comm_strategies"):
+        SearchSpace(comm_strategies=(3,))
+    with pytest.raises(ValueError, match="interleave"):
+        SearchSpace(interleave=(0,))
+
+
+def test_extended_axes_pruning_parity_serial_vs_pooled():
+    """Satellite acceptance: memory-cap pruning over the new axes ranks
+    identically through the serial and process-pool engines."""
+    exp = _tiny_experiment(
+        global_batch=16,
+        search=SearchSpace(degrees=[(2, 2, 1), (2, 1, 2)],
+                           microbatch_sizes=(1, 2), interleave=(1, 2),
+                           zero_stages=(0, 1), max_plans=64))
+    base = exp.sweep(workers=0)
+    assert {r.plan.interleave for r in base.runs} >= {1, 2}
+    assert {r.plan.zero for r in base.runs} >= {0, 1}
+    mems = sorted(r.peak_memory_bytes for r in base.runs)
+    cap = mems[len(mems) // 2]
+    serial = exp.with_(memory_cap=cap).sweep(workers=0)
+    pooled = exp.with_(memory_cap=cap).sweep(workers=2)
+    assert serial.num_pruned_memory > 0
+    assert pooled.executor.startswith("process")
+    assert serial.num_pruned_memory == pooled.num_pruned_memory
+    assert [r.plan for r in serial.runs] == [r.plan for r in pooled.runs]
+    assert [r.throughput for r in serial.runs] == \
+           [r.throughput for r in pooled.runs]
+
+
+# ---------------------------------------------------------------------------
+# hardware x parallelism search
+# ---------------------------------------------------------------------------
+
+def test_hardware_search_space_enumerates_variants():
+    base = tpu_v5e_pod(2, 2)
+    space = HardwareSearchSpace(tile_flops=(100e12, 197e12),
+                                intra_bw=(25e9, 50e9))
+    specs = space.enumerate_specs(base)
+    assert len(specs) == 4
+    assert len({s.name for s in specs}) == 4         # distinct variant names
+    assert {s.tile.flops for s in specs} == {100e12, 197e12}
+    assert all(s.to_dict() for s in specs)           # all serializable
+
+
+def test_hardware_search_mesh_shape_replaces_ports():
+    from repro.core import grayskull
+    base = grayskull()                               # 8 ports on row 0
+    space = HardwareSearchSpace(mesh_shapes=((6, 6),))
+    (spec,) = space.enumerate_specs(base)
+    assert spec.num_devices == 36
+    assert len(spec.dram_ports) == min(8, 6)         # re-placed on west edge
+    assert all(p < 36 for p in spec.dram_ports)
+
+
+def test_experiment_sweeps_hardware_cross_parallelism():
+    exp = _tiny_experiment(
+        search=SearchSpace(max_plans=3, microbatch_sizes=(1,),
+                           layouts=(Layout.S_SHAPE,)),
+        hardware_search=HardwareSearchSpace(tile_flops=(100e12, 197e12)))
+    rep = exp.sweep()
+    assert rep.num_hardware == 2
+    assert len({r.hardware for r in rep.runs}) == 2
+    thpts = [r.throughput for r in rep.runs]
+    assert thpts == sorted(thpts, reverse=True)      # merged ranking
+    # faster tiles win: best point comes from the higher-flops variant
+    assert "197T" in rep.best.hardware
+    back = SweepReport.from_json(rep.to_json())      # num_hardware round-trips
+    assert back.num_hardware == 2 and back == rep
+
+
+def test_resolve_hardware_d_model_calibration():
+    lo = resolve_hardware("a100x8", d_model=4096)
+    hi = resolve_hardware("a100x8", d_model=20480)
+    assert hi.tile.compute_efficiency > lo.tile.compute_efficiency
+    with pytest.raises(ValueError, match="a100x<N>"):
+        resolve_hardware("wafer_scale", d_model=4096)
+
+
+def test_hardware_search_rejects_undivisible_mesh_shape():
+    from repro.api import MeshSpec, HardwareSpec
+    from repro.core import DRAMSpec, TileSpec
+    base = HardwareSpec(name="t",
+                        topology=MeshSpec(8, 8, intra_bw=1e12, inter_bw=2.5e11,
+                                          tile_shape=(4, 4)),
+                        tile=TileSpec(flops=1e12, sram_bytes=1e6),
+                        dram=DRAMSpec(bandwidth=1e11))
+    with pytest.raises(ValueError, match="does not divide"):
+        HardwareSearchSpace(mesh_shapes=((5, 5),)).enumerate_specs(base)
+
+
+def test_hardware_search_counts_oversubscribed_variants_as_failed():
+    """A variant too small for explicit search degrees must not abort the
+    whole hardware sweep."""
+    exp = _tiny_experiment(          # base tpu_v5e_2x2 has 4 devices
+        search=SearchSpace(degrees=[(2, 2, 1)], microbatch_sizes=(1,),
+                           layouts=(Layout.S_SHAPE,)),
+        hardware_search=HardwareSearchSpace(mesh_shapes=((2, 2), (1, 2))))
+    rep = exp.sweep()
+    assert rep.num_hardware == 2
+    assert rep.num_failed == 1               # the 1x2 variant (2 devices)
+    assert rep.runs and all("2x2" in r.hardware for r in rep.runs)

@@ -64,3 +64,48 @@ def test_quickstart_tiny_runs():
     proc = _run([str(ROOT / "examples" / "quickstart.py"), "--tiny"])
     assert proc.returncode == 0, proc.stderr[-2000:]
     assert "planner ranking" in proc.stdout
+
+
+def test_cli_hardware_dump_and_json_round_trip(tmp_path):
+    proc = _run(["-m", "repro", "hardware", "--hardware", "wafer_scale"])
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    payload = json.loads(proc.stdout)
+    assert payload["name"] == "wafer_scale"
+    assert payload["topology"]["kind"] == "hierarchical"
+    hw_json = tmp_path / "wafer.json"
+    hw_json.write_text(proc.stdout)
+    proc = _run(["-m", "repro", "simulate", "--arch", "yi-6b",
+                 "--hardware-json", str(hw_json), "--pp", "4", "--dp", "2",
+                 "--tp", "2", "--global-batch", "16", "--seq-len", "128",
+                 "--json", "-"])
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    payload = json.loads(proc.stdout[proc.stdout.index("{"):])
+    assert payload["hardware"] == "wafer_scale"
+    assert payload["throughput"] > 0
+
+
+def test_cli_d_model_calibration():
+    proc = _run(["-m", "repro", "hardware", "--hardware", "a100x8",
+                 "--d-model", "20480"])
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    hi = json.loads(proc.stdout)["tile"]["compute_efficiency"]
+    proc = _run(["-m", "repro", "hardware", "--hardware", "a100x8"])
+    base = json.loads(proc.stdout)["tile"]["compute_efficiency"]
+    assert hi > base
+    # calibration is a100-only
+    proc = _run(["-m", "repro", "hardware", "--hardware", "wafer_scale",
+                 "--d-model", "20480"])
+    assert proc.returncode != 0 and "a100x<N>" in proc.stderr
+
+
+def test_cli_sweep_hardware_variants():
+    proc = _run(["-m", "repro", "sweep", "--arch", "yi-6b",
+                 "--hardware", "tpu_v5e_2x2", "--global-batch", "8",
+                 "--seq-len", "128", "--max-plans", "3",
+                 "--microbatch-sizes", "1", "--layouts", "s_shape",
+                 "--hw-flops", "100e12", "197e12", "--json", "-"])
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    report = json.loads(proc.stdout[proc.stdout.index("{"):])
+    assert report["num_hardware"] == 2
+    hw_names = {r["hardware"] for r in report["runs"]}
+    assert len(hw_names) == 2

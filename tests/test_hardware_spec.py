@@ -1,0 +1,255 @@
+"""Declarative hardware layer: topology spec compilation, cached routing,
+torus wraparound, HardwareSpec JSON round-trip, preset equivalence.
+
+Acceptance for the hardware-API PR: compiled routing tables match the
+direct ``Mesh2D``/``GPUCluster`` code paths route-by-route, torus routes
+never exceed mesh routes, JSON round-trip is lossless for every preset,
+and presets rebuilt on spec builders simulate identically to hand-built
+hardware.
+"""
+
+import json
+
+import pytest
+
+from proptools import given
+from repro.core import (
+    DRAMSpec,
+    GPUCluster,
+    GPUClusterSpec,
+    HardwareSpec,
+    HierarchicalSpec,
+    Mesh2D,
+    MeshSpec,
+    ParallelPlan,
+    TileSpec,
+    Torus2D,
+    a100_cluster,
+    grayskull,
+    simulate,
+    topology_spec_from_dict,
+    tpu_v5e_pod,
+    transformer_lm_graph,
+    wafer_scale,
+)
+
+PRESETS = [grayskull, wafer_scale, lambda: a100_cluster(8),
+           lambda: tpu_v5e_pod(2, 2)]
+
+
+# ---------------------------------------------------------------------------
+# spec compilation matches the direct topology classes route-by-route
+# ---------------------------------------------------------------------------
+
+@given(n_cases=10)
+def test_prop_mesh_spec_compiles_to_identical_routing(rng, case):
+    rows, cols = int(rng.integers(1, 7)), int(rng.integers(2, 7))
+    tile = (1, 1) if case % 2 == 0 else (rows, 1)
+    spec = MeshSpec(rows=rows, cols=cols, intra_bw=1e11, inter_bw=5e10,
+                    link_latency=3e-8, tile_shape=tile)
+    compiled = spec.compile()
+    direct = Mesh2D(rows, cols, intra_bw=1e11, inter_bw=5e10,
+                    link_latency=3e-8, tile_shape=tile)
+    assert compiled.num_links() == direct.num_links()
+    for s in range(compiled.num_devices):
+        for d in range(compiled.num_devices):
+            assert compiled.route(s, d) == direct.route(s, d), (s, d)
+    for l in range(compiled.num_links()):
+        assert compiled.link_bandwidth(l) == direct.link_bandwidth(l)
+        assert compiled.link_latency(l) == direct.link_latency(l)
+
+
+def test_gpu_cluster_spec_compiles_to_identical_routing():
+    spec = GPUClusterSpec(num_gpus=16, gpus_per_node=4)
+    compiled, direct = spec.compile(), GPUCluster(16, gpus_per_node=4)
+    for s in range(16):
+        for d in range(16):
+            assert compiled.route(s, d) == direct.route(s, d)
+    for l in range(compiled.num_links()):
+        assert compiled.link_bandwidth(l) == direct.link_bandwidth(l)
+        assert compiled.link_latency(l) == direct.link_latency(l)
+
+
+def test_hierarchical_spec_flattens_to_two_level_mesh():
+    spec = HierarchicalSpec(
+        tile=MeshSpec(rows=4, cols=4, intra_bw=1024e9, link_latency=2e-8),
+        grid_rows=5, grid_cols=4, inter_bw=256e9)
+    topo = spec.compile()
+    direct = Mesh2D(20, 16, intra_bw=1024e9, inter_bw=256e9,
+                    link_latency=2e-8, tile_shape=(4, 4))
+    assert (topo.rows, topo.cols) == (20, 16)
+    assert spec.num_devices == 320
+    # intra-tile hop fast, tile-boundary hop slow, identical to direct build
+    for l in range(topo.num_links()):
+        assert topo.link_bandwidth(l) == direct.link_bandwidth(l)
+    assert topo.link_bandwidth(topo.route(0, 1)[0]) == 1024e9
+    assert topo.link_bandwidth(topo.route(3, 4)[0]) == 256e9   # crosses col 3->4
+
+
+def test_hierarchical_spec_rejects_nested_structure():
+    with pytest.raises(ValueError, match="flat mesh"):
+        HierarchicalSpec(tile=MeshSpec(2, 2, intra_bw=1e9, torus=True),
+                         grid_rows=2, grid_cols=2, inter_bw=1e9)
+
+
+# ---------------------------------------------------------------------------
+# cached routing: caches agree with fresh computation; metrics agree with
+# the route they summarize
+# ---------------------------------------------------------------------------
+
+@given(n_cases=8)
+def test_prop_cached_routing_matches_uncached(rng, case):
+    rows, cols = int(rng.integers(2, 6)), int(rng.integers(2, 6))
+    spec = MeshSpec(rows=rows, cols=cols, intra_bw=1e11, torus=bool(case % 2))
+    cached = spec.compile(cache_routing=True)
+    baseline = spec.compile(cache_routing=False)
+    for s in range(cached.num_devices):
+        for d in range(cached.num_devices):
+            r1 = cached.route(s, d)
+            assert r1 == baseline.route(s, d)
+            assert cached.route(s, d) is r1          # memoized object
+            hops, lat, bw = cached.path_metrics(s, d)
+            assert hops == len(r1)
+            if r1:
+                assert lat == pytest.approx(
+                    sum(cached.link_latency(l) for l in r1))
+                assert bw == min(cached.link_bandwidth(l) for l in r1)
+            else:
+                assert (lat, bw) == (0.0, float("inf"))
+
+
+# ---------------------------------------------------------------------------
+# torus routing
+# ---------------------------------------------------------------------------
+
+@given(n_cases=10)
+def test_prop_torus_routes_never_exceed_mesh_routes(rng, case):
+    rows, cols = int(rng.integers(2, 8)), int(rng.integers(2, 8))
+    mesh = MeshSpec(rows, cols, intra_bw=1e11).compile()
+    torus = MeshSpec(rows, cols, intra_bw=1e11, torus=True).compile()
+    for s in range(mesh.num_devices):
+        for d in range(mesh.num_devices):
+            assert torus.hops(s, d) <= mesh.hops(s, d), (s, d)
+
+
+def test_torus_wraparound_is_single_hop():
+    t = MeshSpec(4, 6, intra_bw=1e11, torus=True).compile()
+    assert isinstance(t, Torus2D)
+    assert t.hops(0, 5) == 1                      # (0,0) -> (0,5): west wrap
+    assert t.hops(5, 0) == 1
+    assert t.hops(0, t.device(3, 0)) == 1         # (0,0) -> (3,0): north wrap
+    # opposite corners: 1 wrap hop per dimension
+    assert t.hops(0, t.device(3, 5)) == 2
+    # every route's links exist and have bandwidth
+    for s in (0, 5, 17, 23):
+        for d in range(t.num_devices):
+            for l in t.route(s, d):
+                assert 0 <= l < t.num_links()
+                assert t.link_bandwidth(l) > 0
+
+
+def test_torus_wrap_links_cross_tile_boundary_bandwidth():
+    t = MeshSpec(4, 4, intra_bw=1e12, inter_bw=1e11, tile_shape=(2, 2),
+                 torus=True).compile()
+    wrap = t.route(0, 3)                          # (0,0) -> (0,3): west wrap
+    assert len(wrap) == 1
+    assert t.link_bandwidth(wrap[0]) == 1e11      # tiles (0,0) vs (0,1)
+
+
+# ---------------------------------------------------------------------------
+# JSON round-trip: lossless for every preset + equivalent simulation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("make", PRESETS)
+def test_preset_json_round_trip_is_lossless(make):
+    hw = make()
+    d = hw.to_dict()
+    json.dumps(d)                                 # JSON-clean (no Infinity)
+    back = HardwareSpec.from_json(hw.to_json())
+    assert back.to_dict() == d
+    assert back.name == hw.name
+    assert back.num_devices == hw.num_devices
+    assert back.dram_ports == hw.dram_ports
+    assert back.tile == hw.tile and back.dram == hw.dram
+
+
+@pytest.mark.parametrize("make", PRESETS)
+def test_preset_round_trip_simulates_identically(make):
+    hw = make()
+    back = HardwareSpec.from_json(hw.to_json())
+    g = transformer_lm_graph("t", 2, 128, 4, seq_len=64, batch=2, vocab=256)
+    plan = ParallelPlan(pp=2, dp=2, global_batch=4)
+    a = simulate(g, hw, plan, noc_mode="detailed")
+    b = simulate(g, back, plan, noc_mode="detailed")
+    assert a.total_time == b.total_time
+    assert a.noc_bytes == b.noc_bytes and a.dram_bytes == b.dram_bytes
+
+
+def test_topology_spec_dict_dispatch_and_errors():
+    spec = MeshSpec(2, 3, intra_bw=1e9)
+    assert topology_spec_from_dict(spec.to_dict()) == spec
+    h = HierarchicalSpec(tile=MeshSpec(2, 2, intra_bw=1e9),
+                         grid_rows=2, grid_cols=2, inter_bw=1e8)
+    assert topology_spec_from_dict(h.to_dict()) == h
+    with pytest.raises(ValueError, match="unknown topology kind"):
+        topology_spec_from_dict({"kind": "hypercube"})
+    with pytest.raises(ValueError, match="kind"):
+        topology_spec_from_dict({"rows": 2})
+
+
+def test_custom_topology_without_spec_refuses_to_serialize():
+    from repro.core import Topology
+
+    class Foreign(Topology):
+        num_devices = 2
+    hw = HardwareSpec(name="x", topology=Foreign(),
+                      tile=TileSpec(flops=1e12, sram_bytes=1e6),
+                      dram=DRAMSpec(bandwidth=1e9))
+    with pytest.raises(ValueError, match="no declarative spec"):
+        hw.to_dict()
+
+
+# ---------------------------------------------------------------------------
+# presets rebuilt on spec builders == hand-built hardware (old code path)
+# ---------------------------------------------------------------------------
+
+def test_spec_built_presets_match_hand_built_hardware():
+    """The four presets, re-implemented on spec builders, must simulate
+    identically to directly-constructed topology objects (the pre-spec
+    code path)."""
+    g = transformer_lm_graph("t", 2, 128, 4, seq_len=64, batch=2, vocab=256)
+    plan = ParallelPlan(pp=2, dp=2, global_batch=4)
+    GB = 1e9
+
+    hand = {
+        "grayskull": grayskull().with_(
+            topology=Mesh2D(10, 12, intra_bw=192 * GB, link_latency=5e-8)),
+        "wafer_scale": wafer_scale().with_(
+            topology=Mesh2D(20, 16, intra_bw=1024 * GB, inter_bw=256 * GB,
+                            link_latency=2e-8, tile_shape=(4, 4))),
+        "a100x8": a100_cluster(8).with_(topology=GPUCluster(8)),
+        "tpu_v5e_2x2": tpu_v5e_pod(2, 2).with_(
+            topology=Mesh2D(2, 2, intra_bw=50 * GB, link_latency=1e-6)),
+    }
+    spec_built = {hw.name: hw for hw in (make() for make in PRESETS)}
+    for name, hw_hand in hand.items():
+        for mode in ("detailed", "macro", "analytical"):
+            a = simulate(g, spec_built[name], plan, noc_mode=mode)
+            b = simulate(g, hw_hand, plan, noc_mode=mode)
+            assert a.total_time == b.total_time, (name, mode)
+
+
+# ---------------------------------------------------------------------------
+# nearest-DRAM-port caching
+# ---------------------------------------------------------------------------
+
+def test_nearest_dram_port_cached_and_correct():
+    hw = wafer_scale()
+    topo = hw.topology
+    for dev in (0, 37, 151, 319):
+        port = hw.nearest_dram_port(dev)
+        assert port in hw.dram_ports
+        best = min(topo.hops(dev, p) for p in hw.dram_ports)
+        assert topo.hops(dev, port) == best
+        assert hw.nearest_dram_port(dev) == port   # cached second read
+    assert a100_cluster(4).nearest_dram_port(0) is None
