@@ -1,31 +1,81 @@
 """§V-B plan sweep through the Experiment API: process-pool SweepEngine
-must reproduce the serial ranking exactly while cutting wall-clock, and
+must reproduce the serial ranking exactly while cutting wall-clock,
 memory-cap pruning must happen before simulation (pruned plans cost a
-mapping, not an event-driven run)."""
+mapping, not an event-driven run), and the merged hardware x plan sweep
+must beat the legacy pool-per-variant execution (one shared pool,
+workers initialized once, vs one pool spawned per hardware variant).
+
+Standalone (CI bench-smoke):
+
+    PYTHONPATH=src python benchmarks/bench_sweep_engine.py --tiny \
+        --json artifacts/bench_sweep_engine.json
+"""
 
 from __future__ import annotations
 
-import os
-import time
+# allow `python benchmarks/bench_sweep_engine.py` (CI bench-smoke) in
+# addition to `python -m benchmarks.run --only sweep_engine`
+if __package__ in (None, ""):
+    import sys
+    from pathlib import Path
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+    __package__ = "benchmarks"
 
-from repro.api import Experiment, SearchSpace
+import argparse
+import json
+import os
+import sys
+import time
+from pathlib import Path
+
+from repro.api import Experiment, HardwareSearchSpace, SearchSpace
 
 from .common import Report
 
 
-def _sweep_exp(memory_cap=None) -> Experiment:
+def _sweep_exp(memory_cap=None, tiny=False) -> Experiment:
     return Experiment(
         arch="yi-6b",
         hardware="grayskull",
-        search=SearchSpace(max_plans=24, microbatch_sizes=(1, 2)),
+        search=SearchSpace(max_plans=8 if tiny else 24,
+                           microbatch_sizes=(1,) if tiny else (1, 2)),
         global_batch=32,
-        seq_len=512,
+        seq_len=256 if tiny else 512,
         memory_cap=memory_cap,
     )
 
 
-def run(report: Report) -> None:
-    exp = _sweep_exp()
+def _hw_exp(tiny=False) -> Experiment:
+    """Hardware x plan product for the shared-pool vs pool-per-variant
+    comparison."""
+    return Experiment(
+        arch="yi-6b",
+        hardware="grayskull",
+        search=SearchSpace(max_plans=4 if tiny else 8,
+                           microbatch_sizes=(1,)),
+        hardware_search=HardwareSearchSpace(
+            tile_flops=(1.5e12, 3.07e12) if tiny else (1.5e12, 3.07e12, 6e12),
+            dram_bandwidth=(6.25e9, 12.5e9),
+        ),
+        global_batch=32,
+        seq_len=256 if tiny else 512,
+    )
+
+
+def _pool_per_variant(exp: Experiment, workers: int):
+    """Legacy execution shape: one process pool spawned per hardware
+    variant (the baseline the shared-pool job stream replaces)."""
+    specs = exp.hardware_search.enumerate_specs(exp.hardware_spec)
+    runs = []
+    for spec in specs:
+        sub = exp.with_(hardware=spec, hardware_search=None)
+        runs.extend(sub.sweep(workers=workers).runs)
+    runs.sort(key=lambda r: -r.throughput)
+    return runs
+
+
+def run(report: Report, tiny: bool = False) -> None:
+    exp = _sweep_exp(tiny=tiny)
 
     t0 = time.perf_counter()
     serial = exp.sweep(workers=0)
@@ -49,9 +99,69 @@ def run(report: Report) -> None:
     # not just filter the output
     cap = sorted(r.peak_memory_bytes for r in serial.runs)[len(serial.runs) // 2]
     t0 = time.perf_counter()
-    pruned = _sweep_exp(memory_cap=cap).sweep(workers=0)
+    pruned = _sweep_exp(memory_cap=cap, tiny=tiny).sweep(workers=0)
     t_pruned = time.perf_counter() - t0
     report.log(f"memory_cap={cap / 1e9:.2f} GB: {pruned.num_pruned_memory} plans "
                f"pruned pre-simulation; {t_pruned:.2f}s vs {t_serial:.2f}s uncapped")
     report.add("sweep_pruned", t_pruned * 1e6,
                f"{pruned.num_pruned_memory}_pruned")
+
+    # merged hardware x plan sweep: one shared pool over the flattened
+    # (variant, plan) job stream vs one pool spawned per variant
+    hw_exp = _hw_exp(tiny=tiny)
+    t0 = time.perf_counter()
+    merged = hw_exp.sweep(workers=workers)
+    t_shared = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    legacy_runs = _pool_per_variant(hw_exp, workers)
+    t_legacy = time.perf_counter() - t0
+
+    hw_parity = ([(r.hardware, r.plan) for r in merged.runs]
+                 == [(r.hardware, r.plan) for r in legacy_runs])
+    hw_speedup = t_legacy / t_shared if t_shared > 0 else float("inf")
+    report.log(f"hardware x plan: {merged.num_hardware} variants, "
+               f"{merged.num_candidates} joint candidates; shared pool "
+               f"{t_shared:.2f}s vs pool-per-variant {t_legacy:.2f}s "
+               f"({hw_speedup:.2f}x); ranking parity: {hw_parity}")
+    report.add("hw_sweep_shared_pool", t_shared * 1e6,
+               f"{merged.num_candidates}_jobs")
+    report.add("hw_sweep_pool_per_variant", t_legacy * 1e6,
+               f"speedup_{hw_speedup:.2f}x")
+    report.add("hw_sweep_parity", 0.0, "ok" if hw_parity else "MISMATCH")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="seconds-scale config for CI bench-smoke runs")
+    ap.add_argument("--json", type=Path, default=None, metavar="FILE",
+                    help="write the {rows, lines} JSON report here")
+    args = ap.parse_args(argv)
+
+    report = Report()
+    t0 = time.time()
+    run(report, tiny=args.tiny)
+    elapsed = time.time() - t0
+    report.log(f"[sweep_engine: {elapsed:.1f}s]")
+
+    if args.json is not None:
+        doc = {
+            "suite": "sweep_engine",
+            "tiny": args.tiny,
+            "elapsed_s": elapsed,
+            "rows": [dict(zip(("name", "us_per_call", "derived"),
+                              row.split(",", 2)))
+                     for row in report.rows],
+            "lines": report.lines,
+        }
+        args.json.parent.mkdir(parents=True, exist_ok=True)
+        args.json.write_text(json.dumps(doc, indent=2) + "\n")
+        print(f"[bench report written to {args.json}]")
+
+    # parity rows double as a smoke gate for CI
+    return 1 if any(row.endswith("MISMATCH") for row in report.rows) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -26,6 +26,12 @@ from ..core.hardware import (
     TopologySpec,
 )
 from ..core.parallelism import ParallelPlan
+from ..core.planner import (
+    CodesignResult,
+    PlannerCfg,
+    plan_codesign,
+    plan_parallelism,
+)
 from .experiment import (
     Experiment,
     HARDWARE_PRESETS,
@@ -38,6 +44,7 @@ from .sweep import SweepEngine
 
 __all__ = [
     "BoundaryMode",
+    "CodesignResult",
     "Experiment",
     "GPUClusterSpec",
     "HARDWARE_PRESETS",
@@ -48,13 +55,16 @@ __all__ = [
     "MeshSpec",
     "NoCMode",
     "ParallelPlan",
+    "PlannerCfg",
     "RunReport",
     "Schedule",
     "SearchSpace",
     "SweepEngine",
     "SweepReport",
     "TopologySpec",
+    "plan_codesign",
     "plan_from_dict",
+    "plan_parallelism",
     "plan_to_dict",
     "resolve_hardware",
 ]

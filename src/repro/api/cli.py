@@ -7,6 +7,8 @@
     python -m repro sweep --arch yi-6b --hardware wafer_scale \
         --hw-flops 8e12 16e12 --hw-mesh 4x4 5x4 --global-batch 64
     python -m repro plan --arch dbrx-132b --hardware wafer_scale
+    python -m repro plan --arch yi-6b --hardware wafer_scale \
+        --hw-flops 8e12 16e12 --hw-mesh 5x4 4x4 --codesign-json best_hw.json
     python -m repro hardware --hardware wafer_scale > wafer.json
     python -m repro simulate --arch yi-6b --hardware-json wafer.json ...
 
@@ -226,11 +228,27 @@ def _cmd_plan(args) -> int:
     p = best.plan
     print(f"best plan for {report.arch} on {report.hardware}:")
     if report.num_hardware > 1:
-        print(f"  hardware: {best.hardware}")
+        print(f"  hardware: {best.hardware}  (co-design over "
+              f"{report.num_hardware} variants)")
     print(f"  pp={p.pp} dp={p.dp} tp={p.tp} microbatch={p.microbatch} "
           f"schedule={p.schedule} layout={p.layout}")
     print(f"  -> {best.throughput:.3f} samples/s, bubble {best.bubble_ratio:.1%}, "
           f"peak memory {best.peak_memory_bytes / 1e9:.2f} GB/tile")
+    if args.codesign_json is not None:
+        spec_dict = report.best_hardware_dict()
+        if spec_dict is None:
+            print("error: --codesign-json needs a hardware search "
+                  "(--hw-* axes)", file=sys.stderr)
+            return 2
+        from ..core.planner import CodesignResult
+        res = CodesignResult(hardware=HardwareSpec.from_dict(spec_dict),
+                             plan=p, run=best, report=report)
+        text = res.to_json(indent=2)
+        if str(args.codesign_json) == "-":
+            print(text)
+        else:
+            args.codesign_json.write_text(text + "\n")
+            print(f"[co-design recommendation written to {args.codesign_json}]")
     _emit(best if args.best_only else report, args.json)
     return 0
 
@@ -269,6 +287,10 @@ def main(argv: Optional[List[str]] = None) -> int:
     _add_sweep_flags(pln)
     pln.add_argument("--best-only", action="store_true",
                      help="with --json, write only the best RunReport")
+    pln.add_argument("--codesign-json", type=Path, default=None, metavar="FILE",
+                     help="with --hw-* axes, write the co-design "
+                          "recommendation (winning hardware spec JSON + "
+                          "plan) here ('-' for stdout)")
     pln.set_defaults(fn=_cmd_plan)
 
     hwc = sub.add_parser(

@@ -23,8 +23,9 @@ from __future__ import annotations
 import dataclasses
 import functools
 import itertools
+import json
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional, Sequence, Tuple, Union
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 from ..configs import get_config
 from ..configs.base import ArchConfig
@@ -51,7 +52,8 @@ __all__ = ["Experiment", "SearchSpace", "HardwareSearchSpace",
 def resolve_hardware(hw: Union[str, HardwareSpec],
                      d_model: Optional[int] = None) -> HardwareSpec:
     """Accept a HardwareSpec or a preset name (``a100x<N>`` builds a GPU
-    cluster of N devices, ``tpu_v5e_<R>x<C>`` a pod slice).
+    cluster of N devices, ``tpu_v5e_<R>x<C>`` a pod slice,
+    ``tpu_v5e_torus_<R>x<C>`` the same slice with wraparound ICI links).
 
     ``d_model`` selects the point on the a100 sustained-GEMM efficiency
     curve (cuBLAS efficiency grows with matrix size); it is only
@@ -74,14 +76,15 @@ def resolve_hardware(hw: Union[str, HardwareSpec],
                          f"not {hw!r}")
     if hw in HARDWARE_PRESETS:
         return HARDWARE_PRESETS[hw]()
-    if hw.startswith("tpu_v5e_"):        # e.g. tpu_v5e_4x4
-        try:
-            rows, cols = hw[len("tpu_v5e_"):].split("x")
-            return tpu_v5e_pod(int(rows), int(cols))
-        except ValueError:
-            pass
+    for prefix, torus in (("tpu_v5e_torus_", True), ("tpu_v5e_", False)):
+        if hw.startswith(prefix):        # e.g. tpu_v5e_4x4, tpu_v5e_torus_4x4
+            try:
+                rows, cols = hw[len(prefix):].split("x")
+                return tpu_v5e_pod(int(rows), int(cols), torus=torus)
+            except ValueError:
+                pass
     raise ValueError(f"unknown hardware preset {hw!r}; known: "
-                     f"{sorted(HARDWARE_PRESETS) + ['a100x<N>', 'tpu_v5e_<R>x<C>']}")
+                     f"{sorted(HARDWARE_PRESETS) + ['a100x<N>', 'tpu_v5e_<R>x<C>', 'tpu_v5e_torus_<R>x<C>']}")
 
 
 def _divisor_splits(n: int) -> List[Tuple[int, int, int]]:
@@ -208,7 +211,9 @@ class HardwareSearchSpace:
     to be a :class:`MeshSpec` or :class:`HierarchicalSpec`.
 
     When the mesh shape changes, edge DRAM ports are re-placed evenly
-    along the west edge (column 0), preserving the base port count.
+    along the *same edges* they occupy in the base layout (per-edge counts
+    preserved, so two-edge layouts like ``wafer_scale``'s west+east
+    columns stay two-edge); interior ports count toward the west edge.
     """
 
     tile_flops: Sequence[float] = ()
@@ -275,9 +280,11 @@ class HardwareSearchSpace:
                 raise ValueError(
                     f"hardware {base.name!r} has no declarative topology spec; "
                     "topology axes (intra_bw/inter_bw/mesh_shapes) need one")
-            topo_spec = self._mutate_topology(topo_spec, topo_axes)
+            new_spec = self._mutate_topology(topo_spec, topo_axes)
             if "mesh_shape" in topo_axes and dram_ports:
-                dram_ports = _west_edge_ports(topo_spec, len(dram_ports))
+                dram_ports = _replace_edge_ports(topo_spec, new_spec,
+                                                 dram_ports)
+            topo_spec = new_spec
 
         name = base.name + ("~" + "~".join(tags) if tags else "")
         return HardwareSpec(
@@ -330,14 +337,47 @@ class HardwareSearchSpace:
         raise ValueError(f"cannot sweep topology axes of {type(spec).__name__}")
 
 
-def _west_edge_ports(spec: TopologySpec, count: int) -> Tuple[int, ...]:
-    """Re-place ``count`` DRAM ports evenly along column 0 of a mesh spec."""
-    if isinstance(spec, HierarchicalSpec):
-        spec = spec.flatten()
-    rows, cols = spec.rows, spec.cols
-    count = max(1, min(count, rows))
-    picked = sorted({(i * rows) // count for i in range(count)})
-    return tuple(r * cols for r in picked)
+# deterministic edge order for placement and tie-breaking
+_EDGE_ORDER = ("west", "east", "north", "south")
+
+
+def _flat_mesh(spec: TopologySpec) -> MeshSpec:
+    return spec.flatten() if isinstance(spec, HierarchicalSpec) else spec
+
+
+def _replace_edge_ports(base: TopologySpec, new: TopologySpec,
+                        ports: Sequence[int]) -> Tuple[int, ...]:
+    """Re-place DRAM ports on a re-shaped mesh, preserving the base
+    layout's per-edge distribution.
+
+    Each base port is attributed to the edge it lies on (corner ports go
+    to whichever of their edges carries more ports overall, so e.g.
+    ``wafer_scale``'s west+east columns stay a two-edge layout and
+    ``grayskull``'s top row stays north); interior ports count toward the
+    west edge. Each edge's ports are then spread evenly along the same
+    edge of the new mesh, capped at the edge length.
+    """
+    base_mesh, new_mesh = _flat_mesh(base), _flat_mesh(new)
+    membership = [base_mesh.device_edges(p) or ("west",) for p in ports]
+    totals = {e: sum(e in m for m in membership) for e in _EDGE_ORDER}
+    counts = dict.fromkeys(_EDGE_ORDER, 0)
+    for edges in membership:
+        best = max(edges, key=lambda e: (totals[e], -_EDGE_ORDER.index(e)))
+        counts[best] += 1
+    placed: Dict[int, None] = {}            # ordered, collision-free
+    for edge in _EDGE_ORDER:
+        devs = new_mesh.edge_devices(edge)
+        k = min(counts[edge], len(devs))
+        for i in range(k):
+            want = (i * len(devs)) // k
+            # a corner shared with an already-placed edge would silently
+            # drop a port — slide to the nearest free device on this edge
+            for offset in range(len(devs)):
+                cand = devs[(want + offset) % len(devs)]
+                if cand not in placed:
+                    placed[cand] = None
+                    break
+    return tuple(placed)
 
 
 @dataclass
@@ -427,13 +467,18 @@ class Experiment:
         from .sweep import run_one          # local import: sweep imports report
         return run_one(self, self.plan)
 
-    def sweep(self, workers: int = 0) -> SweepReport:
+    def sweep(self, workers: int = 0,
+              return_timelines: bool = False) -> SweepReport:
         """Evaluate the search space; ``workers=0`` is serial, ``workers=N``
         uses an N-process pool, ``workers=None`` uses all cores. With a
-        ``hardware_search``, every hardware variant is swept and the
-        merged report ranks hardware x parallelism points."""
+        ``hardware_search``, the full (hardware variant x plan) product is
+        flattened into one job stream evaluated by a single shared pool
+        and the merged report ranks hardware x parallelism points.
+        ``return_timelines=True`` ships each run's full :class:`SimResult`
+        back on ``RunReport.sim`` (reports stay scalar by default)."""
+        return_timelines = return_timelines or self.collect_timeline
         if self.hardware_search is not None:
-            return self._sweep_hardware(workers)
+            return self._sweep_hardware(workers, return_timelines)
         if self.search is None:
             if self.plan is not None:   # degenerate single-point sweep
                 plans = [self.plan]
@@ -444,34 +489,57 @@ class Experiment:
                 self.hardware_spec, self.global_batch,
                 training=self.training, arch=self.arch_config)
         from .sweep import SweepEngine
-        return SweepEngine(workers=workers).sweep(self, plans)
+        return SweepEngine(workers=workers,
+                           return_timelines=return_timelines).sweep(self, plans)
 
-    def _sweep_hardware(self, workers: int) -> SweepReport:
+    def _plans_for(self, spec: HardwareSpec) -> List[ParallelPlan]:
+        """Plan list for one hardware variant (raises ValueError when the
+        variant cannot host the fixed plan / explicit search degrees)."""
+        if self.search is not None:
+            return self.search.enumerate_plans(
+                spec, self.global_batch,
+                training=self.training, arch=self.arch_config)
+        # fixed plan: reuse Experiment validation against this variant
+        self.with_(hardware=spec, hardware_search=None)
+        return [self.plan]
+
+    def _sweep_hardware(self, workers: int,
+                        return_timelines: bool = False) -> SweepReport:
+        """Merged hardware x plan sweep: flatten every variant's plan list
+        into one (variant, plan) job stream and evaluate it through one
+        shared process pool (workers are initialized once with all variant
+        specs; each worker's graph memo is shared across variants)."""
+        from .sweep import Job, SweepEngine
         base = self.hardware_spec
         specs = self.hardware_search.enumerate_specs(base)
-        reports: List[SweepReport] = []
+        kept: List[HardwareSpec] = []
+        jobs: List[Job] = []
         failed = 0
         for spec in specs:
             try:
                 # a variant can be too small for a fixed plan or for explicit
                 # search degrees — count it failed, keep the other variants
-                sub = self.with_(hardware=spec, hardware_search=None)
-                reports.append(sub.sweep(workers=workers))
+                plans = self._plans_for(spec)
             except ValueError:
                 failed += 1
-        runs = sorted((r for rep in reports for r in rep.runs),
-                      key=lambda r: -r.throughput)
-        return SweepReport(
-            arch=self.arch_name,
-            hardware=(base.name if len(specs) == 1
-                      else f"{base.name} (x{len(specs)} hardware variants)"),
-            runs=runs,
-            num_candidates=sum(r.num_candidates for r in reports),
-            num_pruned_memory=sum(r.num_pruned_memory for r in reports),
-            num_failed=failed + sum(r.num_failed for r in reports),
-            executor=reports[0].executor if reports else "serial",
+                continue
+            jobs.extend((len(kept), p) for p in plans)
+            kept.append(spec)
+        engine = SweepEngine(workers=workers, return_timelines=return_timelines)
+        report = engine.sweep_jobs(
+            self, kept, jobs,
+            hardware_name=(base.name if len(specs) == 1
+                           else f"{base.name} (x{len(specs)} hardware variants)"),
             num_hardware=len(specs),
-        )
+            extra_failed=failed)
+        for spec in kept:
+            try:
+                # normalize through JSON (tuples -> lists) so stored dicts
+                # compare equal across a report to_json/from_json round-trip
+                report.hardware_specs[spec.name] = json.loads(spec.to_json())
+            except ValueError:
+                pass        # custom topology without a declarative spec
+        return report
 
     def with_(self, **kw) -> "Experiment":
         return dataclasses.replace(self, **kw)

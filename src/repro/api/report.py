@@ -9,6 +9,12 @@ why).
 Both round-trip through ``to_json`` / ``from_json`` so benchmarks and
 downstream tools can persist sweeps without pickling simulator objects;
 plans serialize as plain dicts (:func:`plan_to_dict`).
+
+A RunReport stays scalar by default: when a sweep runs with
+``return_timelines=True`` the full :class:`SimResult` (event timeline,
+per-stage busy time, NoC occupancy) rides along in ``sim``, which is
+excluded from JSON and from equality so scalar reports and their
+round-trips are unaffected.
 """
 
 from __future__ import annotations
@@ -62,10 +68,14 @@ class RunReport:
     noc_bytes: float
     dram_bytes: float
     extra: Dict[str, Any] = field(default_factory=dict)
+    # full SimResult (timeline et al.) when the sweep ran with
+    # return_timelines=True; never serialized, never compared
+    sim: Optional[SimResult] = field(default=None, compare=False, repr=False)
 
     @classmethod
     def from_sim(cls, arch: str, hardware: str, plan: ParallelPlan,
-                 result: SimResult, **extra: Any) -> "RunReport":
+                 result: SimResult, keep_sim: bool = False,
+                 **extra: Any) -> "RunReport":
         return cls(
             arch=arch,
             hardware=hardware,
@@ -80,11 +90,16 @@ class RunReport:
             noc_bytes=result.noc_bytes,
             dram_bytes=result.dram_bytes,
             extra=dict(extra),
+            sim=result if keep_sim else None,
         )
 
     def to_dict(self) -> Dict[str, Any]:
-        d = dataclasses.asdict(self)
+        # drop sim before asdict: timelines are not part of the JSON form,
+        # and deep-converting thousands of events just to pop them is waste
+        src = dataclasses.replace(self, sim=None) if self.sim is not None else self
+        d = dataclasses.asdict(src)
         d["plan"] = plan_to_dict(self.plan)
+        d.pop("sim", None)
         return d
 
     def to_json(self, **kw: Any) -> str:
@@ -94,6 +109,7 @@ class RunReport:
     def from_dict(cls, d: Dict[str, Any]) -> "RunReport":
         d = dict(d)
         d["plan"] = plan_from_dict(d["plan"])
+        d.pop("sim", None)
         return cls(**d)
 
     @classmethod
@@ -120,13 +136,25 @@ class SweepReport:
     num_failed: int = 0                  # raised during mapping/simulation
     executor: str = "serial"
     num_hardware: int = 1                # hardware variants swept (§VI search)
+    # variant name -> HardwareSpec dict for hardware x plan sweeps, so the
+    # winning machine is recoverable from the report alone (co-design)
+    hardware_specs: Dict[str, Dict[str, Any]] = field(default_factory=dict)
 
     @property
     def best(self) -> Optional[RunReport]:
         return self.runs[0] if self.runs else None
 
+    def best_hardware_dict(self) -> Optional[Dict[str, Any]]:
+        """HardwareSpec dict of the best run's variant (None when the sweep
+        had no hardware search or the variant spec was not serializable)."""
+        if self.best is None:
+            return None
+        return self.hardware_specs.get(self.best.hardware)
+
     def to_dict(self) -> Dict[str, Any]:
-        d = dataclasses.asdict(self)
+        # leave runs out of the asdict recursion (their sims could be huge);
+        # each run serializes itself
+        d = dataclasses.asdict(dataclasses.replace(self, runs=[]))
         d["runs"] = [r.to_dict() for r in self.runs]
         return d
 

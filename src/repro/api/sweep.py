@@ -1,17 +1,29 @@
-"""Parallel sweep engine for Experiment plan searches.
+"""Parallel sweep engine for Experiment plan and hardware x plan searches.
 
-Executes plan sweeps through a ``concurrent.futures`` process pool (or
-serially with ``workers=0``) with two structural optimizations over the
+Executes sweeps through a ``concurrent.futures`` process pool (or
+serially with ``workers=0``) with three structural optimizations over the
 legacy ``sweep_plans`` loop:
 
 * **Graph-construction memoization** — the workload graph depends only on
-  the per-iteration batch (``microbatch * dp``), not the full plan, so
-  plans sharing a batch share one graph build (per process).
+  the per-iteration batch (``microbatch * dp``), not the full plan or the
+  hardware, so plans sharing a batch share one graph build per process
+  (across hardware variants too).
 * **Early infeasibility pruning** — per-tile memory is a property of the
   *mapped* graph, so the ``memory_cap`` check runs before the event-driven
   simulation and infeasible plans cost a mapping, not a full run.
+* **One shared pool for hardware sweeps** — a hardware x plan sweep is a
+  single flat job stream of ``(variant, plan)`` pairs evaluated by one
+  process pool whose workers are initialized once with the pickled
+  experiment and every variant spec, instead of spawning a fresh pool per
+  hardware variant (see ``benchmarks/bench_sweep_engine.py`` for the
+  speedup over the pool-per-variant baseline).
 
-Results are deterministic: the engine evaluates plans in enumeration
+``return_timelines=True`` makes workers run the simulator with timeline
+collection on and ship the full :class:`SimResult` back attached to each
+``RunReport.sim``; reports stay scalar (and JSON stays compact) by
+default.
+
+Results are deterministic: the engine evaluates jobs in enumeration
 order and ranks by simulated throughput, so serial and process-pool
 sweeps produce identical SweepReports.
 """
@@ -24,6 +36,7 @@ import warnings
 from concurrent.futures import ProcessPoolExecutor
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from ..core.hardware import HardwareSpec
 from ..core.parallelism import ParallelPlan, map_graph
 from ..core.scheduler import PipelineSimulator, plan_memory
 from .report import RunReport, SweepReport
@@ -33,12 +46,19 @@ __all__ = ["SweepEngine", "run_one"]
 # outcome tags for one plan evaluation
 _OK, _PRUNED, _FAILED = "ok", "pruned", "failed"
 
+# a job is (hardware-variant index, plan); plain plan sweeps use index 0
+Job = Tuple[int, ParallelPlan]
 
-def _evaluate(exp, plan: ParallelPlan, graph_cache: Dict) -> Tuple[str, object]:
-    """Evaluate one plan: build (memoized) graph, map, prune on memory,
-    simulate. Returns (tag, RunReport | reason)."""
+
+def _evaluate(exp, plan: ParallelPlan, graph_cache: Dict,
+              hw: HardwareSpec,
+              return_timelines: bool = False) -> Tuple[str, object]:
+    """Evaluate one (hardware, plan) job: build (memoized) graph, map,
+    prune on memory, simulate. Returns (tag, RunReport | reason)."""
     try:
         if exp.graph_builder is None:
+            # arch_to_graph depends only on (arch, seq_len, batch, mode) —
+            # never on the hardware — so the memo is shared across variants
             key = plan.microbatch * plan.dp
             graph = graph_cache.get(key)
             if graph is None:
@@ -46,7 +66,6 @@ def _evaluate(exp, plan: ParallelPlan, graph_cache: Dict) -> Tuple[str, object]:
                 graph_cache[key] = graph
         else:
             graph = exp.build_graph(plan)   # builder may depend on full plan
-        hw = exp.hardware_spec
         mapped = map_graph(graph, hw, plan)
         mem_plan = None
         if exp.memory_cap is not None:
@@ -55,11 +74,13 @@ def _evaluate(exp, plan: ParallelPlan, graph_cache: Dict) -> Tuple[str, object]:
                 return (_PRUNED, None)
         sim = PipelineSimulator(mapped, noc_mode=exp.noc_mode,
                                 boundary_mode=exp.boundary_mode,
-                                memory_plan=mem_plan)
+                                memory_plan=mem_plan,
+                                collect_timeline=return_timelines)
         result = sim.run()
     except (ValueError, KeyError, TypeError) as e:
         return (_FAILED, f"{type(e).__name__}: {e}")
-    return (_OK, RunReport.from_sim(exp.arch_name, hw.name, plan, result))
+    return (_OK, RunReport.from_sim(exp.arch_name, hw.name, plan, result,
+                                    keep_sim=return_timelines))
 
 
 def run_one(exp, plan: ParallelPlan) -> RunReport:
@@ -70,37 +91,63 @@ def run_one(exp, plan: ParallelPlan) -> RunReport:
     sim = PipelineSimulator(mapped, noc_mode=exp.noc_mode,
                             boundary_mode=exp.boundary_mode,
                             collect_timeline=exp.collect_timeline)
-    return RunReport.from_sim(exp.arch_name, hw.name, plan, sim.run())
+    return RunReport.from_sim(exp.arch_name, hw.name, plan, sim.run(),
+                              keep_sim=exp.collect_timeline)
 
 
 # -- process-pool plumbing ---------------------------------------------------
-# The Experiment is shipped once per worker (initializer) instead of once
-# per task; each worker keeps its own graph memo across tasks.
+# The Experiment and every hardware-variant spec are shipped once per
+# worker (initializer) instead of once per task; each worker keeps its own
+# per-variant graph memo across tasks.
 _WORKER: Dict = {}
 
 
-def _init_worker(exp_bytes: bytes) -> None:
+def _init_worker(exp_bytes: bytes, specs_bytes: bytes,
+                 return_timelines: bool) -> None:
     _WORKER["exp"] = pickle.loads(exp_bytes)
+    _WORKER["specs"] = pickle.loads(specs_bytes)
     _WORKER["graphs"] = {}
+    _WORKER["return_timelines"] = return_timelines
 
 
-def _eval_in_worker(plan: ParallelPlan) -> Tuple[str, object]:
-    return _evaluate(_WORKER["exp"], plan, _WORKER["graphs"])
+def _eval_in_worker(job: Job) -> Tuple[str, object]:
+    variant, plan = job
+    return _evaluate(_WORKER["exp"], plan, _WORKER["graphs"],
+                     hw=_WORKER["specs"][variant],
+                     return_timelines=_WORKER["return_timelines"])
 
 
 class SweepEngine:
-    """Executes a plan sweep for an Experiment.
+    """Executes a plan sweep — or a merged hardware x plan sweep — for an
+    Experiment.
 
     ``workers=0`` (default) runs serially in-process; ``workers=N`` uses an
     N-process pool; ``workers=None`` uses one process per CPU.
+    ``return_timelines=True`` collects the full event timeline per run and
+    attaches the :class:`SimResult` to each ``RunReport.sim``.
     """
 
-    def __init__(self, workers: Optional[int] = 0):
+    def __init__(self, workers: Optional[int] = 0,
+                 return_timelines: bool = False):
         self.workers = os.cpu_count() if workers is None else workers
+        self.return_timelines = return_timelines
 
     def sweep(self, exp, plans: Sequence[ParallelPlan]) -> SweepReport:
-        plans = list(plans)
-        outcomes, executor = self._evaluate_all(exp, plans)
+        """Plan sweep on the experiment's single hardware spec."""
+        hw = exp.hardware_spec
+        return self.sweep_jobs(exp, [hw], [(0, p) for p in plans],
+                               hardware_name=hw.name)
+
+    def sweep_jobs(self, exp, specs: Sequence[HardwareSpec],
+                   jobs: Sequence[Job], *, hardware_name: str,
+                   num_hardware: int = 1,
+                   extra_failed: int = 0) -> SweepReport:
+        """Evaluate a flat ``(variant index, plan)`` job stream against the
+        given hardware variants through one shared executor and return the
+        merged ranked report. ``extra_failed`` accounts for variants that
+        failed before any job was enumerated (e.g. too few devices)."""
+        specs, jobs = list(specs), list(jobs)
+        outcomes, executor = self._evaluate_all(exp, specs, jobs)
 
         runs: List[RunReport] = []
         pruned = failed = 0
@@ -114,28 +161,34 @@ class SweepEngine:
         runs.sort(key=lambda r: -r.throughput)
         return SweepReport(
             arch=exp.arch_name,
-            hardware=exp.hardware_spec.name,
+            hardware=hardware_name,
             runs=runs,
-            num_candidates=len(plans),
+            num_candidates=len(jobs),
             num_pruned_memory=pruned,
-            num_failed=failed,
+            num_failed=failed + extra_failed,
             executor=executor,
+            num_hardware=num_hardware,
         )
 
-    def _evaluate_all(self, exp, plans: Sequence[ParallelPlan]):
-        if self.workers >= 2 and len(plans) > 1:
+    def _evaluate_all(self, exp, specs: Sequence[HardwareSpec],
+                      jobs: Sequence[Job]):
+        if self.workers >= 2 and len(jobs) > 1:
             try:
                 exp_bytes = pickle.dumps(exp)
+                specs_bytes = pickle.dumps(list(specs))
             except Exception as e:   # e.g. lambda graph_builder
                 warnings.warn(
                     f"experiment not picklable ({e}); sweeping serially",
                     RuntimeWarning, stacklevel=3)
             else:
-                n = min(self.workers, len(plans))
+                n = min(self.workers, len(jobs))
                 with ProcessPoolExecutor(
                         max_workers=n,
                         initializer=_init_worker,
-                        initargs=(exp_bytes,)) as pool:
-                    return list(pool.map(_eval_in_worker, plans)), f"process[{n}]"
+                        initargs=(exp_bytes, specs_bytes,
+                                  self.return_timelines)) as pool:
+                    return list(pool.map(_eval_in_worker, jobs)), f"process[{n}]"
         graphs: Dict = {}
-        return [_evaluate(exp, plan, graphs) for plan in plans], "serial"
+        return [_evaluate(exp, plan, graphs, hw=specs[variant],
+                          return_timelines=self.return_timelines)
+                for variant, plan in jobs], "serial"

@@ -279,16 +279,19 @@ def a100_cluster(num_gpus: int, d_model: Optional[int] = None) -> HardwareSpec:
     )
 
 
-def tpu_v5e_pod(rows: int = 16, cols: int = 16) -> HardwareSpec:
+def tpu_v5e_pod(rows: int = 16, cols: int = 16,
+                torus: bool = False) -> HardwareSpec:
     """TPU v5e pod slice for the roofline cross-check (see DESIGN.md §3).
 
-    197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s per ICI link, 2-D torus
-    (modelled as a mesh — simulator routes are upper bounds on torus;
-    build ``MeshSpec(..., torus=True)`` for the wraparound variant).
+    197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s per ICI link. The real pod
+    ICI is a 2-D torus; the default models it as a mesh (simulator routes
+    are upper bounds on torus), ``torus=True`` adds the wraparound links
+    (preset name ``tpu_v5e_torus`` / ``tpu_v5e_torus_<R>x<C>``).
     """
-    spec = MeshSpec(rows=rows, cols=cols, intra_bw=50 * GB, link_latency=1e-6)
+    spec = MeshSpec(rows=rows, cols=cols, intra_bw=50 * GB, link_latency=1e-6,
+                    torus=torus)
     return HardwareSpec(
-        name=f"tpu_v5e_{rows}x{cols}",
+        name=f"tpu_v5e{'_torus' if torus else ''}_{rows}x{cols}",
         topology=spec,
         tile=TileSpec(flops=197 * TFLOPS, sram_bytes=128 * MB,
                       compute_efficiency=0.55, vector_efficiency=0.12),
@@ -298,10 +301,17 @@ def tpu_v5e_pod(rows: int = 16, cols: int = 16) -> HardwareSpec:
     )
 
 
-# name -> zero-arg builder; parameterized families (a100x<N>, tpu_v5e_<R>x<C>)
-# are parsed by repro.api.resolve_hardware on top of this registry.
+def tpu_v5e_torus_pod(rows: int = 16, cols: int = 16) -> HardwareSpec:
+    """The tpu_v5e pod on the wraparound-ICI topology (MeshSpec torus)."""
+    return tpu_v5e_pod(rows, cols, torus=True)
+
+
+# name -> zero-arg builder; parameterized families (a100x<N>,
+# tpu_v5e_<R>x<C>, tpu_v5e_torus_<R>x<C>) are parsed by
+# repro.api.resolve_hardware on top of this registry.
 HARDWARE_PRESETS = {
     "grayskull": grayskull,
     "wafer_scale": wafer_scale,
     "tpu_v5e": tpu_v5e_pod,
+    "tpu_v5e_torus": tpu_v5e_torus_pod,
 }

@@ -1,4 +1,4 @@
-"""PALM as the framework's auto-parallelism planner.
+"""PALM as the framework's auto-parallelism (and hardware co-design) planner.
 
 This is the paper's use-case made first-class: given an architecture
 config and a hardware spec, sweep parallelism strategies through the
@@ -6,6 +6,13 @@ event-driven simulator (the §V-B loop: "directly iterate parallelism
 strategies based on simulation results") and emit the best plan. The
 launchers consume the result to pick TP/DP/PP degrees, microbatch count,
 stage layout and comm strategy.
+
+With a :class:`repro.api.HardwareSearchSpace` in :class:`PlannerCfg`, the
+planner runs the paper's §VI loop instead: hardware variants and
+parallelism plans are ranked *jointly* (one shared-pool sweep over the
+flattened hardware x plan product) and :func:`plan_codesign` emits a
+co-design recommendation — the best hardware spec (as serializable
+:class:`HardwareSpec` JSON) together with the best plan on it.
 
 Since the Experiment API landed this is a thin typed wrapper over
 :class:`repro.api.Experiment` + :class:`repro.api.SweepEngine`: plan
@@ -17,14 +24,19 @@ ParallelPlan, ``.throughput`` the simulated rate).
 
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import List, Optional, Sequence, Union
+import json
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Sequence, TYPE_CHECKING, Union
 
 from ..configs.base import ArchConfig
 from .enums import Layout, NoCMode, Schedule
 from .hardware import HardwareSpec, tpu_v5e_pod
 
-__all__ = ["PlannerCfg", "plan_parallelism"]
+if TYPE_CHECKING:                       # api builds on core; keep it lazy
+    from ..api import HardwareSearchSpace, RunReport, SweepReport
+    from .parallelism import ParallelPlan
+
+__all__ = ["PlannerCfg", "CodesignResult", "plan_parallelism", "plan_codesign"]
 
 
 @dataclass
@@ -39,19 +51,60 @@ class PlannerCfg:
     memory_cap: Optional[float] = None     # bytes per tile
     noc_mode: Union[NoCMode, str] = NoCMode.MACRO
     workers: int = 0                       # 0 = serial; N = process pool
+    # co-design: cross the plan sweep with hardware variants (§VI); the
+    # merged ranking scores joint (hardware, plan) candidates through one
+    # shared-pool sweep
+    hardware_search: Optional["HardwareSearchSpace"] = None
 
 
-def plan_parallelism(
-    arch: ArchConfig,
-    hardware: Optional[HardwareSpec] = None,
-    cfg: PlannerCfg = PlannerCfg(),
-):
-    """Sweep (pp, dp, tp, microbatch, layout, schedule) and rank by
-    simulated throughput. Returns sorted RunReports (best first)."""
+@dataclass
+class CodesignResult:
+    """Joint hardware/parallelism recommendation (§VI co-design loop).
+
+    ``hardware`` is the winning variant as a full serializable spec —
+    ``hardware.to_json()`` is ``--hardware-json`` compatible — and
+    ``plan`` the best parallel plan on it; ``report`` keeps the whole
+    ranked hardware x plan sweep for inspection.
+    """
+
+    hardware: HardwareSpec
+    plan: "ParallelPlan"
+    run: "RunReport"
+    report: "SweepReport" = field(repr=False)
+
+    @property
+    def throughput(self) -> float:
+        return self.run.throughput
+
+    def to_dict(self) -> Dict[str, Any]:
+        from ..api.report import plan_to_dict
+        return {
+            "hardware": self.hardware.to_dict(),
+            "plan": plan_to_dict(self.plan),
+            "throughput": self.run.throughput,
+            "total_time": self.run.total_time,
+            "bubble_ratio": self.run.bubble_ratio,
+            "peak_memory_bytes": self.run.peak_memory_bytes,
+            "num_hardware": self.report.num_hardware,
+            "num_candidates": self.report.num_candidates,
+        }
+
+    def to_json(self, **kw: Any) -> str:
+        return json.dumps(self.to_dict(), **kw)
+
+    def summary(self) -> str:
+        p = self.plan
+        return (f"{self.hardware.name}: pp={p.pp} dp={p.dp} tp={p.tp} "
+                f"mb={p.microbatch} {p.schedule}/{p.layout} -> "
+                f"{self.run.throughput:.2f} samples/s")
+
+
+def _make_experiment(arch: ArchConfig, hardware: Optional[HardwareSpec],
+                     cfg: PlannerCfg):
     from ..api import Experiment, SearchSpace   # api builds on core
 
     hardware = hardware or tpu_v5e_pod()
-    exp = Experiment(
+    return Experiment(
         arch=arch,
         hardware=hardware,
         search=SearchSpace(
@@ -60,10 +113,66 @@ def plan_parallelism(
             microbatch_sizes=tuple(cfg.microbatch_sizes),
             max_plans=cfg.max_plans,
         ),
+        hardware_search=cfg.hardware_search,
         seq_len=cfg.seq_len,
         global_batch=cfg.global_batch,
         training=cfg.training,
         noc_mode=cfg.noc_mode,
         memory_cap=cfg.memory_cap,
     )
-    return exp.sweep(workers=cfg.workers).runs
+
+
+def plan_parallelism(
+    arch: ArchConfig,
+    hardware: Optional[HardwareSpec] = None,
+    cfg: PlannerCfg = PlannerCfg(),
+):
+    """Sweep (pp, dp, tp, microbatch, layout, schedule) and rank by
+    simulated throughput. Returns sorted RunReports (best first).
+
+    With ``cfg.hardware_search`` set, hardware variants derived from
+    ``hardware`` are swept jointly with the plans (one shared process
+    pool) and the ranking covers (hardware, plan) pairs — each report's
+    ``.hardware`` names the variant. Use :func:`plan_codesign` to get the
+    winning variant back as a full :class:`HardwareSpec`.
+    """
+    return _make_experiment(arch, hardware, cfg).sweep(workers=cfg.workers).runs
+
+
+def plan_codesign(
+    arch: ArchConfig,
+    hardware: Optional[HardwareSpec] = None,
+    cfg: PlannerCfg = PlannerCfg(),
+) -> CodesignResult:
+    """Joint hardware/parallelism co-design (§VI): rank the flattened
+    (hardware variant x plan) product and return the best pair as a
+    :class:`CodesignResult` (winning spec + plan + full ranked report).
+
+    ``cfg.hardware_search`` must be set — with no hardware axes there is
+    nothing to co-design and :func:`plan_parallelism` is the right call.
+    """
+    if cfg.hardware_search is None:
+        raise ValueError("plan_codesign needs cfg.hardware_search (use "
+                         "plan_parallelism for a parallelism-only sweep)")
+    exp = _make_experiment(arch, hardware, cfg)
+    report = exp.sweep(workers=cfg.workers)
+    best = report.best
+    if best is None:
+        raise RuntimeError(
+            f"no feasible (hardware, plan) candidate for {exp.arch_name}: "
+            f"{report.num_candidates} candidates, "
+            f"{report.num_pruned_memory} memory-pruned, "
+            f"{report.num_failed} failed")
+    spec_dict = report.best_hardware_dict()
+    if spec_dict is not None:
+        spec = HardwareSpec.from_dict(spec_dict)
+    elif best.hardware == exp.hardware_spec.name:
+        spec = exp.hardware_spec          # winner is the unmodified base
+    else:
+        # never hand back a base spec that contradicts the winning run
+        raise RuntimeError(
+            f"winning variant {best.hardware!r} has no serializable "
+            "HardwareSpec (custom topology without a declarative spec); "
+            "build the base hardware from a TopologySpec to co-design")
+    return CodesignResult(hardware=spec, plan=best.plan, run=best,
+                          report=report)

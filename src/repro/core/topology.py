@@ -425,6 +425,39 @@ class MeshSpec(TopologySpec):
     def num_devices(self) -> int:
         return self.rows * self.cols
 
+    def edge_devices(self, edge: str) -> Tuple[int, ...]:
+        """Device ids along one mesh edge, in row/column order.
+
+        ``edge`` is ``west`` (column 0), ``east`` (last column), ``north``
+        (row 0) or ``south`` (last row) — the placement vocabulary for
+        edge-shared DRAM ports (paper §IV-C ❸).
+        """
+        if edge == "west":
+            return tuple(r * self.cols for r in range(self.rows))
+        if edge == "east":
+            return tuple(r * self.cols + self.cols - 1 for r in range(self.rows))
+        if edge == "north":
+            return tuple(range(self.cols))
+        if edge == "south":
+            return tuple((self.rows - 1) * self.cols + c for c in range(self.cols))
+        raise ValueError(f"unknown edge {edge!r}; "
+                         "expected west/east/north/south")
+
+    def device_edges(self, device: int) -> Tuple[str, ...]:
+        """Edges the device lies on (empty for interior devices; corners
+        report both of their edges)."""
+        r, c = divmod(device, self.cols)
+        out = []
+        if c == 0:
+            out.append("west")
+        if c == self.cols - 1:
+            out.append("east")
+        if r == 0:
+            out.append("north")
+        if r == self.rows - 1:
+            out.append("south")
+        return tuple(out)
+
     def compile(self, cache_routing: bool = True) -> Mesh2D:
         cls = Torus2D if self.torus else Mesh2D
         return cls(self.rows, self.cols, intra_bw=self.intra_bw,

@@ -161,7 +161,6 @@ def run_train_cell(arch, shape, mesh, record):
 
     # --- probes (unrolled, small L, python-loop G) ---
     probes = {}
-    planner = ShardingPlanner(mesh, arch)
     for (l, g) in [(1, 1), (2, 1), (1, 2), (2, 2)]:
         a_l = _small(arch, l)
         p_s = jax.eval_shape(lambda: init_params(a_l, jax.random.PRNGKey(0), cfg.run))

@@ -1,18 +1,47 @@
 """Production mesh factory (spec: MULTI-POD DRY-RUN step 1).
 
-A function, not a module-level constant, so importing this module never
-touches jax device state."""
+Functions, not module-level constants, so importing this module never
+touches jax device state.
+"""
 
 from __future__ import annotations
 
+from typing import Mapping
+
 import jax
 
-__all__ = ["make_production_mesh"]
+__all__ = ["make_production_mesh", "make_serving_mesh"]
+
+
+def _make_mesh(shape, axes):
+    # jax.sharding.AxisType landed after 0.4.x; older JAX meshes are
+    # implicitly Auto, so just drop the kwarg there
+    try:
+        from jax.sharding import AxisType
+    except ImportError:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; multi-pod adds a leading 2-pod axis."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=axis_types)
+    return _make_mesh(shape, axes)
+
+
+def make_serving_mesh(mesh_axes: Mapping[str, int]):
+    """Build the ``(data, model)`` mesh :func:`repro.serving.plan_serving`
+    suggests — the simulator picks the split, this materializes it, which
+    closes the paper's §V-B loop for serving:
+
+        mesh_axes, report = plan_serving("yi-6b", hardware="tpu_v5e_2x2")
+        mesh = make_serving_mesh(mesh_axes)      # {"data": dp, "model": tp}
+        step = make_serve_step(arch, cfg, mesh)
+
+    The runtime must expose ``data * model`` devices (a pod slice, or
+    ``--xla_force_host_platform_device_count`` for CPU dry-runs).
+    """
+    shape = (int(mesh_axes["data"]), int(mesh_axes["model"]))
+    return _make_mesh(shape, ("data", "model"))

@@ -138,20 +138,42 @@ def make_prefill_step(arch: ArchConfig, cfg: RunCfg, mesh: Optional[Mesh] = None
 
 
 def greedy_generate(arch: ArchConfig, params, prompt_tokens: jax.Array,
-                    max_new: int, cfg: RunCfg = RunCfg()):
+                    max_new: int, cfg: RunCfg = RunCfg(),
+                    mesh: Optional[Mesh] = None):
     """Reference end-to-end generation loop (CPU-scale; used by examples
-    and tests): prefill token-by-token then decode ``max_new`` tokens."""
+    and tests): prefill token-by-token then decode ``max_new`` tokens.
+
+    With a ``mesh`` — typically the ``(data, model)`` split
+    :func:`plan_serving` suggests, built via
+    :func:`repro.launch.mesh.make_serving_mesh` — the loop runs through
+    :func:`make_serve_step` with the ShardingPlanner's KV-cache/parameter
+    shardings instead of the single-device jit.
+    """
     B, S0 = prompt_tokens.shape
     cache = init_cache(arch, B, S0 + max_new, cfg)
-    step = jax.jit(lambda p, c, t, i: decode_step(arch, p, c, tokens=t, pos=i, cfg=cfg))
+    if mesh is None:
+        dstep = jax.jit(lambda p, c, t, i: decode_step(arch, p, c, tokens=t,
+                                                       pos=i, cfg=cfg))
+
+        def step(p, c, t, i):
+            logits, c2 = dstep(p, c, t, i)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), c2
+    else:
+        serve = make_serve_step(arch, cfg, mesh)
+        shapes = lambda tree: jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+        jitted = serve.jit_with(shapes(params), shapes(cache), batch_size=B)
+
+        def step(p, c, t, i):
+            nxt, _, c2 = jitted(p, c, t, i)
+            return nxt, c2
     tok = prompt_tokens[:, 0]
     out = []
-    logits = None
     for i in range(S0 + max_new - 1):
-        logits, cache = step(params, cache, tok, jnp.int32(i))
+        nxt, cache = step(params, cache, tok, jnp.int32(i))
         if i + 1 < S0:
             tok = prompt_tokens[:, i + 1]
         else:
-            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            tok = nxt
             out.append(tok)
     return jnp.stack(out, axis=1)

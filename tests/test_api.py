@@ -291,12 +291,33 @@ def test_hardware_search_space_enumerates_variants():
 
 def test_hardware_search_mesh_shape_replaces_ports():
     from repro.core import grayskull
-    base = grayskull()                               # 8 ports on row 0
+    base = grayskull()                               # 6 ports on row 0 (north)
     space = HardwareSearchSpace(mesh_shapes=((6, 6),))
     (spec,) = space.enumerate_specs(base)
     assert spec.num_devices == 36
-    assert len(spec.dram_ports) == min(8, 6)         # re-placed on west edge
+    assert len(spec.dram_ports) == 6                 # port count preserved
     assert all(p < 36 for p in spec.dram_ports)
+    # edge-preserving placement: grayskull's top-row ports stay north
+    mesh = spec.topology_spec
+    assert all("north" in mesh.device_edges(p) for p in spec.dram_ports)
+
+
+def test_hardware_search_preserves_multi_edge_dram_layout():
+    """wafer_scale places DRAM ports on both vertical edges; a re-shaped
+    variant must keep the two-edge layout (not collapse to the west
+    column)."""
+    from repro.core import wafer_scale
+    base = wafer_scale()                             # 5 west + 5 east ports
+    space = HardwareSearchSpace(mesh_shapes=((4, 4),))
+    (spec,) = space.enumerate_specs(base)
+    mesh = spec.topology_spec.flatten()
+    assert (mesh.rows, mesh.cols) == (16, 16)
+    assert len(spec.dram_ports) == len(base.dram_ports) == 10
+    west = [p for p in spec.dram_ports if "west" in mesh.device_edges(p)]
+    east = [p for p in spec.dram_ports if "east" in mesh.device_edges(p)]
+    assert len(west) == 5 and len(east) == 5
+    # and the variant still simulates + serializes
+    assert spec.to_dict()["dram_ports"] == list(spec.dram_ports)
 
 
 def test_experiment_sweeps_hardware_cross_parallelism():
@@ -335,6 +356,26 @@ def test_hardware_search_rejects_undivisible_mesh_shape():
         HardwareSearchSpace(mesh_shapes=((5, 5),)).enumerate_specs(base)
 
 
+def test_mixed_edge_dram_ports_survive_corner_collisions():
+    """West and north placements can both want the shared corner device;
+    the port count must survive (slide to the nearest free device)."""
+    from repro.api import MeshSpec
+    from repro.core import DRAMSpec, TileSpec
+    from repro.core.hardware import HardwareSpec as HS
+    base = HS(name="mixed",
+              topology=MeshSpec(4, 4, intra_bw=1e12),
+              tile=TileSpec(flops=1e12, sram_bytes=1e6),
+              dram=DRAMSpec(bandwidth=1e11, channels=5),
+              dram_ports=(0, 4, 8, 1, 2))    # corner 0 + west col + north row
+    (spec,) = HardwareSearchSpace(mesh_shapes=((4, 4),)).enumerate_specs(base)
+    assert len(spec.dram_ports) == 5          # nothing silently dropped
+    assert len(set(spec.dram_ports)) == 5
+    mesh = spec.topology_spec
+    west = sum("west" in mesh.device_edges(p) for p in spec.dram_ports)
+    north = sum("north" in mesh.device_edges(p) for p in spec.dram_ports)
+    assert west >= 3 and north >= 2           # both edges still populated
+
+
 def test_hardware_search_counts_oversubscribed_variants_as_failed():
     """A variant too small for explicit search degrees must not abort the
     whole hardware sweep."""
@@ -346,3 +387,152 @@ def test_hardware_search_counts_oversubscribed_variants_as_failed():
     assert rep.num_hardware == 2
     assert rep.num_failed == 1               # the 1x2 variant (2 devices)
     assert rep.runs and all("2x2" in r.hardware for r in rep.runs)
+
+
+# ---------------------------------------------------------------------------
+# merged hardware x plan sweep through one shared pool
+# ---------------------------------------------------------------------------
+
+def _hw_cross_experiment(**kw):
+    defaults = dict(
+        search=SearchSpace(max_plans=4, microbatch_sizes=(1, 2)),
+        hardware_search=HardwareSearchSpace(tile_flops=(100e12, 197e12),
+                                            dram_bandwidth=(400e9, 819e9)))
+    defaults.update(kw)
+    return _tiny_experiment(**defaults)
+
+
+def test_merged_hardware_sweep_serial_matches_shared_pool():
+    """Tentpole acceptance: the flattened (hardware x plan) job stream
+    through one shared process pool reproduces the serial ranking."""
+    exp = _hw_cross_experiment()
+    serial = exp.sweep(workers=0)
+    pooled = exp.sweep(workers=2)
+    assert serial.num_hardware == 4
+    assert serial.runs, "merged sweep produced no feasible points"
+    assert pooled.executor.startswith("process")
+    assert [(r.hardware, r.plan) for r in serial.runs] == \
+           [(r.hardware, r.plan) for r in pooled.runs]
+    assert [r.throughput for r in serial.runs] == \
+           [r.throughput for r in pooled.runs]
+    assert serial.num_candidates == pooled.num_candidates
+    assert serial.num_failed == pooled.num_failed
+
+
+def test_merged_hardware_sweep_records_variant_specs():
+    exp = _hw_cross_experiment()
+    rep = exp.sweep()
+    assert set(rep.hardware_specs) == {r.hardware for r in rep.runs}
+    # the winning variant is recoverable from the report alone
+    from repro.core.hardware import HardwareSpec as HS
+    spec = HS.from_dict(rep.best_hardware_dict())
+    assert spec.name == rep.best.hardware
+    back = SweepReport.from_json(rep.to_json())
+    assert back.hardware_specs == rep.hardware_specs and back == rep
+
+
+def test_return_timelines_round_trips_through_the_pool():
+    """return_timelines=True ships each run's full SimResult back from the
+    workers; scalar results and JSON stay identical to the default."""
+    exp = _tiny_experiment(search=SearchSpace(
+        max_plans=4, microbatch_sizes=(1,), layouts=(Layout.S_SHAPE,)))
+    plain = exp.sweep(workers=2)
+    timed = exp.sweep(workers=2, return_timelines=True)
+    assert timed.executor.startswith("process")
+    assert all(r.sim is not None and r.sim.timeline for r in timed.runs)
+    assert all(r.sim is None for r in plain.runs)
+    assert [r.plan for r in timed.runs] == [r.plan for r in plain.runs]
+    assert [r.throughput for r in timed.runs] == \
+           [r.throughput for r in plain.runs]
+    # sim totals agree with the scalar digest shipped alongside
+    assert all(r.sim.total_time == r.total_time for r in timed.runs)
+    # RunReport stays scalar on the wire: sim is excluded from JSON and eq
+    assert "sim" not in timed.runs[0].to_dict()
+    assert timed.to_json() == plain.to_json()
+    assert SweepReport.from_json(timed.to_json()) == plain
+
+
+def test_merged_sweep_with_timelines_keeps_parity():
+    exp = _hw_cross_experiment(
+        search=SearchSpace(max_plans=3, microbatch_sizes=(1,),
+                           layouts=(Layout.S_SHAPE,)),
+        hardware_search=HardwareSearchSpace(tile_flops=(100e12, 197e12)))
+    serial = exp.sweep(workers=0, return_timelines=True)
+    pooled = exp.sweep(workers=2, return_timelines=True)
+    assert all(r.sim is not None for r in serial.runs + pooled.runs)
+    assert [(r.hardware, r.plan) for r in serial.runs] == \
+           [(r.hardware, r.plan) for r in pooled.runs]
+
+
+# ---------------------------------------------------------------------------
+# co-design planner (§VI loop)
+# ---------------------------------------------------------------------------
+
+def test_plan_codesign_picks_known_best_variant():
+    """Rigged search space: one variant has ~2x the tile compute, so the
+    co-design recommendation must name it."""
+    from repro.api import PlannerCfg, plan_codesign
+    from repro.configs import get_config
+    cfg = PlannerCfg(
+        global_batch=8, seq_len=128, max_plans=3, microbatch_sizes=(1,),
+        hardware_search=HardwareSearchSpace(tile_flops=(100e12, 197e12)))
+    res = plan_codesign(get_config("yi-6b"), tpu_v5e_pod(2, 2), cfg)
+    assert "197T" in res.hardware.name
+    assert res.hardware.tile.flops == 197e12
+    assert res.run is res.report.best
+    assert res.plan == res.report.best.plan
+    # the recommendation is serializable end to end
+    doc = res.to_dict()
+    assert doc["hardware"]["tile"]["flops"] == 197e12
+    assert doc["plan"]["pp"] == res.plan.pp
+    from repro.core.hardware import HardwareSpec as HS
+    assert HS.from_json(res.hardware.to_json()).to_dict() == \
+        res.hardware.to_dict()
+
+
+def test_plan_codesign_requires_hardware_search():
+    from repro.api import PlannerCfg, plan_codesign
+    from repro.configs import get_config
+    with pytest.raises(ValueError, match="hardware_search"):
+        plan_codesign(get_config("yi-6b"), tpu_v5e_pod(2, 2), PlannerCfg())
+
+
+def test_plan_parallelism_accepts_hardware_search():
+    from repro.api import PlannerCfg, plan_parallelism
+    from repro.configs import get_config
+    cfg = PlannerCfg(
+        global_batch=8, seq_len=128, max_plans=3, microbatch_sizes=(1,),
+        hardware_search=HardwareSearchSpace(tile_flops=(100e12, 197e12)))
+    runs = plan_parallelism(get_config("yi-6b"), tpu_v5e_pod(2, 2), cfg)
+    assert len({r.hardware for r in runs}) == 2      # joint ranking
+    thpts = [r.throughput for r in runs]
+    assert thpts == sorted(thpts, reverse=True)
+
+
+# ---------------------------------------------------------------------------
+# tpu_v5e torus preset
+# ---------------------------------------------------------------------------
+
+def test_tpu_v5e_torus_preset_resolves_and_round_trips():
+    from repro.core import Torus2D
+    hw = resolve_hardware("tpu_v5e_torus")
+    assert isinstance(hw.topology, Torus2D)
+    assert hw.name == "tpu_v5e_torus_16x16"
+    small = resolve_hardware("tpu_v5e_torus_2x4")
+    assert isinstance(small.topology, Torus2D) and small.num_devices == 8
+    from repro.core.hardware import HardwareSpec as HS
+    back = HS.from_json(small.to_json())
+    assert back.to_dict() == small.to_dict()
+    assert isinstance(back.topology, Torus2D)
+    # mesh spelling unchanged
+    from repro.core import Mesh2D
+    mesh = resolve_hardware("tpu_v5e_2x4")
+    assert type(mesh.topology) is Mesh2D
+
+
+def test_tpu_v5e_torus_routes_no_longer_than_mesh():
+    mesh = resolve_hardware("tpu_v5e_4x4").topology
+    torus = resolve_hardware("tpu_v5e_torus_4x4").topology
+    for src in range(16):
+        for dst in range(16):
+            assert torus.hops(src, dst) <= mesh.hops(src, dst)

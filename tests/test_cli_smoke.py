@@ -98,6 +98,59 @@ def test_cli_d_model_calibration():
     assert proc.returncode != 0 and "a100x<N>" in proc.stderr
 
 
+def test_cli_plan_codesign(tmp_path):
+    """`plan --hw-*` runs the co-design loop: joint ranking plus a
+    recommendation document with the winning hardware spec JSON."""
+    out = tmp_path / "codesign.json"
+    proc = _run(["-m", "repro", "plan", "--arch", "yi-6b",
+                 "--hardware", "tpu_v5e_2x2", "--global-batch", "8",
+                 "--seq-len", "128", "--max-plans", "3",
+                 "--microbatch-sizes", "1", "--layouts", "s_shape",
+                 "--hw-flops", "100e12", "197e12",
+                 "--codesign-json", str(out)])
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "co-design over 2 variants" in proc.stdout
+    doc = json.loads(out.read_text())
+    assert doc["hardware"]["tile"]["flops"] == 197e12    # faster tiles win
+    assert doc["num_hardware"] == 2
+    assert doc["plan"]["pp"] >= 1 and doc["throughput"] > 0
+    # the recommendation's hardware block is --hardware-json compatible
+    hw_json = tmp_path / "best_hw.json"
+    hw_json.write_text(json.dumps(doc["hardware"]))
+    proc = _run(["-m", "repro", "simulate", "--arch", "yi-6b",
+                 "--hardware-json", str(hw_json), "--tp", "4",
+                 "--global-batch", "8", "--seq-len", "128"])
+    assert proc.returncode == 0, proc.stderr[-2000:]
+
+
+def test_cli_plan_codesign_json_requires_hw_axes():
+    proc = _run(["-m", "repro", "plan", "--arch", "yi-6b",
+                 "--hardware", "tpu_v5e_2x2", "--global-batch", "8",
+                 "--seq-len", "128", "--max-plans", "3",
+                 "--codesign-json", "-"])
+    assert proc.returncode == 2
+    assert "--hw-*" in proc.stderr
+
+
+def test_cli_hardware_torus_variant_dump(tmp_path):
+    proc = _run(["-m", "repro", "hardware", "--hardware", "tpu_v5e_torus_2x2"])
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    payload = json.loads(proc.stdout)
+    assert payload["name"] == "tpu_v5e_torus_2x2"
+    assert payload["topology"]["kind"] == "mesh"
+    assert payload["topology"]["torus"] is True
+    # the dump simulates through --hardware-json like any other spec
+    hw_json = tmp_path / "torus.json"
+    hw_json.write_text(proc.stdout)
+    proc = _run(["-m", "repro", "simulate", "--arch", "yi-6b",
+                 "--hardware-json", str(hw_json), "--pp", "2", "--dp", "2",
+                 "--global-batch", "8", "--seq-len", "128", "--json", "-"])
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    payload = json.loads(proc.stdout[proc.stdout.index("{"):])
+    assert payload["hardware"] == "tpu_v5e_torus_2x2"
+    assert payload["throughput"] > 0
+
+
 def test_cli_sweep_hardware_variants():
     proc = _run(["-m", "repro", "sweep", "--arch", "yi-6b",
                  "--hardware", "tpu_v5e_2x2", "--global-batch", "8",

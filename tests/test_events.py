@@ -86,7 +86,7 @@ def test_all_of_any_of():
 
     def proc():
         e1, e2 = env.timeout(1.0, value="x"), env.timeout(5.0, value="y")
-        got = yield env.any_of([e1, e2])
+        yield env.any_of([e1, e2])
         out["any_at"] = env.now
         yield env.all_of([e2])
         out["all_at"] = env.now
