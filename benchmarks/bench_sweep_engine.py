@@ -22,8 +22,10 @@ if __package__ in (None, ""):
     __package__ = "benchmarks"
 
 import argparse
+import dataclasses
 import json
 import os
+import pickle
 import sys
 import time
 from pathlib import Path
@@ -60,6 +62,86 @@ def _hw_exp(tiny=False) -> Experiment:
         global_batch=32,
         seq_len=256 if tiny else 512,
     )
+
+
+def _legacy_sim_payload(sim) -> dict:
+    """The pre-columnar wire shape of one timeline-carrying SimResult: the
+    event timeline as a Python tuple list plus the scalar per-stage busy
+    dict, alongside the scalar digests (the NoC occupancy dict the legacy
+    form also carried is omitted — a conservative baseline)."""
+    return {
+        "total_time": sim.total_time,
+        "throughput": sim.throughput,
+        "stage_memory": [dataclasses.asdict(m) for m in sim.stage_memory],
+        "recompute": sim.recompute,
+        "event_count": sim.event_count,
+        "noc_bytes": sim.noc_bytes,
+        "dram_bytes": sim.dram_bytes,
+        "timeline": sim.trace.compute_tuples(),
+        "stage_busy": dict(sim.stage_busy),
+    }
+
+
+def _ipc_exp(tiny=False) -> Experiment:
+    """Timeline-carrying sweep with realistic micro-batch counts (the
+    payload a planner shipping timelines back actually sees; macro-mode
+    events are O(M), so these stay seconds-scale)."""
+    return Experiment(
+        arch="yi-6b",
+        hardware="grayskull",
+        search=SearchSpace(
+            degrees=((4, 1, 2), (2, 2, 2), (1, 2, 4), (4, 2, 1)),
+            microbatch_sizes=(1,), layouts=("s_shape",),
+            max_plans=4 if tiny else 8),
+        global_batch=128 if tiny else 256,
+        seq_len=256 if tiny else 512,
+    )
+
+
+def _timeline_ipc(report: Report, tiny: bool) -> None:
+    """Timeline-IPC micro-benchmark: the bytes + time a
+    ``return_timelines=True`` sweep ships through the process pool, legacy
+    pickled-SimResult form vs the columnar compressed Trace form.
+
+    Also the acceptance gate for the columnar refactor: the ranking and
+    per-run total_time of the timeline sweep must be bit-identical to the
+    scalar sweep's, and the payload reduction must be >= 3x."""
+    exp = _ipc_exp(tiny=tiny)
+    plain = exp.sweep(workers=0)
+    timed = exp.sweep(workers=0, return_timelines=True)
+
+    identical = ([(r.plan, r.total_time, r.throughput) for r in plain.runs]
+                 == [(r.plan, r.total_time, r.throughput) for r in timed.runs])
+    report.add("timeline_ranking_parity", 0.0,
+               "ok" if identical else "MISMATCH")
+
+    sims = [r.sim for r in timed.runs]
+    events = sum(len(s.trace) for s in sims)
+
+    t0 = time.perf_counter()
+    legacy_bytes = pickle.dumps([_legacy_sim_payload(s) for s in sims],
+                                protocol=pickle.HIGHEST_PROTOCOL)
+    pickle.loads(legacy_bytes)
+    t_legacy = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    col_bytes = pickle.dumps(sims, protocol=pickle.HIGHEST_PROTOCOL)
+    pickle.loads(col_bytes)
+    t_col = time.perf_counter() - t0
+
+    ratio = len(legacy_bytes) / len(col_bytes) if col_bytes else float("inf")
+    report.log(f"timeline IPC ({len(sims)} runs, {events} events): legacy "
+               f"{len(legacy_bytes)} B / {t_legacy * 1e3:.1f} ms vs columnar "
+               f"{len(col_bytes)} B / {t_col * 1e3:.1f} ms "
+               f"({ratio:.2f}x smaller)")
+    report.add("timeline_ipc_legacy_bytes", float(len(legacy_bytes)),
+               f"{events}_events")
+    report.add("timeline_ipc_columnar_bytes", float(len(col_bytes)),
+               f"ratio_{ratio:.2f}x")
+    report.add("timeline_ipc_legacy_us", t_legacy * 1e6, "pickle+unpickle")
+    report.add("timeline_ipc_columnar_us", t_col * 1e6, "pickle+unpickle")
+    report.add("timeline_ipc_reduction", ratio,
+               "ok" if ratio >= 3.0 else "MISMATCH")
 
 
 def _pool_per_variant(exp: Experiment, workers: int):
@@ -129,6 +211,9 @@ def run(report: Report, tiny: bool = False) -> None:
     report.add("hw_sweep_pool_per_variant", t_legacy * 1e6,
                f"speedup_{hw_speedup:.2f}x")
     report.add("hw_sweep_parity", 0.0, "ok" if hw_parity else "MISMATCH")
+
+    # return_timelines IPC: legacy pickled-SimResult vs columnar Trace
+    _timeline_ipc(report, tiny)
 
 
 def main(argv=None) -> int:

@@ -26,6 +26,7 @@ from ..core.hardware import (
     TopologySpec,
 )
 from ..core.parallelism import ParallelPlan
+from ..core.trace import Trace, TraceRecorder, chrome_trace
 from ..core.planner import (
     CodesignResult,
     PlannerCfg,
@@ -62,6 +63,9 @@ __all__ = [
     "SweepEngine",
     "SweepReport",
     "TopologySpec",
+    "Trace",
+    "TraceRecorder",
+    "chrome_trace",
     "plan_codesign",
     "plan_from_dict",
     "plan_parallelism",

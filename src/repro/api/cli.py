@@ -101,6 +101,16 @@ def _add_plan_flags(ap: argparse.ArgumentParser) -> None:
                     default=Schedule.ONE_F_ONE_B)
     ap.add_argument("--layout", type=Layout, choices=list(Layout),
                     default=Layout.S_SHAPE)
+    ap.add_argument("--activation-offload", action="store_true",
+                    help="park saved activations off-device between FD and "
+                         "BD (smaller footprint, extra DRAM traffic)")
+    ap.add_argument("--trace-out", type=Path, default=None, metavar="FILE",
+                    help="write the run's event timeline as Chrome/Perfetto "
+                         "traceEvents JSON (open in chrome://tracing or "
+                         "ui.perfetto.dev; '-' for stdout)")
+    ap.add_argument("--trace-npz", type=Path, default=None, metavar="FILE",
+                    help="write the columnar trace as a compressed .npz "
+                         "archive (needs numpy)")
 
 
 def _add_sweep_flags(ap: argparse.ArgumentParser) -> None:
@@ -118,6 +128,11 @@ def _add_sweep_flags(ap: argparse.ArgumentParser) -> None:
                     choices=[1, 2],
                     help="inter-tile-group boundary strategies (Fig. 11; "
                          "needs --boundary-mode strategy to differ)")
+    ap.add_argument("--activation-offload", type=int, nargs="+", default=[0],
+                    choices=[0, 1],
+                    help="activation-offload axis (0 = resident, 1 = park "
+                         "saved activations off-device; sweep both with "
+                         "'0 1')")
     ap.add_argument("--memory-cap", type=float, default=None,
                     help="bytes per tile; infeasible plans pruned pre-simulation")
     ap.add_argument("--workers", type=int, default=0,
@@ -176,16 +191,47 @@ def _cmd_simulate(args) -> int:
                         microbatch=args.microbatch,
                         global_batch=args.global_batch,
                         schedule=args.schedule, layout=args.layout,
+                        activation_offload=args.activation_offload,
                         training=not args.inference)
+    want_trace = args.trace_out is not None or args.trace_npz is not None
+    if args.trace_npz is not None:
+        from ..core import trace as trace_mod
+        if trace_mod._np is None:       # fail before paying for the sim
+            raise ValueError("--trace-npz needs numpy (this install runs "
+                             "the dependency-free core); use --trace-out")
     exp = Experiment(arch=args.arch, hardware=_resolve_hardware_args(args),
                      plan=plan, seq_len=args.seq_len,
                      global_batch=args.global_batch,
                      training=not args.inference, noc_mode=args.noc_mode,
-                     boundary_mode=args.boundary_mode)
+                     boundary_mode=args.boundary_mode,
+                     collect_timeline=want_trace)
     report = exp.run()
     print(f"{report.arch} on {report.hardware}: {report.summary()}")
+    if want_trace:
+        _emit_trace(report, args)
     _emit(report, args.json)
     return 0
+
+
+def _emit_trace(report, args) -> None:
+    from ..core.trace import chrome_trace
+    trace = report.trace
+    if trace is None:       # defensive: collect_timeline was on
+        raise ValueError("simulation produced no trace")
+    if args.trace_out is not None:
+        doc = chrome_trace(trace, label=f"{report.arch}@{report.hardware}")
+        text = json.dumps(doc)
+        if str(args.trace_out) == "-":
+            print(text)
+        else:
+            args.trace_out.write_text(text + "\n")
+            summary = report.trace_summary()
+            print(f"[trace written to {args.trace_out}: "
+                  f"{summary['events']} events, "
+                  f"bubble {summary['bubble_fraction']:.1%}]")
+    if args.trace_npz is not None:
+        trace.to_npz(args.trace_npz)
+        print(f"[columnar trace written to {args.trace_npz}]")
 
 
 def _make_sweep_experiment(args) -> Experiment:
@@ -195,6 +241,8 @@ def _make_sweep_experiment(args) -> Experiment:
                          interleave=tuple(args.interleave),
                          zero_stages=tuple(args.zero_stages),
                          comm_strategies=tuple(args.comm_strategies),
+                         activation_offload=tuple(
+                             bool(v) for v in args.activation_offload),
                          max_plans=args.max_plans)
     return Experiment(arch=args.arch, hardware=_resolve_hardware_args(args),
                       search=search, hardware_search=_hardware_search(args),

@@ -105,9 +105,13 @@ class SearchSpace:
     divisor factorization of the device count is considered, filtered by
     arch shape (pp bounded by layer count, tp by head/feature count).
     ``interleave`` sweeps virtual-stage counts (interleaved 1F1B),
-    ``zero_stages`` the ZeRO optimizer-sharding stage, and
+    ``zero_stages`` the ZeRO optimizer-sharding stage,
     ``comm_strategies`` the inter-tile-group boundary strategy (Fig. 11;
-    only distinguishable under ``BoundaryMode.STRATEGY``).
+    only distinguishable under ``BoundaryMode.STRATEGY``), and
+    ``activation_offload`` whether saved activations are parked off-device
+    between FD and BD (smaller footprint, extra DRAM traffic — the
+    pre-simulation memory-cap estimate accounts for it, so pruning stays
+    exact).
     """
 
     degrees: Optional[Sequence[Tuple[int, int, int]]] = None
@@ -118,6 +122,7 @@ class SearchSpace:
     interleave: Sequence[int] = (1,)
     zero_stages: Sequence[int] = (0,)
     comm_strategies: Sequence[int] = (1,)
+    activation_offload: Sequence[bool] = (False,)
     max_plans: int = 64
 
     def __post_init__(self):
@@ -133,6 +138,7 @@ class SearchSpace:
             raise ValueError("zero_stages must be in 0..3")
         if any(c not in (1, 2) for c in self.comm_strategies):
             raise ValueError("comm_strategies must be 1 or 2 (Fig. 11)")
+        self.activation_offload = tuple(bool(v) for v in self.activation_offload)
 
     def enumerate_plans(self, hardware: HardwareSpec, global_batch: int,
                         training: bool = True,
@@ -166,14 +172,17 @@ class SearchSpace:
                                     continue
                                 for zero in self.zero_stages:
                                     for strat in self.comm_strategies:
-                                        plans.append(ParallelPlan(
-                                            pp=pp, dp=dp, tp=tp, microbatch=b,
-                                            global_batch=global_batch,
-                                            schedule=sched, layout=layout,
-                                            tp_contiguous=contig,
-                                            interleave=virt, zero=zero,
-                                            comm_strategy=strat,
-                                            training=training))
+                                        for off in (self.activation_offload
+                                                    if training else (False,)):
+                                            plans.append(ParallelPlan(
+                                                pp=pp, dp=dp, tp=tp, microbatch=b,
+                                                global_batch=global_batch,
+                                                schedule=sched, layout=layout,
+                                                tp_contiguous=contig,
+                                                interleave=virt, zero=zero,
+                                                comm_strategy=strat,
+                                                activation_offload=off,
+                                                training=training))
         # budget: prefer diverse (pp, dp, tp) triples first
         seen, pruned = set(), []
         for p in plans:
@@ -400,6 +409,8 @@ class Experiment:
     noc_mode: NoCMode = NoCMode.MACRO
     boundary_mode: BoundaryMode = BoundaryMode.PAIRWISE
     memory_cap: Optional[float] = None  # bytes per tile; pre-sim feasibility
+    # record NoC/DRAM busy-interval lanes into the trace (compute lanes are
+    # always recorded); in sweeps this also implies return_timelines
     collect_timeline: bool = False
 
     def __post_init__(self):
@@ -474,8 +485,10 @@ class Experiment:
         ``hardware_search``, the full (hardware variant x plan) product is
         flattened into one job stream evaluated by a single shared pool
         and the merged report ranks hardware x parallelism points.
-        ``return_timelines=True`` ships each run's full :class:`SimResult`
-        back on ``RunReport.sim`` (reports stay scalar by default)."""
+        ``return_timelines=True`` ships each run's columnar event timeline
+        back on ``RunReport.trace`` — and the full :class:`SimResult` on
+        ``RunReport.sim`` — in compressed struct-of-arrays form (reports
+        stay scalar by default)."""
         return_timelines = return_timelines or self.collect_timeline
         if self.hardware_search is not None:
             return self._sweep_hardware(workers, return_timelines)
@@ -490,7 +503,8 @@ class Experiment:
                 training=self.training, arch=self.arch_config)
         from .sweep import SweepEngine
         return SweepEngine(workers=workers,
-                           return_timelines=return_timelines).sweep(self, plans)
+                           return_timelines=return_timelines,
+                           trace_resources=self.collect_timeline).sweep(self, plans)
 
     def _plans_for(self, spec: HardwareSpec) -> List[ParallelPlan]:
         """Plan list for one hardware variant (raises ValueError when the
@@ -525,7 +539,8 @@ class Experiment:
                 continue
             jobs.extend((len(kept), p) for p in plans)
             kept.append(spec)
-        engine = SweepEngine(workers=workers, return_timelines=return_timelines)
+        engine = SweepEngine(workers=workers, return_timelines=return_timelines,
+                             trace_resources=self.collect_timeline)
         report = engine.sweep_jobs(
             self, kept, jobs,
             hardware_name=(base.name if len(specs) == 1

@@ -11,10 +11,13 @@ downstream tools can persist sweeps without pickling simulator objects;
 plans serialize as plain dicts (:func:`plan_to_dict`).
 
 A RunReport stays scalar by default: when a sweep runs with
-``return_timelines=True`` the full :class:`SimResult` (event timeline,
-per-stage busy time, NoC occupancy) rides along in ``sim``, which is
-excluded from JSON and from equality so scalar reports and their
-round-trips are unaffected.
+``return_timelines=True`` the columnar :class:`~repro.core.trace.Trace`
+rides along in ``trace`` (and the full :class:`SimResult` in ``sim``),
+both excluded from JSON and from equality so scalar reports and their
+round-trips are unaffected. ``to_dict(include_trace=True)`` embeds the
+trace's compact JSON-safe dict, and :meth:`RunReport.trace_summary`
+digests it (per-stage utilization, bubble fraction, critical path,
+resource occupancy) without shipping the event columns.
 """
 
 from __future__ import annotations
@@ -27,6 +30,7 @@ from typing import Any, Dict, List, Optional
 from ..core.enums import Layout, Schedule
 from ..core.parallelism import ParallelPlan
 from ..core.scheduler import SimResult
+from ..core.trace import Trace
 
 __all__ = ["RunReport", "SweepReport", "plan_to_dict", "plan_from_dict"]
 
@@ -68,9 +72,12 @@ class RunReport:
     noc_bytes: float
     dram_bytes: float
     extra: Dict[str, Any] = field(default_factory=dict)
-    # full SimResult (timeline et al.) when the sweep ran with
-    # return_timelines=True; never serialized, never compared
+    # full SimResult when the sweep ran with return_timelines=True; never
+    # part of JSON-by-default, never compared
     sim: Optional[SimResult] = field(default=None, compare=False, repr=False)
+    # the columnar event timeline (same object the sim holds); shipped
+    # across the process pool in compressed columnar form
+    trace: Optional[Trace] = field(default=None, compare=False, repr=False)
 
     @classmethod
     def from_sim(cls, arch: str, hardware: str, plan: ParallelPlan,
@@ -91,15 +98,27 @@ class RunReport:
             dram_bytes=result.dram_bytes,
             extra=dict(extra),
             sim=result if keep_sim else None,
+            trace=result.trace if keep_sim else None,
         )
 
-    def to_dict(self) -> Dict[str, Any]:
-        # drop sim before asdict: timelines are not part of the JSON form,
-        # and deep-converting thousands of events just to pop them is waste
-        src = dataclasses.replace(self, sim=None) if self.sim is not None else self
+    def trace_summary(self) -> Optional[Dict[str, Any]]:
+        """JSON-safe analytics digest of the attached trace (None when the
+        run carried no timeline)."""
+        return None if self.trace is None else self.trace.summary()
+
+    def to_dict(self, include_trace: bool = False) -> Dict[str, Any]:
+        # drop sim/trace before asdict: event columns are not part of the
+        # default JSON form, and deep-converting thousands of events just
+        # to pop them is waste
+        src = self
+        if self.sim is not None or self.trace is not None:
+            src = dataclasses.replace(self, sim=None, trace=None)
         d = dataclasses.asdict(src)
         d["plan"] = plan_to_dict(self.plan)
         d.pop("sim", None)
+        d.pop("trace", None)
+        if include_trace and self.trace is not None:
+            d["trace"] = self.trace.to_dict()
         return d
 
     def to_json(self, **kw: Any) -> str:
@@ -110,6 +129,9 @@ class RunReport:
         d = dict(d)
         d["plan"] = plan_from_dict(d["plan"])
         d.pop("sim", None)
+        trace = d.pop("trace", None)
+        if trace is not None:
+            d["trace"] = Trace.from_dict(trace)
         return cls(**d)
 
     @classmethod

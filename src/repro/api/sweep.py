@@ -18,10 +18,14 @@ legacy ``sweep_plans`` loop:
   hardware variant (see ``benchmarks/bench_sweep_engine.py`` for the
   speedup over the pool-per-variant baseline).
 
-``return_timelines=True`` makes workers run the simulator with timeline
-collection on and ship the full :class:`SimResult` back attached to each
-``RunReport.sim``; reports stay scalar (and JSON stays compact) by
-default.
+``return_timelines=True`` ships each run's event timeline back attached
+to ``RunReport.trace`` (and the full :class:`SimResult` to ``.sim``).
+The timeline crosses the pool in *columnar* form: :class:`Trace` pickles
+through its compressed struct-of-arrays wire format
+(``Trace.to_bytes``), which is several times smaller than the legacy
+tuple-list ``SimResult`` payload (measured in
+``benchmarks/bench_sweep_engine.py``). Reports stay scalar (and JSON
+stays compact) by default.
 
 Results are deterministic: the engine evaluates jobs in enumeration
 order and ranks by simulated throughput, so serial and process-pool
@@ -52,7 +56,8 @@ Job = Tuple[int, ParallelPlan]
 
 def _evaluate(exp, plan: ParallelPlan, graph_cache: Dict,
               hw: HardwareSpec,
-              return_timelines: bool = False) -> Tuple[str, object]:
+              return_timelines: bool = False,
+              trace_resources: bool = False) -> Tuple[str, object]:
     """Evaluate one (hardware, plan) job: build (memoized) graph, map,
     prune on memory, simulate. Returns (tag, RunReport | reason)."""
     try:
@@ -72,11 +77,17 @@ def _evaluate(exp, plan: ParallelPlan, graph_cache: Dict,
             mem_plan = plan_memory(mapped)
             if max(m.total for m in mem_plan[0]) > exp.memory_cap:
                 return (_PRUNED, None)
+        # compute lanes are always recorded; resource busy lanes stay off
+        # unless the experiment asked for them (collect_timeline=True) so
+        # default timeline sweeps keep pool payloads lean
         sim = PipelineSimulator(mapped, noc_mode=exp.noc_mode,
                                 boundary_mode=exp.boundary_mode,
                                 memory_plan=mem_plan,
-                                collect_timeline=return_timelines)
+                                collect_timeline=trace_resources)
         result = sim.run()
+        # the scalar occupancy digest is an in-process convenience; drop
+        # it so serial and pooled sweeps return identical, lean results
+        result.noc_occupancy_fallback.clear()
     except (ValueError, KeyError, TypeError) as e:
         return (_FAILED, f"{type(e).__name__}: {e}")
     return (_OK, RunReport.from_sim(exp.arch_name, hw.name, plan, result,
@@ -103,18 +114,20 @@ _WORKER: Dict = {}
 
 
 def _init_worker(exp_bytes: bytes, specs_bytes: bytes,
-                 return_timelines: bool) -> None:
+                 return_timelines: bool, trace_resources: bool) -> None:
     _WORKER["exp"] = pickle.loads(exp_bytes)
     _WORKER["specs"] = pickle.loads(specs_bytes)
     _WORKER["graphs"] = {}
     _WORKER["return_timelines"] = return_timelines
+    _WORKER["trace_resources"] = trace_resources
 
 
 def _eval_in_worker(job: Job) -> Tuple[str, object]:
     variant, plan = job
     return _evaluate(_WORKER["exp"], plan, _WORKER["graphs"],
                      hw=_WORKER["specs"][variant],
-                     return_timelines=_WORKER["return_timelines"])
+                     return_timelines=_WORKER["return_timelines"],
+                     trace_resources=_WORKER["trace_resources"])
 
 
 class SweepEngine:
@@ -123,14 +136,20 @@ class SweepEngine:
 
     ``workers=0`` (default) runs serially in-process; ``workers=N`` uses an
     N-process pool; ``workers=None`` uses one process per CPU.
-    ``return_timelines=True`` collects the full event timeline per run and
-    attaches the :class:`SimResult` to each ``RunReport.sim``.
+    ``return_timelines=True`` attaches each run's columnar event timeline
+    to ``RunReport.trace`` (and the :class:`SimResult` to ``.sim``);
+    timelines cross the pool in compressed columnar form.
+    ``trace_resources=True`` (``Experiment.collect_timeline``) further
+    records NoC-link / DRAM-channel busy intervals into those traces —
+    richer, but a bigger pool payload.
     """
 
     def __init__(self, workers: Optional[int] = 0,
-                 return_timelines: bool = False):
+                 return_timelines: bool = False,
+                 trace_resources: bool = False):
         self.workers = os.cpu_count() if workers is None else workers
         self.return_timelines = return_timelines
+        self.trace_resources = trace_resources
 
     def sweep(self, exp, plans: Sequence[ParallelPlan]) -> SweepReport:
         """Plan sweep on the experiment's single hardware spec."""
@@ -186,9 +205,11 @@ class SweepEngine:
                         max_workers=n,
                         initializer=_init_worker,
                         initargs=(exp_bytes, specs_bytes,
-                                  self.return_timelines)) as pool:
+                                  self.return_timelines,
+                                  self.trace_resources)) as pool:
                     return list(pool.map(_eval_in_worker, jobs)), f"process[{n}]"
         graphs: Dict = {}
         return [_evaluate(exp, plan, graphs, hw=specs[variant],
-                          return_timelines=self.return_timelines)
+                          return_timelines=self.return_timelines,
+                          trace_resources=self.trace_resources)
                 for variant, plan in jobs], "serial"

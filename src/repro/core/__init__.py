@@ -41,6 +41,19 @@ from .hardware import (
     wafer_scale,
 )
 from .topology import spec_of, topology_spec_from_dict
+from .trace import (
+    COMPUTE_KINDS,
+    KIND_BD,
+    KIND_DRAM,
+    KIND_FD,
+    KIND_GU,
+    KIND_NOC,
+    RESOURCE_KINDS,
+    Trace,
+    TraceRecorder,
+    TraceRow,
+    chrome_trace,
+)
 from .noc import NoCModel, collective_steps, ring_time
 from .dram import DRAMModel
 from .parallelism import (

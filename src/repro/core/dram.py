@@ -18,24 +18,46 @@ from typing import Dict, Generator, Optional
 from .events import Environment, Resource
 from .hardware import HardwareSpec
 from .noc import NoCModel
+from .trace import KIND_DRAM, TraceRecorder
 
 __all__ = ["DRAMModel"]
 
 
 class DRAMModel:
-    def __init__(self, env: Environment, hardware: HardwareSpec, noc: NoCModel):
+    def __init__(self, env: Environment, hardware: HardwareSpec, noc: NoCModel,
+                 recorder: Optional[TraceRecorder] = None):
         self.env = env
         self.hw = hardware
         self.noc = noc
+        # when set, every channel records its busy intervals into the
+        # trace's DRAM resource lane
+        self.recorder = recorder
         self._channels: Dict[int, Resource] = {}
         self.bytes_accessed = 0.0
 
     def _channel(self, key: int) -> Resource:
         res = self._channels.get(key)
         if res is None:
-            res = Resource(self.env, capacity=1, name=f"dram{key}")
+            cb = (self.recorder.interval_cb(KIND_DRAM, key)
+                  if self.recorder is not None else None)
+            res = Resource(self.env, capacity=1, name=f"dram{key}",
+                           interval_cb=cb)
             self._channels[key] = res
         return res
+
+    def occupancy_report(self) -> Dict[int, float]:
+        """Channel utilizations in sorted key order."""
+        return {key: self._channels[key].utilization()
+                for key in sorted(self._channels)}
+
+    def close_open_intervals(self, t: float) -> None:
+        """Flush still-busy channels into the recorder at simulation end."""
+        if self.recorder is None:
+            return
+        for key in sorted(self._channels):
+            since = self._channels[key].busy_since
+            if since is not None and t > since:
+                self.recorder.resource(KIND_DRAM, key, since, t)
 
     def access(self, device: int, nbytes: float, priority: int = 0,
                write: bool = False) -> Generator:

@@ -298,7 +298,8 @@ class Resource:
     exclusive resource during execution" (§IV-C).
     """
 
-    def __init__(self, env: Environment, capacity: int = 1, name: str = ""):
+    def __init__(self, env: Environment, capacity: int = 1, name: str = "",
+                 interval_cb: Optional[Callable[[float, float], None]] = None):
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
         self.env = env
@@ -307,10 +308,13 @@ class Resource:
         self._users: List[Event] = []
         self._queue: List[tuple] = []
         self._qseq = itertools.count()
-        # instrumentation: busy-time integral for utilisation reporting
+        # instrumentation: busy-time integral for utilisation reporting;
+        # interval_cb additionally receives each closed (start, end) busy
+        # interval (the trace recorder's resource lanes)
         self._busy_since: Optional[float] = None
         self.busy_time: float = 0.0
         self.grant_count: int = 0
+        self._interval_cb = interval_cb
 
     # -- API ----------------------------------------------------------------
     def request(self, priority: int = 0) -> Event:
@@ -328,6 +332,8 @@ class Resource:
             raise RuntimeError(f"release of non-user request on {self.name!r}")
         if not self._users and self._busy_since is not None:
             self.busy_time += self.env.now - self._busy_since
+            if self._interval_cb is not None and self.env.now > self._busy_since:
+                self._interval_cb(self._busy_since, self.env.now)
             self._busy_since = None
         while self._queue and len(self._users) < self.capacity:
             _, _, nxt = heapq.heappop(self._queue)
@@ -336,6 +342,11 @@ class Resource:
     @property
     def queue_len(self) -> int:
         return len(self._queue)
+
+    @property
+    def busy_since(self) -> Optional[float]:
+        """Start of the currently open busy interval (None when idle)."""
+        return self._busy_since
 
     @property
     def in_use(self) -> int:

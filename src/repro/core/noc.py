@@ -33,6 +33,7 @@ from typing import Dict, Generator, Iterable, List, Optional, Sequence, Tuple
 from .enums import NoCMode
 from .events import Environment, Resource
 from .hardware import HardwareSpec, Topology
+from .trace import KIND_NOC, TraceRecorder
 
 __all__ = ["NoCModel", "collective_steps", "ring_time"]
 
@@ -71,11 +72,15 @@ class NoCModel:
     """Event-driven NoC with pluggable fidelity."""
 
     def __init__(self, env: Environment, hardware: HardwareSpec,
-                 mode: NoCMode = NoCMode.DETAILED):
+                 mode: NoCMode = NoCMode.DETAILED,
+                 recorder: Optional[TraceRecorder] = None):
         self.env = env
         self.hw = hardware
         self.topo: Topology = hardware.topology
         self.mode = NoCMode(mode)
+        # when set, every link records its busy intervals into the trace's
+        # NOC resource lane (closed on busy->idle transitions)
+        self.recorder = recorder
         self._links: Dict[int, Resource] = {}
         # ring-collective link footprints, keyed by the group tuple (macro
         # mode re-runs the same groups every micro-batch)
@@ -88,12 +93,27 @@ class NoCModel:
     def link(self, link_id: int) -> Resource:
         res = self._links.get(link_id)
         if res is None:
-            res = Resource(self.env, capacity=1, name=f"link{link_id}")
+            cb = (self.recorder.interval_cb(KIND_NOC, link_id)
+                  if self.recorder is not None else None)
+            res = Resource(self.env, capacity=1, name=f"link{link_id}",
+                           interval_cb=cb)
             self._links[link_id] = res
         return res
 
     def occupancy_report(self) -> Dict[int, float]:
-        return {lid: r.utilization() for lid, r in self._links.items()}
+        """Link utilizations in sorted link-id order (deterministic JSON /
+        equality across pool workers regardless of link touch order)."""
+        return {lid: self._links[lid].utilization()
+                for lid in sorted(self._links)}
+
+    def close_open_intervals(self, t: float) -> None:
+        """Flush still-busy links into the recorder at simulation end."""
+        if self.recorder is None:
+            return
+        for lid in sorted(self._links):
+            since = self._links[lid].busy_since
+            if since is not None and t > since:
+                self.recorder.resource(KIND_NOC, lid, since, t)
 
     # -- primitive transfer ------------------------------------------------------
     def _path_time(self, route: Sequence[int], nbytes: float) -> float:

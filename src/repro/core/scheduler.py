@@ -19,7 +19,7 @@ asynchronously so they overlap subsequent compute (Fig. 5 note).
 
 from __future__ import annotations
 
-import dataclasses
+import warnings
 from dataclasses import dataclass, field
 from typing import Dict, Generator, List, Optional, Tuple
 
@@ -30,6 +30,15 @@ from .hardware import HardwareSpec
 from .noc import NoCModel
 from .parallelism import BD, FD, GU, MappedGraph, ParallelPlan, StageMapping
 from .sram import OpAccess, StageMemory, allocate_stage, stage_memory
+from .trace import (
+    KIND_BD,
+    KIND_DRAM,
+    KIND_FD,
+    KIND_GU,
+    KIND_NOC,
+    Trace,
+    TraceRecorder,
+)
 
 __all__ = ["SimResult", "PipelineSimulator", "ideal_pipeline_time",
            "decide_recompute", "estimate_stage_memory", "plan_memory"]
@@ -44,16 +53,50 @@ class SimResult:
     event_count: int
     noc_bytes: float
     dram_bytes: float
-    timeline: List[Tuple[int, str, int, float, float]] = field(default_factory=list)
-    stage_busy: Dict[int, float] = field(default_factory=dict)
-    noc_occupancy: Dict[int, float] = field(default_factory=dict)
+    # columnar event timeline: compute lanes (FD/BD/GU) are always
+    # recorded; NoC/DRAM busy-interval lanes when the simulator ran with
+    # ``collect_timeline=True``
+    trace: Optional[Trace] = None
+    # scalar link-utilization digest for runs without resource lanes
+    # (legacy behaviour: the field was always populated). In-process
+    # convenience only — the sweep engine clears it so serial and pooled
+    # sweeps return identical, lean results
+    noc_occupancy_fallback: Dict[int, float] = field(
+        default_factory=dict, compare=False, repr=False)
+
+    @property
+    def timeline(self) -> List[Tuple[int, str, int, float, float]]:
+        """Deprecated legacy tuple view of the compute lanes; use
+        :attr:`trace` (kept one release for downstream tooling)."""
+        warnings.warn("SimResult.timeline is deprecated; use SimResult.trace",
+                      DeprecationWarning, stacklevel=2)
+        return [] if self.trace is None else self.trace.compute_tuples()
+
+    @property
+    def stage_busy(self) -> Dict[int, float]:
+        """Per-stage FD+BD busy seconds, derived from the trace."""
+        return {} if self.trace is None else self.trace.stage_busy()
+
+    @property
+    def noc_occupancy(self) -> Dict[int, float]:
+        """Per-link busy fraction, sorted by link id: derived from the
+        trace's NOC lane when the run collected resource intervals,
+        otherwise the scalar utilization digest recorded at run end."""
+        occ = ({} if self.trace is None
+               else self.trace.resource_occupancy(KIND_NOC))
+        return occ or dict(self.noc_occupancy_fallback)
+
+    @property
+    def dram_occupancy(self) -> Dict[int, float]:
+        """Per-channel busy fraction from the trace's DRAM lane."""
+        return ({} if self.trace is None
+                else self.trace.resource_occupancy(KIND_DRAM))
 
     @property
     def bubble_ratio(self) -> float:
-        if not self.stage_busy or self.total_time <= 0:
+        if self.trace is None:
             return 0.0
-        avg_busy = sum(self.stage_busy.values()) / len(self.stage_busy)
-        return 1.0 - avg_busy / self.total_time
+        return self.trace.bubble_fraction()
 
 
 def ideal_pipeline_time(fd_bd_per_stage: List[float], num_microbatches: int,
@@ -89,6 +132,7 @@ def plan_memory(mapped: MappedGraph) -> Tuple[List[StageMemory], bool]:
     if recompute:
         for m in memory:
             m.inflight_microbatches = 1  # only boundary acts retained
+            m.offload_bytes = 0.0        # nothing saved => nothing offloaded
     return memory, recompute
 
 
@@ -98,7 +142,13 @@ def estimate_stage_memory(mapped: MappedGraph) -> List[StageMemory]:
 
 class PipelineSimulator:
     """Runs one training iteration (or an inference pipeline) of a mapped
-    graph and reports absolute time + throughput."""
+    graph and reports absolute time + throughput.
+
+    The FD/BD/GU compute lanes of ``SimResult.trace`` are always recorded
+    (they are tiny — O(stages x micro-batches) rows — and feed the scalar
+    busy/bubble digests); ``collect_timeline=True`` additionally records
+    NoC-link and DRAM-channel busy intervals into the trace's resource
+    lanes."""
 
     def __init__(
         self,
@@ -112,9 +162,15 @@ class PipelineSimulator:
         self.plan: ParallelPlan = mapped.plan
         self.hw: HardwareSpec = mapped.hardware
         self.env = Environment()
-        self.noc = NoCModel(self.env, self.hw, mode=NoCMode(noc_mode))
-        self.dram = DRAMModel(self.env, self.hw, self.noc)
+        # compute lanes (FD/BD/GU) are always recorded — they are what the
+        # scalar stage-busy/bubble digests derive from; ``collect_timeline``
+        # additionally records NoC-link / DRAM-channel busy intervals
+        self.recorder = TraceRecorder()
         self.collect_timeline = collect_timeline
+        res_rec = self.recorder if collect_timeline else None
+        self.noc = NoCModel(self.env, self.hw, mode=NoCMode(noc_mode),
+                            recorder=res_rec)
+        self.dram = DRAMModel(self.env, self.hw, self.noc, recorder=res_rec)
         self.boundary_mode = BoundaryMode(boundary_mode)
 
         S = mapped.num_stages
@@ -136,8 +192,6 @@ class PipelineSimulator:
             allocate_stage(st, self.plan, self.hw, recompute=self.recompute)
             for st in mapped.stages]
 
-        self.timeline: List[Tuple[int, str, int, float, float]] = []
-        self.stage_busy: Dict[int, float] = {s: 0.0 for s in range(S)}
         self._fd_done_t: Dict[Tuple[int, int], float] = {}
         self._gu_done: List[Event] = [self.env.event(f"gu[{s}]") for s in range(S)]
         # interleaved 1F1B: virtual stages sharing a tile group serialize
@@ -230,10 +284,8 @@ class PipelineSimulator:
                 stage, acc.fd_act, acc.fd_weight,
                 self._compute_time(split.fwd_flops_tile, split.matmul_fraction))
             yield from self._stage_collectives(stage, split.comms, FD, priority=1)
-        self.stage_busy[sid] += env.now - start
         self._fd_done_t[(sid, mb)] = env.now
-        if self.collect_timeline:
-            self.timeline.append((sid, FD, mb, start, env.now))
+        self.recorder.compute(sid, KIND_FD, mb, start, env.now)
         if res is not None:
             res.release(req)
         # Act Pass -> next stage (start signal)
@@ -263,9 +315,7 @@ class PipelineSimulator:
                 # DP gradient sync: async, overlaps later compute (Fig. 5)
                 pending_dp.append(env.process(
                     self._stage_collectives(stage, split.comms, GU, priority=2)))
-        self.stage_busy[sid] += env.now - start
-        if self.collect_timeline:
-            self.timeline.append((sid, BD, mb, start, env.now))
+        self.recorder.compute(sid, KIND_BD, mb, start, env.now)
         if res is not None:
             res.release(req)
         if sid > 0:
@@ -288,8 +338,7 @@ class PipelineSimulator:
             yield env.process(self.dram.group_access(
                 stage.devices, 0.0, write=True, shared_bytes=gu_bytes / 2,
                 num_shards=stage.weight_shards))
-        if self.collect_timeline:
-            self.timeline.append((sid, GU, 0, start, env.now))
+        self.recorder.compute(sid, KIND_GU, 0, start, env.now)
         self._gu_done[sid].succeed()
 
     def _boundary_pass(self, src: int, dst: int, mb: int, kind: str) -> Generator:
@@ -346,6 +395,9 @@ class PipelineSimulator:
                  for s in range(self.mapped.num_stages)]
         env.run(until_event=env.all_of(procs))
         total = env.now
+        # flush any still-open resource busy intervals into the trace
+        self.noc.close_open_intervals(total)
+        self.dram.close_open_intervals(total)
 
         M = self.plan.num_microbatches
         samples = self.plan.global_batch
@@ -368,7 +420,8 @@ class PipelineSimulator:
             event_count=env.event_count,
             noc_bytes=self.noc.bytes_moved,
             dram_bytes=self.dram.bytes_accessed,
-            timeline=self.timeline,
-            stage_busy=dict(self.stage_busy),
-            noc_occupancy=self.noc.occupancy_report() if self.noc._links else {},
+            trace=self.recorder.freeze(total, self.mapped.num_stages),
+            noc_occupancy_fallback=(self.noc.occupancy_report()
+                                    if not self.collect_timeline
+                                    and self.noc._links else {}),
         )

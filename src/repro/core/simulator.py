@@ -40,7 +40,11 @@ def simulate(
     boundary_mode: BoundaryMode = BoundaryMode.PAIRWISE,
 ) -> SimResult:
     """Run PALM once. ``graph`` must be built with per-iteration batch
-    ``plan.microbatch * plan.dp`` (the DP group's micro-batch)."""
+    ``plan.microbatch * plan.dp`` (the DP group's micro-batch).
+
+    The result's columnar ``trace`` always carries the FD/BD/GU compute
+    lanes; ``collect_timeline=True`` additionally records NoC-link and
+    DRAM-channel busy intervals (resource lanes)."""
     noc_mode = NoCMode(noc_mode)
     boundary_mode = BoundaryMode(boundary_mode)
     mapped = map_graph(graph, hardware, plan)

@@ -81,13 +81,20 @@ class OpAccess:
 
 @dataclass
 class StageMemory:
-    """Per-tile memory footprint of a stage (bytes)."""
+    """Per-tile memory footprint of a stage (bytes).
+
+    ``offload_bytes`` tracks activations parked outside the device
+    (``plan.activation_offload``): they are excluded from :attr:`total`,
+    which is what both the simulator's recompute decision and the sweep
+    engine's pre-simulation memory-cap estimate compare against — so
+    offload-aware pruning stays exact by construction."""
 
     weights: float
     grads: float
     opt_state: float
     act_per_microbatch: float
     inflight_microbatches: int
+    offload_bytes: float = 0.0
 
     @property
     def activations(self) -> float:
@@ -190,6 +197,11 @@ def allocate_stage(
                 bd_a += fd_a
                 bd_w += fd_w
 
+        if plan.training and plan.activation_offload and not recompute:
+            # offloaded saved activations: store after FD, fetch before BD
+            # (with recompute nothing is saved, so offload is a no-op)
+            fd_a += act_in
+            bd_a += act_in
         if not plan.training:
             bd_a = bd_w = 0.0
         out.append(OpAccess(strategy=strategy, fd_act=fd_a, fd_weight=fd_w,
@@ -219,5 +231,12 @@ def stage_memory(stage: StageMapping, plan: ParallelPlan, hardware: HardwareSpec
         inflight = num_mb
     else:  # 1f1b
         inflight = min(max(1, S - stage.stage_id), num_mb)
+    offloaded = 0.0
+    if plan.training and plan.activation_offload:
+        # saved activations live off-device between FD and BD; only the
+        # in-flight micro-batch stays resident
+        offloaded = act_mb * max(0, inflight - 1)
+        inflight = 1
     return StageMemory(weights=weights, grads=grads, opt_state=opt,
-                       act_per_microbatch=act_mb, inflight_microbatches=inflight)
+                       act_per_microbatch=act_mb, inflight_microbatches=inflight,
+                       offload_bytes=offloaded)

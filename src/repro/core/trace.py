@@ -1,0 +1,658 @@
+"""Columnar event trace — the simulator's first-class execution artifact.
+
+PALM's value is event-driven visibility into FD/BD/GU and NoC/DRAM
+interactions; this module stores that timeline as a struct-of-arrays
+:class:`Trace` instead of a Python ``List[Tuple]``:
+
+* five core columns — ``stage`` (int32), ``kind`` (int8 event-kind code),
+  ``micro`` (int32 micro-batch), ``start``/``end`` (float64 seconds) —
+  plus a ``resource`` column (int32) carrying the NoC link id / DRAM
+  channel id for resource busy-interval rows (``-1`` on compute rows);
+* numpy-backed when numpy is importable, ``array.array``-backed otherwise
+  (the simulator core stays dependency-free, matching pyproject);
+* compact, *lossless* wire form: pickling a Trace serializes the columns
+  through :meth:`to_bytes` (zlib over byte-shuffled, xor-delta'd column
+  buffers), which is what makes ``return_timelines=True`` sweeps cheap
+  across the process pool (see ``benchmarks/bench_sweep_engine.py``);
+* ``to_npz``/``from_npz`` (numpy), JSON-safe ``to_dict``/``from_dict``,
+  ``concat``/``filter``/``slice_time`` views;
+* derived analytics: :meth:`stage_utilization`, :meth:`bubble_fraction`,
+  :meth:`critical_path`, :meth:`resource_occupancy` — the scalar
+  ``stage_busy``/``noc_occupancy`` dicts of the legacy ``SimResult`` are
+  now views over this data;
+* :func:`chrome_trace` renders the Chrome/Perfetto ``traceEvents`` JSON
+  (one lane per pipeline stage, separate NoC/DRAM process groups) so
+  training and serving timelines are directly comparable in one viewer.
+
+:class:`TraceRecorder` is the write-side half: the scheduler appends
+compute events, and NoC links / DRAM channels close busy intervals into
+it through :meth:`TraceRecorder.interval_cb`.
+"""
+
+from __future__ import annotations
+
+import array
+import json
+import struct
+import sys
+import zlib
+from typing import Any, Callable, Dict, Iterator, List, NamedTuple, Optional, Sequence, Tuple
+
+try:
+    import numpy as _np
+except ImportError:         # pragma: no cover - exercised by CI bench-smoke
+    _np = None
+
+__all__ = [
+    "KIND_FD", "KIND_BD", "KIND_GU", "KIND_NOC", "KIND_DRAM",
+    "KIND_NAMES", "KIND_CODES", "COMPUTE_KINDS", "RESOURCE_KINDS",
+    "TraceRow", "Trace", "TraceRecorder", "chrome_trace",
+]
+
+# event-kind enum codes (paper Fig. 4/5 taxonomy + resource lanes)
+KIND_FD, KIND_BD, KIND_GU = 0, 1, 2        # compute lanes (per stage)
+KIND_NOC, KIND_DRAM = 3, 4                 # resource busy-interval lanes
+
+KIND_NAMES: Tuple[str, ...] = ("FD", "BD", "GU", "NOC", "DRAM")
+KIND_CODES: Dict[str, int] = {name: code for code, name in enumerate(KIND_NAMES)}
+COMPUTE_KINDS: Tuple[int, ...] = (KIND_FD, KIND_BD, KIND_GU)
+RESOURCE_KINDS: Tuple[int, ...] = (KIND_NOC, KIND_DRAM)
+
+_SCHEMA = 1
+_MAGIC = b"PTRC"
+
+# array.array typecodes with guaranteed widths (int is 4 bytes on every
+# CPython platform we target; guard anyway so to_bytes stays portable)
+_I32 = "i" if array.array("i").itemsize == 4 else "l"
+assert array.array(_I32).itemsize == 4, "no 4-byte int array typecode"
+
+
+# ---------------------------------------------------------------------------
+# column backends
+# ---------------------------------------------------------------------------
+
+def _col(typecode: str, values: Sequence) -> "array.array | _np.ndarray":
+    """Build one column; numpy when available, array.array otherwise."""
+    if _np is not None:
+        dtype = {"b": _np.int8, _I32: _np.int32, "d": _np.float64}[typecode]
+        return _np.asarray(values, dtype=dtype)
+    if isinstance(values, array.array) and values.typecode == typecode:
+        return values
+    return array.array(typecode, values)
+
+
+def _col_bytes(col) -> bytes:
+    b = col.tobytes()
+    if sys.byteorder != "little":       # pragma: no cover - big-endian host
+        a = array.array(_typecode_of(col), b)
+        a.byteswap()
+        b = a.tobytes()
+    return b
+
+
+def _col_from_bytes(typecode: str, b: bytes):
+    a = array.array(typecode)
+    a.frombytes(b)
+    if sys.byteorder != "little":       # pragma: no cover - big-endian host
+        a.byteswap()
+    return _col(typecode, a)
+
+
+def _typecode_of(col) -> str:
+    if _np is not None and isinstance(col, _np.ndarray):
+        return {"int8": "b", "int32": _I32, "float64": "d"}[col.dtype.name]
+    return col.typecode
+
+
+def _col_eq(a, b) -> bool:
+    if len(a) != len(b):
+        return False
+    if _np is not None and isinstance(a, _np.ndarray) and isinstance(b, _np.ndarray):
+        return bool(_np.array_equal(a, b))
+    return list(a) == list(b)
+
+
+# ---------------------------------------------------------------------------
+# lossless byte transforms for the compressed wire form
+# ---------------------------------------------------------------------------
+
+def _shuffle(b: bytes, width: int) -> bytes:
+    """Byte-transpose a ``width``-byte-item buffer (Blosc-style shuffle):
+    groups the slowly-varying high-order bytes so zlib sees long runs."""
+    return b"".join(b[i::width] for i in range(width))
+
+
+def _unshuffle(b: bytes, width: int) -> bytes:
+    n = len(b) // width
+    out = bytearray(len(b))
+    for i in range(width):
+        out[i::width] = b[i * n:(i + 1) * n]
+    return bytes(out)
+
+
+def _xor_delta(b: bytes) -> bytes:
+    """out[i] = x[i] ^ x[i-1] over the u64 bit patterns (lossless; event
+    times are near-monotone, so consecutive words share high bits)."""
+    if _np is not None:
+        x = _np.frombuffer(b, dtype="<u8")
+        out = x.copy()
+        out[1:] = x[1:] ^ x[:-1]
+        return out.tobytes()
+    a = array.array("Q")
+    a.frombytes(b)
+    prev = 0
+    for i, cur in enumerate(a):
+        a[i] = cur ^ prev
+        prev = cur
+    return a.tobytes()
+
+
+def _xor_undelta(b: bytes) -> bytes:
+    if _np is not None:
+        x = _np.frombuffer(b, dtype="<u8")
+        return _np.bitwise_xor.accumulate(x).tobytes()
+    a = array.array("Q")
+    a.frombytes(b)
+    acc = 0
+    for i, cur in enumerate(a):
+        acc ^= cur
+        a[i] = acc
+    return a.tobytes()
+
+
+class TraceRow(NamedTuple):
+    """One materialized trace event (row view over the columns)."""
+
+    stage: int
+    kind: int
+    micro: int
+    resource: int
+    start: float
+    end: float
+
+    @property
+    def kind_name(self) -> str:
+        return KIND_NAMES[self.kind]
+
+    @property
+    def duration(self) -> float:
+        return self.end - self.start
+
+
+# ---------------------------------------------------------------------------
+# Trace
+# ---------------------------------------------------------------------------
+
+class Trace:
+    """Struct-of-arrays event timeline.
+
+    Rows appear in record order (the scheduler appends compute events at
+    completion time, so the compute lanes replay the legacy tuple list
+    exactly). ``total_time`` is the simulation horizon analytics divide
+    by; ``num_stages`` fixes the utilization denominator even for stages
+    that never ran.
+    """
+
+    __slots__ = ("stage", "kind", "micro", "resource", "start", "end",
+                 "total_time", "num_stages")
+
+    def __init__(self, stage: Sequence[int] = (), kind: Sequence[int] = (),
+                 micro: Sequence[int] = (), resource: Sequence[int] = (),
+                 start: Sequence[float] = (), end: Sequence[float] = (),
+                 total_time: float = 0.0, num_stages: int = 0):
+        n = len(stage)
+        if not (len(kind) == len(micro) == len(resource) == len(start)
+                == len(end) == n):
+            raise ValueError("trace columns must have equal length")
+        self.stage = _col(_I32, stage)
+        self.kind = _col("b", kind)
+        self.micro = _col(_I32, micro)
+        self.resource = _col(_I32, resource)
+        self.start = _col("d", start)
+        self.end = _col("d", end)
+        self.total_time = float(total_time)
+        self.num_stages = int(num_stages)
+
+    # -- basics -------------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self.stage)
+
+    def __repr__(self) -> str:
+        return (f"Trace({len(self)} events, {self.num_stages} stages, "
+                f"total_time={self.total_time:.6g})")
+
+    def __eq__(self, other: object) -> bool:
+        if not isinstance(other, Trace):
+            return NotImplemented
+        return (self.total_time == other.total_time
+                and self.num_stages == other.num_stages
+                and all(_col_eq(getattr(self, c), getattr(other, c))
+                        for c in ("stage", "kind", "micro", "resource",
+                                  "start", "end")))
+
+    def __ne__(self, other: object) -> bool:
+        eq = self.__eq__(other)
+        return eq if eq is NotImplemented else not eq
+
+    def rows(self) -> Iterator[TraceRow]:
+        for i in range(len(self)):
+            yield TraceRow(int(self.stage[i]), int(self.kind[i]),
+                           int(self.micro[i]), int(self.resource[i]),
+                           float(self.start[i]), float(self.end[i]))
+
+    def __getitem__(self, i: int) -> TraceRow:
+        if not -len(self) <= i < len(self):
+            raise IndexError(i)
+        i %= max(1, len(self))
+        return TraceRow(int(self.stage[i]), int(self.kind[i]),
+                        int(self.micro[i]), int(self.resource[i]),
+                        float(self.start[i]), float(self.end[i]))
+
+    @property
+    def nbytes(self) -> int:
+        """In-memory column payload size (bytes)."""
+        return sum(len(getattr(self, c)) * _itemsize(getattr(self, c))
+                   for c in ("stage", "kind", "micro", "resource", "start",
+                             "end"))
+
+    # -- legacy view ---------------------------------------------------------
+    def compute_tuples(self) -> List[Tuple[int, str, int, float, float]]:
+        """The legacy ``SimResult.timeline`` tuple list: compute lanes only,
+        in record order, kind as its string name."""
+        return [(r.stage, KIND_NAMES[r.kind], r.micro, r.start, r.end)
+                for r in self.rows() if r.kind in COMPUTE_KINDS]
+
+    # -- views ---------------------------------------------------------------
+    def filter(self, stages: Optional[Sequence[int]] = None,
+               kinds: Optional[Sequence[int]] = None,
+               micro: Optional[Sequence[int]] = None) -> "Trace":
+        """Row-subset copy matching every provided criterion."""
+        stages = None if stages is None else set(stages)
+        kinds = None if kinds is None else set(kinds)
+        micro = None if micro is None else set(micro)
+        idx = [i for i in range(len(self))
+               if (stages is None or int(self.stage[i]) in stages)
+               and (kinds is None or int(self.kind[i]) in kinds)
+               and (micro is None or int(self.micro[i]) in micro)]
+        return self._take(idx)
+
+    def slice_time(self, t0: float, t1: float) -> "Trace":
+        """Rows whose [start, end) interval intersects [t0, t1) (intervals
+        are kept whole, not clipped)."""
+        idx = [i for i in range(len(self))
+               if float(self.end[i]) > t0 and float(self.start[i]) < t1]
+        return self._take(idx)
+
+    def _take(self, idx: List[int]) -> "Trace":
+        return Trace(stage=[int(self.stage[i]) for i in idx],
+                     kind=[int(self.kind[i]) for i in idx],
+                     micro=[int(self.micro[i]) for i in idx],
+                     resource=[int(self.resource[i]) for i in idx],
+                     start=[float(self.start[i]) for i in idx],
+                     end=[float(self.end[i]) for i in idx],
+                     total_time=self.total_time, num_stages=self.num_stages)
+
+    @classmethod
+    def concat(cls, traces: Sequence["Trace"]) -> "Trace":
+        """Row-wise concatenation; total_time is the max horizon and
+        num_stages the max stage count of the parts."""
+        traces = list(traces)
+        if not traces:
+            return cls()
+        return cls(
+            stage=[s for t in traces for s in t.stage],
+            kind=[k for t in traces for k in t.kind],
+            micro=[m for t in traces for m in t.micro],
+            resource=[r for t in traces for r in t.resource],
+            start=[x for t in traces for x in t.start],
+            end=[x for t in traces for x in t.end],
+            total_time=max(t.total_time for t in traces),
+            num_stages=max(t.num_stages for t in traces))
+
+    # -- analytics -----------------------------------------------------------
+    def stage_busy(self, kinds: Sequence[int] = (KIND_FD, KIND_BD)) -> Dict[int, float]:
+        """Per-stage busy seconds over the given compute kinds (default
+        FD+BD, the legacy ``SimResult.stage_busy`` definition — GU overlaps
+        the async DP collectives and counts as pipeline tail, not busy)."""
+        kinds = set(kinds)
+        busy = {s: 0.0 for s in range(self.num_stages)}
+        for i in range(len(self)):
+            if int(self.kind[i]) in kinds:
+                s = int(self.stage[i])
+                busy[s] = busy.get(s, 0.0) + float(self.end[i]) - float(self.start[i])
+        return busy
+
+    def stage_utilization(self, kinds: Sequence[int] = COMPUTE_KINDS) -> Dict[int, float]:
+        """Busy fraction per stage (all compute kinds by default)."""
+        if self.total_time <= 0:
+            return {s: 0.0 for s in range(self.num_stages)}
+        return {s: b / self.total_time
+                for s, b in self.stage_busy(kinds).items()}
+
+    def bubble_fraction(self, kinds: Sequence[int] = (KIND_FD, KIND_BD)) -> float:
+        """1 - mean stage busy fraction (the legacy ``bubble_ratio``)."""
+        busy = self.stage_busy(kinds)
+        if not busy or self.total_time <= 0:
+            return 0.0
+        return 1.0 - sum(busy.values()) / len(busy) / self.total_time
+
+    def resource_occupancy(self, kind: int = KIND_NOC) -> Dict[int, float]:
+        """Busy fraction per resource id for one resource lane, in sorted
+        key order (deterministic across pool workers)."""
+        busy: Dict[int, float] = {}
+        for i in range(len(self)):
+            if int(self.kind[i]) == kind:
+                rid = int(self.resource[i])
+                busy[rid] = busy.get(rid, 0.0) + float(self.end[i]) - float(self.start[i])
+        if self.total_time <= 0:
+            return {rid: 0.0 for rid in sorted(busy)}
+        return {rid: busy[rid] / self.total_time for rid in sorted(busy)}
+
+    def critical_path(self) -> List[TraceRow]:
+        """Binding-dependency chain through the compute lanes, in
+        chronological order.
+
+        Walks back from the last-finishing compute event; at each step the
+        predecessor is the latest-ending candidate among the event's
+        structural dependencies (previous event on the same stage; the
+        upstream FD for an FD; the downstream BD — or the local loss FD —
+        for a BD; the stage's last BD for a GU)."""
+        comp = [(i, TraceRow(int(self.stage[i]), int(self.kind[i]),
+                             int(self.micro[i]), int(self.resource[i]),
+                             float(self.start[i]), float(self.end[i])))
+                for i in range(len(self))
+                if int(self.kind[i]) in COMPUTE_KINDS]
+        if not comp:
+            return []
+        by_key = {(r.stage, r.kind, r.micro): r for _, r in comp}
+        prev_on_stage: Dict[int, Dict[Tuple[int, int, int], Optional[TraceRow]]] = {}
+        last: Dict[int, Optional[TraceRow]] = {}
+        last_bd: Dict[int, TraceRow] = {}
+        for _, r in comp:                       # record order == per-stage order
+            prev_on_stage.setdefault(r.stage, {})[(r.stage, r.kind, r.micro)] = \
+                last.get(r.stage)
+            last[r.stage] = r
+            if r.kind == KIND_BD:
+                last_bd[r.stage] = r
+        max_stage = max(r.stage for _, r in comp)
+
+        cur = max(comp, key=lambda ir: (ir[1].end, ir[0]))[1]
+        path = [cur]
+        for _ in range(len(comp)):              # bounded walk (no cycles)
+            cands: List[Optional[TraceRow]] = [
+                prev_on_stage[cur.stage].get((cur.stage, cur.kind, cur.micro))]
+            if cur.kind == KIND_FD and cur.stage > 0:
+                cands.append(by_key.get((cur.stage - 1, KIND_FD, cur.micro)))
+            elif cur.kind == KIND_BD:
+                if cur.stage < max_stage:
+                    cands.append(by_key.get((cur.stage + 1, KIND_BD, cur.micro)))
+                else:                           # loss computed locally after FD
+                    cands.append(by_key.get((cur.stage, KIND_FD, cur.micro)))
+            elif cur.kind == KIND_GU:
+                cands.append(last_bd.get(cur.stage))
+            cands = [c for c in cands if c is not None and c is not cur
+                     and c.end <= cur.start + 1e-12]
+            if not cands:
+                break
+            cur = max(cands, key=lambda r: r.end)
+            path.append(cur)
+        path.reverse()
+        return path
+
+    def summary(self) -> Dict[str, Any]:
+        """JSON-safe analytics digest (what reports embed)."""
+        path = self.critical_path()
+        return {
+            "events": len(self),
+            "compute_events": sum(1 for i in range(len(self))
+                                  if int(self.kind[i]) in COMPUTE_KINDS),
+            "total_time": self.total_time,
+            "num_stages": self.num_stages,
+            "stage_utilization": {str(s): u
+                                  for s, u in self.stage_utilization().items()},
+            "bubble_fraction": self.bubble_fraction(),
+            "critical_path": {
+                "length": len(path),
+                "busy_time": sum(r.duration for r in path),
+            },
+            "noc_occupancy": {str(k): v
+                              for k, v in self.resource_occupancy(KIND_NOC).items()},
+            "dram_occupancy": {str(k): v
+                               for k, v in self.resource_occupancy(KIND_DRAM).items()},
+        }
+
+    # -- serialization -------------------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        """Compact JSON-safe dict (plain lists, kinds as enum codes)."""
+        return {
+            "schema": _SCHEMA,
+            "total_time": self.total_time,
+            "num_stages": self.num_stages,
+            "stage": [int(v) for v in self.stage],
+            "kind": [int(v) for v in self.kind],
+            "micro": [int(v) for v in self.micro],
+            "resource": [int(v) for v in self.resource],
+            "start": [float(v) for v in self.start],
+            "end": [float(v) for v in self.end],
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "Trace":
+        if d.get("schema", _SCHEMA) != _SCHEMA:
+            raise ValueError(f"unknown trace schema {d.get('schema')!r}")
+        return cls(stage=d["stage"], kind=d["kind"], micro=d["micro"],
+                   resource=d["resource"], start=d["start"], end=d["end"],
+                   total_time=d["total_time"], num_stages=d["num_stages"])
+
+    def to_bytes(self) -> bytes:
+        """Lossless compressed wire form (also the pickle payload).
+
+        Events are recorded at completion time, so the ``end`` column is
+        near-monotone: xor-delta over its u64 bit patterns leaves mostly
+        shared high bits. ``start`` is stored as the duration
+        ``end - start`` — event-driven timelines repeat a handful of
+        distinct durations thousands of times — with an explicit fixup
+        list for the (rare) rows where ``end - dur`` does not reproduce
+        ``start`` bit-exactly. Float payloads are byte-shuffled, then the
+        whole body is zlib-compressed."""
+        start = [float(v) for v in self.start] if _np is None else None
+        if _np is None:
+            end = [float(v) for v in self.end]
+            dur = [e - s for s, e in zip(start, end)]
+            fix_idx = [i for i in range(len(self))
+                       if end[i] - dur[i] != start[i]]
+            dur_b = _col_bytes(_col("d", dur))
+            fix_idx_b = _col_bytes(_col(_I32, fix_idx))
+            fix_val_b = _col_bytes(_col("d", [start[i] for i in fix_idx]))
+        else:
+            dur = self.end - self.start
+            bad = (self.end - dur) != self.start
+            idx = _np.nonzero(bad)[0].astype(_np.int32)
+            dur_b = _col_bytes(dur)
+            fix_idx_b = _col_bytes(idx)
+            fix_val_b = _col_bytes(self.start[bad])
+            fix_idx = idx
+        body = (_col_bytes(self.stage) + _col_bytes(self.kind)
+                + _col_bytes(self.micro) + _col_bytes(self.resource)
+                + _shuffle(_xor_delta(_col_bytes(self.end)), 8)
+                + _shuffle(dur_b, 8) + fix_idx_b + fix_val_b)
+        header = json.dumps({"v": _SCHEMA, "n": len(self),
+                             "nfix": len(fix_idx),
+                             "total_time": self.total_time,
+                             "num_stages": self.num_stages}).encode()
+        return (_MAGIC + struct.pack("<I", len(header)) + header
+                + zlib.compress(body, 6))
+
+    @classmethod
+    def from_bytes(cls, blob: bytes) -> "Trace":
+        if blob[:4] != _MAGIC:
+            raise ValueError("not a Trace byte stream")
+        (hlen,) = struct.unpack("<I", blob[4:8])
+        meta = json.loads(blob[8:8 + hlen].decode())
+        if meta["v"] != _SCHEMA:
+            raise ValueError(f"unknown trace schema {meta['v']!r}")
+        n, nfix = meta["n"], meta["nfix"]
+        body = zlib.decompress(blob[8 + hlen:])
+        sizes = [4 * n, n, 4 * n, 4 * n, 8 * n, 8 * n, 4 * nfix, 8 * nfix]
+        if len(body) != sum(sizes):
+            raise ValueError("corrupt trace payload")
+        parts, off = [], 0
+        for sz in sizes:
+            parts.append(body[off:off + sz])
+            off += sz
+        end_b = _xor_undelta(_unshuffle(parts[4], 8))
+        end = _col_from_bytes("d", end_b)
+        dur = _col_from_bytes("d", _unshuffle(parts[5], 8))
+        fix_idx = _col_from_bytes(_I32, parts[6])
+        fix_val = _col_from_bytes("d", parts[7])
+        if _np is not None:
+            start = end - dur
+            start[_np.asarray(fix_idx, dtype=_np.int64)] = fix_val
+        else:
+            start = array.array("d", (e - d for e, d in zip(end, dur)))
+            for i, v in zip(fix_idx, fix_val):
+                start[i] = v
+        out = cls.__new__(cls)
+        out.stage = _col_from_bytes(_I32, parts[0])
+        out.kind = _col_from_bytes("b", parts[1])
+        out.micro = _col_from_bytes(_I32, parts[2])
+        out.resource = _col_from_bytes(_I32, parts[3])
+        out.start = _col("d", start)
+        out.end = end
+        out.total_time = float(meta["total_time"])
+        out.num_stages = int(meta["num_stages"])
+        return out
+
+    def __reduce__(self):
+        # columnar + compressed on the wire: this is what cuts sweep IPC
+        return (Trace.from_bytes, (self.to_bytes(),))
+
+    def to_npz(self, path) -> None:
+        """Write the columns as a compressed ``.npz`` archive (numpy only)."""
+        if _np is None:
+            raise RuntimeError("to_npz needs numpy; use to_bytes/to_dict "
+                               "in numpy-free environments")
+        _np.savez_compressed(
+            path,
+            stage=_np.asarray(self.stage, dtype=_np.int32),
+            kind=_np.asarray(self.kind, dtype=_np.int8),
+            micro=_np.asarray(self.micro, dtype=_np.int32),
+            resource=_np.asarray(self.resource, dtype=_np.int32),
+            start=_np.asarray(self.start, dtype=_np.float64),
+            end=_np.asarray(self.end, dtype=_np.float64),
+            meta=_np.array([self.total_time, float(self.num_stages),
+                            float(_SCHEMA)]))
+
+    @classmethod
+    def from_npz(cls, path) -> "Trace":
+        if _np is None:
+            raise RuntimeError("from_npz needs numpy")
+        with _np.load(path) as z:
+            meta = z["meta"]
+            if int(meta[2]) != _SCHEMA:
+                raise ValueError(f"unknown trace schema {int(meta[2])}")
+            return cls(stage=z["stage"], kind=z["kind"], micro=z["micro"],
+                       resource=z["resource"], start=z["start"], end=z["end"],
+                       total_time=float(meta[0]), num_stages=int(meta[1]))
+
+
+def _itemsize(col) -> int:
+    return col.itemsize     # same attribute on ndarray and array.array
+
+
+# ---------------------------------------------------------------------------
+# TraceRecorder (write side)
+# ---------------------------------------------------------------------------
+
+class TraceRecorder:
+    """Append-only builder the simulator records into; ``freeze`` produces
+    the immutable columnar :class:`Trace`."""
+
+    def __init__(self):
+        self._stage: List[int] = []
+        self._kind: List[int] = []
+        self._micro: List[int] = []
+        self._resource: List[int] = []
+        self._start: List[float] = []
+        self._end: List[float] = []
+
+    def __len__(self) -> int:
+        return len(self._stage)
+
+    def compute(self, stage: int, kind: int, micro: int,
+                start: float, end: float) -> None:
+        """One FD/BD/GU event on a pipeline stage."""
+        self._stage.append(stage)
+        self._kind.append(kind)
+        self._micro.append(micro)
+        self._resource.append(-1)
+        self._start.append(start)
+        self._end.append(end)
+
+    def resource(self, kind: int, resource_id: int,
+                 start: float, end: float) -> None:
+        """One busy interval on a NoC link / DRAM channel."""
+        self._stage.append(-1)
+        self._kind.append(kind)
+        self._micro.append(-1)
+        self._resource.append(resource_id)
+        self._start.append(start)
+        self._end.append(end)
+
+    def interval_cb(self, kind: int, resource_id: int) -> Callable[[float, float], None]:
+        """Busy-interval callback for one resource (what
+        :class:`~repro.core.events.Resource` calls on busy->idle)."""
+        def cb(start: float, end: float) -> None:
+            self.resource(kind, resource_id, start, end)
+        return cb
+
+    def freeze(self, total_time: float, num_stages: int) -> Trace:
+        return Trace(stage=self._stage, kind=self._kind, micro=self._micro,
+                     resource=self._resource, start=self._start,
+                     end=self._end, total_time=total_time,
+                     num_stages=num_stages)
+
+
+# ---------------------------------------------------------------------------
+# Chrome / Perfetto export
+# ---------------------------------------------------------------------------
+
+_PID_STAGES, _PID_NOC, _PID_DRAM = 0, 1, 2
+
+
+def chrome_trace(trace: Trace, label: str = "palm") -> Dict[str, Any]:
+    """Render a Trace as the Chrome/Perfetto ``traceEvents`` JSON dict
+    (load via chrome://tracing or https://ui.perfetto.dev).
+
+    Pipeline stages are threads of process 0 (one row per stage); NoC link
+    and DRAM channel busy intervals are threads of processes 1 and 2.
+    Timestamps are microseconds (the format's unit); durations are
+    complete events (``ph: "X"``)."""
+    events: List[Dict[str, Any]] = []
+    for pid, name in ((_PID_STAGES, f"{label}: pipeline stages"),
+                      (_PID_NOC, f"{label}: NoC links"),
+                      (_PID_DRAM, f"{label}: DRAM channels")):
+        events.append({"ph": "M", "pid": pid, "name": "process_name",
+                       "args": {"name": name}})
+    seen_tids = set()
+    for r in trace.rows():
+        if r.kind in COMPUTE_KINDS:
+            pid, tid = _PID_STAGES, r.stage
+            name = f"{KIND_NAMES[r.kind]} mb{r.micro}"
+            args: Dict[str, Any] = {"micro": r.micro}
+            tname = f"stage {r.stage}"
+        else:
+            pid = _PID_NOC if r.kind == KIND_NOC else _PID_DRAM
+            tid = r.resource
+            name = "busy"
+            args = {}
+            tname = (f"link {r.resource}" if r.kind == KIND_NOC
+                     else f"channel {r.resource}")
+        if (pid, tid) not in seen_tids:
+            seen_tids.add((pid, tid))
+            events.append({"ph": "M", "pid": pid, "tid": tid,
+                           "name": "thread_name", "args": {"name": tname}})
+        events.append({"ph": "X", "pid": pid, "tid": tid, "name": name,
+                       "cat": KIND_NAMES[r.kind], "ts": r.start * 1e6,
+                       "dur": (r.end - r.start) * 1e6, "args": args})
+    return {"displayTimeUnit": "ms", "traceEvents": events}

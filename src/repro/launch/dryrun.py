@@ -231,6 +231,55 @@ def run_decode_cell(arch, shape, mesh, record):
     record["config"] = {"cache_len": shape.seq_len}
 
 
+def palm_trace_record(arch_name: str, shape_name: str,
+                      hardware: str = "tpu_v5e_4x4") -> dict:
+    """Run the cell's workload through the PALM event simulator and return
+    ``{"trace": <chrome traceEvents dict>, "summary": ..., "plan": ...}``.
+
+    Training cells and serving cells (prefill/decode) emit the *same*
+    columnar :class:`~repro.core.trace.Trace` schema, rendered through the
+    same :func:`~repro.core.trace.chrome_trace` exporter the CLI's
+    ``simulate --trace-out`` uses — so dry-run timelines are directly
+    comparable with any other PALM timeline in one Perfetto view.
+    """
+    import math
+
+    from ..api import Experiment, ParallelPlan, resolve_hardware
+    from ..api.report import plan_to_dict
+    from ..core.trace import chrome_trace
+
+    arch = get_config(arch_name)
+    shape = SHAPES[shape_name]
+    hw = resolve_hardware(hardware)
+    n = hw.num_devices
+    train = shape.kind == "train"
+    # simple feasible split: pipeline depth bounded by layer count, data
+    # parallelism by the batch, tensor parallelism takes the remainder
+    pp = min(4, arch.num_layers, n)
+    while pp > 1 and n % pp:
+        pp -= 1
+    rest = n // pp
+    dp = math.gcd(rest, shape.global_batch)
+    tp = min(rest // dp, max(1, arch.n_heads))
+    plan = ParallelPlan(pp=pp, dp=dp, tp=tp, microbatch=1,
+                        global_batch=shape.global_batch, training=train)
+    report = Experiment(
+        arch=arch, hardware=hw, plan=plan,
+        seq_len=shape.seq_len, global_batch=shape.global_batch,
+        training=train, decode=shape.kind == "decode",
+        collect_timeline=True,
+    ).run()
+    return {
+        "hardware": hw.name,
+        "plan": plan_to_dict(plan),
+        "summary": report.trace_summary(),
+        "throughput": report.throughput,
+        "total_time": report.total_time,
+        "trace": chrome_trace(report.trace,
+                              label=f"{arch_name} {shape_name} (palm)"),
+    }
+
+
 def model_flops(arch, shape) -> float:
     N = arch.active_param_count()
     if shape.kind == "train":
@@ -283,6 +332,17 @@ def main(argv=None):
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--out", type=str, default=str(ARTIFACT_DIR))
+    ap.add_argument("--palm-trace", action="store_true",
+                    help="first write <cell>.palm_trace.json: the cell's "
+                         "workload simulated by PALM, in the same "
+                         "Chrome/Perfetto trace schema as `python -m repro "
+                         "simulate --trace-out` (the trace itself needs no "
+                         "XLA compile; combine with --trace-only to skip "
+                         "the compile)")
+    ap.add_argument("--trace-only", action="store_true",
+                    help="with --palm-trace: stop after writing the trace")
+    ap.add_argument("--palm-hardware", type=str, default="tpu_v5e_4x4",
+                    help="hardware preset the --palm-trace simulation runs on")
     args = ap.parse_args(argv)
 
     out_dir = Path(args.out)
@@ -299,6 +359,10 @@ def main(argv=None):
                 continue
             cmd = [sys.executable, "-m", "repro.launch.dryrun",
                    "--arch", a, "--shape", s, "--mesh", m, "--out", str(out_dir)]
+            if args.palm_trace:
+                cmd += ["--palm-trace", "--palm-hardware", args.palm_hardware]
+                if args.trace_only:
+                    cmd.append("--trace-only")
             print(f"[run] {a} x {s} x {m}", flush=True)
             r = subprocess.run(cmd, cwd=str(Path(__file__).resolve().parents[2]))
             if r.returncode != 0:
@@ -308,6 +372,17 @@ def main(argv=None):
 
     assert args.arch and args.shape, "--arch and --shape required (or --all)"
     path = out_dir / f"{args.arch}__{args.shape}__{args.mesh}.json"
+    if args.palm_trace:
+        # event-simulated timeline for this cell (cheap: no XLA compile);
+        # same schema as training/serving traces everywhere else
+        tpath = out_dir / f"{args.arch}__{args.shape}.palm_trace.json"
+        rec = palm_trace_record(args.arch, args.shape, args.palm_hardware)
+        tpath.write_text(json.dumps(rec, indent=1))
+        s = rec["summary"]
+        print(f"[palm trace written to {tpath}: {s['events']} events, "
+              f"bubble {s['bubble_fraction']:.1%}]")
+        if args.trace_only:
+            return 0
     t0 = time.time()
     try:
         record = run_cell(args.arch, args.shape, args.mesh)

@@ -28,7 +28,8 @@ __all__ = ["make_serve_step", "make_prefill_step", "greedy_generate",
 
 
 def plan_serving(arch: "ArchConfig | str", hardware="tpu_v5e", batch: int = 8,
-                 context_len: int = 4096, workers: int = 0):
+                 context_len: int = 4096, workers: int = 0,
+                 collect_timeline: bool = False):
     """Pick a ``(data, model)`` mesh split for serving by sweeping
     decode-step parallelism through the PALM simulator.
 
@@ -38,6 +39,12 @@ def plan_serving(arch: "ArchConfig | str", hardware="tpu_v5e", batch: int = 8,
     on ``data``, heads/features on ``model``). Returns ``(mesh_axes,
     SweepReport)`` where ``mesh_axes`` is ``{"data": dp, "model": tp}``
     for the highest simulated decode throughput.
+
+    ``collect_timeline=True`` attaches each candidate's columnar event
+    timeline to ``RunReport.trace`` — the *same*
+    :class:`~repro.core.trace.Trace` schema training simulations emit, so
+    serving and training timelines can be compared (or rendered through
+    :func:`repro.core.trace.chrome_trace`) side by side.
     """
     from ..api import Experiment, Layout, SearchSpace, resolve_hardware
     from ..configs import get_config
@@ -60,6 +67,7 @@ def plan_serving(arch: "ArchConfig | str", hardware="tpu_v5e", batch: int = 8,
         global_batch=batch,
         training=False,
         decode=True,
+        collect_timeline=collect_timeline,   # full NoC/DRAM lanes in traces
     ).sweep(workers=workers)
     if report.best is None:
         raise RuntimeError(f"no feasible serving split for {arch.name} on {hw.name}")

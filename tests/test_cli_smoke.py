@@ -52,6 +52,41 @@ def test_cli_plan_tiny():
     assert "best plan for yi-6b" in proc.stdout
 
 
+def test_cli_simulate_trace_export(tmp_path):
+    """--trace-out writes Chrome/Perfetto traceEvents; --trace-npz the
+    columnar archive (trace satellite)."""
+    out = tmp_path / "trace.json"
+    npz = tmp_path / "trace.npz"
+    proc = _run(["-m", "repro", "simulate", "--arch", "yi-6b",
+                 "--hardware", "tpu_v5e_2x2", "--pp", "2", "--dp", "2",
+                 "--global-batch", "8", "--seq-len", "128",
+                 "--trace-out", str(out), "--trace-npz", str(npz)])
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    doc = json.loads(out.read_text())
+    slices = [e for e in doc["traceEvents"] if e.get("ph") == "X"]
+    assert slices and all(e["dur"] >= 0 for e in slices)
+    cats = {e["cat"] for e in slices}
+    assert {"FD", "BD", "GU"} <= cats       # compute lanes
+    assert cats & {"NOC", "DRAM"}           # resource lanes
+    sys.path.insert(0, str(ROOT / "src"))
+    try:
+        from repro.core import Trace
+        t = Trace.from_npz(npz)
+        assert len(t) == len(slices)
+    finally:
+        sys.path.pop(0)
+
+
+def test_cli_simulate_activation_offload():
+    proc = _run(["-m", "repro", "simulate", "--arch", "yi-6b",
+                 "--hardware", "tpu_v5e_2x2", "--pp", "2", "--dp", "2",
+                 "--global-batch", "8", "--seq-len", "128",
+                 "--activation-offload", "--json", "-"])
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    payload = json.loads(proc.stdout[proc.stdout.index("{"):])
+    assert payload["plan"]["activation_offload"] is True
+
+
 def test_cli_rejects_unknown_enum_value():
     proc = _run(["-m", "repro", "simulate", "--arch", "yi-6b",
                  "--schedule", "2f2b"])

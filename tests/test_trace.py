@@ -1,0 +1,391 @@
+"""Columnar Trace core: legacy-view parity across NoC modes, round-trips
+(dict / npz / bytes / pickle, numpy and fallback backends), serial-vs-pool
+trace equality, analytics sanity (utilization bounds, GPipe bubble vs
+Eq. (1)), resource-lane occupancy, activation-offload accounting."""
+
+import pickle
+
+import pytest
+
+from repro.api import Experiment, Layout, SearchSpace
+from repro.core import (
+    COMPUTE_KINDS,
+    KIND_BD,
+    KIND_DRAM,
+    KIND_FD,
+    KIND_GU,
+    KIND_NOC,
+    NoCMode,
+    ParallelPlan,
+    PipelineSimulator,
+    Trace,
+    chrome_trace,
+    grayskull,
+    ideal_pipeline_time,
+    simulate,
+    transformer_lm_graph,
+    tpu_v5e_pod,
+    wafer_scale,
+)
+from repro.core.parallelism import map_graph
+
+import repro.core.trace as trace_mod
+
+
+def _rig(plan, layers=2, H=256, S=128):
+    """Rigged 2-stage pipeline workload."""
+    return transformer_lm_graph("t", layers, H, 8, S, plan.microbatch * plan.dp,
+                                vocab=2048)
+
+
+def _plan(**kw):
+    base = dict(pp=2, dp=1, tp=2, microbatch=1, global_batch=4)
+    base.update(kw)
+    return ParallelPlan(**base)
+
+
+# ---------------------------------------------------------------------------
+# columnar <-> legacy-tuple parity, all three NoC modes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", list(NoCMode))
+def test_trace_matches_legacy_tuple_view(mode):
+    plan = _plan()
+    res = simulate(_rig(plan), wafer_scale(), plan, noc_mode=mode,
+                   collect_timeline=True)
+    t = res.trace
+    M = plan.num_microbatches
+
+    with pytest.deprecated_call():
+        legacy = res.timeline
+    assert legacy == t.compute_tuples()
+
+    # the compute lanes carry exactly the FD/BD/GU event population
+    fd = t.filter(kinds=(KIND_FD,))
+    bd = t.filter(kinds=(KIND_BD,))
+    gu = t.filter(kinds=(KIND_GU,))
+    assert len(fd) == 2 * M and len(bd) == 2 * M and len(gu) == 2
+    assert len(t.filter(kinds=COMPUTE_KINDS)) == len(legacy)
+    for row in t.filter(kinds=COMPUTE_KINDS).rows():
+        assert 0 <= row.stage < 2
+        assert row.resource == -1
+        assert 0.0 <= row.start <= row.end <= t.total_time + 1e-12
+    # per-stage compute events never overlap (stages are serial workers)
+    for s in (0, 1):
+        iv = sorted((r.start, r.end)
+                    for r in t.filter(stages=(s,), kinds=COMPUTE_KINDS).rows())
+        for (a0, a1), (b0, b1) in zip(iv, iv[1:]):
+            assert a1 <= b0 + 1e-12
+    # scalar digests are views over the same columns
+    assert res.stage_busy == t.stage_busy()
+    assert res.bubble_ratio == t.bubble_fraction()
+
+
+def test_compute_lanes_always_recorded():
+    """Scalar digests (stage busy / bubble) derive from the trace, so the
+    compute lanes exist even without collect_timeline."""
+    plan = _plan()
+    res = simulate(_rig(plan), wafer_scale(), plan)
+    assert len(res.trace.filter(kinds=COMPUTE_KINDS)) > 0
+    assert len(res.trace.filter(kinds=(KIND_NOC, KIND_DRAM))) == 0
+    assert sum(res.stage_busy.values()) > 0
+
+
+# ---------------------------------------------------------------------------
+# round-trips
+# ---------------------------------------------------------------------------
+
+def _collected_trace():
+    plan = _plan(global_batch=8)
+    return simulate(_rig(plan), wafer_scale(), plan,
+                    collect_timeline=True).trace
+
+
+def test_trace_round_trips(tmp_path):
+    t = _collected_trace()
+    assert len(t.filter(kinds=(KIND_NOC,))) > 0     # resource lanes present
+    assert Trace.from_dict(t.to_dict()) == t
+    assert Trace.from_bytes(t.to_bytes()) == t
+    assert pickle.loads(pickle.dumps(t)) == t
+    if trace_mod._np is not None:
+        p = tmp_path / "t.npz"
+        t.to_npz(p)
+        assert Trace.from_npz(p) == t
+    # the wire form is substantially smaller than the raw columns
+    assert len(t.to_bytes()) < t.nbytes
+
+
+def test_trace_round_trips_without_numpy(monkeypatch):
+    """The simulator core is dependency-free: the array.array backend must
+    produce byte-identical wire forms and decode numpy-encoded blobs."""
+    t = _collected_trace()
+    blob = t.to_bytes()
+    monkeypatch.setattr(trace_mod, "_np", None)
+    rebuilt = Trace.from_bytes(blob)        # cross-backend decode
+    assert [float(v) for v in rebuilt.start] == [float(v) for v in t.start]
+    assert [float(v) for v in rebuilt.end] == [float(v) for v in t.end]
+    assert [int(v) for v in rebuilt.kind] == [int(v) for v in t.kind]
+    fallback = Trace(stage=list(t.stage), kind=list(t.kind),
+                     micro=list(t.micro), resource=list(t.resource),
+                     start=list(t.start), end=list(t.end),
+                     total_time=t.total_time, num_stages=t.num_stages)
+    assert fallback.to_bytes() == blob      # byte-identical encoding
+    assert Trace.from_bytes(fallback.to_bytes()) == fallback
+
+
+def test_trace_views_and_concat():
+    t = _collected_trace()
+    half = t.slice_time(0.0, t.total_time / 2)
+    assert 0 < len(half) < len(t)
+    assert all(r.start < t.total_time / 2 for r in half.rows())
+    s0 = t.filter(stages=(0,), kinds=COMPUTE_KINDS)
+    assert {r.stage for r in s0.rows()} == {0}
+    both = Trace.concat([s0, t.filter(stages=(1,), kinds=COMPUTE_KINDS)])
+    assert len(both) == len(t.filter(kinds=COMPUTE_KINDS))
+    assert both.total_time == t.total_time
+
+
+# ---------------------------------------------------------------------------
+# serial vs pool equality
+# ---------------------------------------------------------------------------
+
+def test_serial_and_pool_sweeps_ship_identical_traces():
+    exp = Experiment(
+        arch="yi-6b", hardware=tpu_v5e_pod(2, 2),
+        search=SearchSpace(max_plans=4, microbatch_sizes=(1,),
+                           layouts=(Layout.S_SHAPE,)),
+        seq_len=128, global_batch=8)
+    serial = exp.sweep(workers=0, return_timelines=True)
+    pooled = exp.sweep(workers=2, return_timelines=True)
+    assert serial.runs and pooled.executor.startswith("process")
+    for a, b in zip(serial.runs, pooled.runs):
+        assert a.trace is not None and b.trace is not None
+        assert a.trace == b.trace           # bit-identical columns
+        assert a.sim.trace == a.trace
+        assert a.total_time == b.total_time
+
+
+# ---------------------------------------------------------------------------
+# analytics sanity
+# ---------------------------------------------------------------------------
+
+def test_utilization_bounds_and_bubble_identity():
+    plan = _plan(global_batch=8)
+    res = simulate(_rig(plan), wafer_scale(), plan)
+    t = res.trace
+    util = t.stage_utilization()
+    assert set(util) == {0, 1}
+    assert all(0.0 <= u <= 1.0 for u in util.values())
+    busy = t.stage_busy()
+    expect = 1.0 - sum(busy.values()) / len(busy) / t.total_time
+    assert t.bubble_fraction() == pytest.approx(expect)
+
+
+def test_gpipe_bubble_matches_ideal_pipeline_time():
+    """On GPipe with local-HBM hardware the simulated total matches the
+    Eq. (1) bound built from the trace's own FD/BD durations, and the
+    bubble fraction follows."""
+    plan = _plan(schedule="gpipe", global_batch=8, tp=1, dp=1)
+    # wide layers: compute dominates the act/grad boundary passes Eq. (1)
+    # does not model
+    res = simulate(_rig(plan, H=2048), tpu_v5e_pod(2, 2), plan,
+                   noc_mode=NoCMode.ANALYTICAL)
+    t = res.trace
+    M = plan.num_microbatches
+    fdbd = []
+    for s in (0, 1):
+        mb0 = t.filter(stages=(s,), kinds=(KIND_FD, KIND_BD), micro=(0,))
+        fdbd.append(sum(r.duration for r in mb0.rows()))
+    gu = sum(r.duration for r in t.filter(kinds=(KIND_GU,)).rows()) / 2
+    ideal = ideal_pipeline_time(fdbd, M, gu_time=gu)
+    assert ideal <= t.total_time * (1 + 1e-9)
+    assert t.total_time == pytest.approx(ideal, rel=0.1)
+    predicted_bubble = 1.0 - M * sum(fdbd) / len(fdbd) / t.total_time
+    assert t.bubble_fraction() == pytest.approx(predicted_bubble, abs=0.05)
+
+
+def test_critical_path_is_a_dependency_chain():
+    plan = _plan(global_batch=8)
+    res = simulate(_rig(plan), wafer_scale(), plan)
+    t = res.trace
+    path = t.critical_path()
+    assert len(path) >= 2
+    ends = [r.end for r in t.filter(kinds=COMPUTE_KINDS).rows()]
+    assert path[-1].end == max(ends)                # ends at the last event
+    assert path[0].start == pytest.approx(0.0, abs=1e-12)
+    for a, b in zip(path, path[1:]):
+        assert a.end <= b.start + 1e-12             # chronological chain
+    # the chain's busy time cannot exceed the simulated horizon
+    assert sum(r.duration for r in path) <= t.total_time * (1 + 1e-9)
+
+
+def test_summary_is_json_safe():
+    import json
+    t = _collected_trace()
+    s = t.summary()
+    json.dumps(s)
+    assert s["events"] == len(t)
+    assert 0.0 <= s["bubble_fraction"] <= 1.0
+    assert s["critical_path"]["length"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# resource lanes & deterministic occupancy reports
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", [NoCMode.MACRO, NoCMode.DETAILED])
+def test_resource_occupancy_matches_link_utilization(mode):
+    plan = _plan(global_batch=4)
+    mapped = map_graph(_rig(plan), grayskull(), plan)
+    sim = PipelineSimulator(mapped, noc_mode=mode, collect_timeline=True)
+    res = sim.run()
+    occ = res.noc_occupancy
+    assert occ, "edge-DRAM hardware must exercise NoC links"
+    assert list(occ) == sorted(occ)                 # sorted link ids
+    report = sim.noc.occupancy_report()
+    assert list(report) == sorted(report)
+    # interval-derived occupancy equals the busy-time integral per link
+    for lid, frac in occ.items():
+        assert frac == pytest.approx(report[lid], rel=1e-9, abs=1e-12)
+        assert 0.0 <= frac <= 1.0
+    dram = res.dram_occupancy
+    assert dram and list(dram) == sorted(dram)
+    for frac in dram.values():
+        assert 0.0 <= frac <= 1.0
+
+
+def test_chrome_trace_export():
+    t = _collected_trace()
+    doc = chrome_trace(t, label="test")
+    assert doc["traceEvents"]
+    x = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    assert len(x) == len(t)
+    assert all(e["dur"] >= 0 for e in x)
+    pids = {e["pid"] for e in x}
+    assert 0 in pids and (1 in pids or 2 in pids)   # stage + resource lanes
+
+
+# ---------------------------------------------------------------------------
+# activation offload (memory-cap follow-on)
+# ---------------------------------------------------------------------------
+
+def test_activation_offload_accounting():
+    base = dict(pp=2, dp=1, tp=2, microbatch=1, global_batch=16,
+                schedule="gpipe", recompute="never")
+    resident = ParallelPlan(**base)
+    offload = ParallelPlan(activation_offload=True, **base)
+    hw = wafer_scale()
+    r0 = simulate(_rig(resident, layers=4, H=512), hw, resident)
+    r1 = simulate(_rig(offload, layers=4, H=512), hw, offload)
+    peak0 = max(m.total for m in r0.stage_memory)
+    peak1 = max(m.total for m in r1.stage_memory)
+    assert peak1 < peak0                            # footprint shrinks
+    assert max(m.offload_bytes for m in r1.stage_memory) > 0
+    assert all(m.offload_bytes == 0 for m in r0.stage_memory)
+    assert all(m.inflight_microbatches == 1 for m in r1.stage_memory)
+    assert r1.dram_bytes > r0.dram_bytes            # store + fetch traffic
+
+
+def test_offload_pruning_stays_exact():
+    """The pre-simulation memory estimate equals the simulated footprint
+    for offloaded plans, so memory-cap pruning decisions are exact."""
+    from repro.core.scheduler import plan_memory
+    plan = ParallelPlan(pp=2, dp=1, tp=2, microbatch=1, global_batch=16,
+                        schedule="gpipe", recompute="never",
+                        activation_offload=True)
+    hw = wafer_scale()
+    mapped = map_graph(_rig(plan, layers=4, H=512), hw, plan)
+    est, _ = plan_memory(mapped)
+    res = simulate(_rig(plan, layers=4, H=512), hw, plan)
+    assert [m.total for m in est] == [m.total for m in res.stage_memory]
+    assert [m.offload_bytes for m in est] == \
+        [m.offload_bytes for m in res.stage_memory]
+
+
+def test_offload_sweep_axis_and_parity():
+    exp = Experiment(
+        arch="yi-6b", hardware=tpu_v5e_pod(2, 2),
+        search=SearchSpace(max_plans=8, microbatch_sizes=(1,),
+                           layouts=(Layout.S_SHAPE,),
+                           activation_offload=(False, True)),
+        seq_len=128, global_batch=8)
+    serial = exp.sweep(workers=0)
+    pooled = exp.sweep(workers=2)
+    assert any(r.plan.activation_offload for r in serial.runs)
+    assert any(not r.plan.activation_offload for r in serial.runs)
+    assert [(r.plan, r.throughput) for r in serial.runs] == \
+           [(r.plan, r.throughput) for r in pooled.runs]
+
+
+def test_plan_serving_emits_same_trace_schema():
+    """Serving timelines (decode pipelines) carry the same columnar schema
+    as training ones, so the two are directly comparable."""
+    pytest.importorskip("jax")
+    from repro.serving import plan_serving
+    mesh_axes, report = plan_serving("yi-6b", hardware="tpu_v5e_2x2",
+                                     batch=4, context_len=256,
+                                     collect_timeline=True)
+    assert set(mesh_axes) == {"data", "model"}
+    best = report.best
+    assert best.trace is not None
+    assert len(best.trace.filter(kinds=(KIND_FD,))) > 0
+    assert len(best.trace.filter(kinds=(KIND_BD, KIND_GU))) == 0  # inference
+    # collect_timeline=True is honored through the sweep engine: resource
+    # busy lanes ride along (local-HBM hardware always touches DRAM)
+    assert len(best.trace.filter(kinds=(KIND_DRAM,))) > 0
+    doc = chrome_trace(best.trace, label="serve")
+    assert any(e.get("cat") == "FD" for e in doc["traceEvents"])
+
+
+def test_sweep_resource_lanes_opt_in():
+    """Default timeline sweeps ship compute lanes only (lean payloads);
+    Experiment(collect_timeline=True) opts the sweep into resource lanes,
+    identically in serial and pooled execution."""
+    kw = dict(
+        arch="yi-6b", hardware=tpu_v5e_pod(2, 2),
+        search=SearchSpace(max_plans=2, microbatch_sizes=(1,),
+                           layouts=(Layout.S_SHAPE,)),
+        seq_len=128, global_batch=8)
+    lean = Experiment(**kw).sweep(workers=0, return_timelines=True)
+    assert all(len(r.trace.filter(kinds=(KIND_NOC, KIND_DRAM))) == 0
+               for r in lean.runs)
+    assert all(r.sim.noc_occupancy == {} for r in lean.runs)  # digest dropped
+    rich_exp = Experiment(collect_timeline=True, **kw)
+    rich = rich_exp.sweep(workers=0)
+    pooled = rich_exp.sweep(workers=2)
+    assert all(len(r.trace.filter(kinds=(KIND_DRAM,))) > 0 for r in rich.runs)
+    for a, b in zip(rich.runs, pooled.runs):
+        assert a.trace == b.trace
+
+
+def test_single_run_keeps_scalar_occupancy_digest():
+    """simulate() without collect_timeline still reports link occupancy
+    (legacy behaviour), via the scalar fallback digest."""
+    plan = _plan()
+    res = simulate(_rig(plan), grayskull(), plan)
+    occ = res.noc_occupancy
+    assert occ and list(occ) == sorted(occ)
+    assert all(0.0 <= v <= 1.0 for v in occ.values())
+    assert len(res.trace.filter(kinds=(KIND_NOC,))) == 0   # no lanes recorded
+
+
+# ---------------------------------------------------------------------------
+# RunReport integration
+# ---------------------------------------------------------------------------
+
+def test_run_report_trace_embedding():
+    from repro.api import RunReport
+    exp = Experiment(
+        arch="yi-6b", hardware=tpu_v5e_pod(2, 2),
+        plan=ParallelPlan(pp=2, dp=2, tp=1, global_batch=8),
+        seq_len=128, global_batch=8, collect_timeline=True)
+    rep = exp.run()
+    assert rep.trace is not None and rep.trace is rep.sim.trace
+    assert rep.trace_summary()["events"] == len(rep.trace)
+    # default JSON stays scalar; include_trace embeds the columns
+    assert "trace" not in rep.to_dict()
+    d = rep.to_dict(include_trace=True)
+    assert d["trace"]["stage"]
+    back = RunReport.from_dict(d)
+    assert back.trace == rep.trace
+    assert back == rep                              # trace excluded from eq
