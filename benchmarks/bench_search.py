@@ -1,0 +1,142 @@
+"""Guided co-design search gate (ISSUE 5 acceptance): on a rigged large
+hardware x plan space, multi-fidelity guided search must land within 2%
+of the exhaustive-optimum throughput while spending at most a fifth of
+the exhaustive full-fidelity simulations; ``--search exhaustive`` must be
+bit-identical to the legacy sweep path; and fixed-seed guided runs must
+be bit-reproducible across executors (serial == process pool).
+
+Standalone (CI bench-smoke):
+
+    PYTHONPATH=src python benchmarks/bench_search.py --tiny \
+        --json artifacts/bench_search.json
+"""
+
+from __future__ import annotations
+
+# allow `python benchmarks/bench_search.py` (CI bench-smoke) in addition
+# to `python -m benchmarks.run --only search`
+if __package__ in (None, ""):
+    import sys
+    from pathlib import Path
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+    __package__ = "benchmarks"
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+from repro.api import Experiment, HardwareSearchSpace, SearchSpace
+
+from .common import Report, write_bench_json
+
+# the full-fidelity savings factor the gate demands (<= 1/5 of the sims)
+_SAVINGS = 5
+# allowed quality loss vs the exhaustive optimum
+_QUALITY = 0.98
+
+
+def _rigged_exp(tiny: bool = False) -> Experiment:
+    """A co-design space with a planted optimum: one corner of the
+    hardware grid (max tile flops + max DRAM bandwidth) dominates, which
+    is what a guided search must find without visiting everything."""
+    if tiny:
+        hw = HardwareSearchSpace(tile_flops=(100e12, 197e12),
+                                 dram_bandwidth=(400e9, 819e9))
+        space = SearchSpace(max_plans=4, microbatch_sizes=(1,))
+    else:
+        hw = HardwareSearchSpace(tile_flops=(50e12, 100e12, 197e12),
+                                 intra_bw=(25e9, 50e9),
+                                 dram_bandwidth=(400e9, 819e9),
+                                 max_specs=64)
+        space = SearchSpace(max_plans=8, microbatch_sizes=(1, 2))
+    return Experiment(
+        arch="yi-6b",
+        hardware="tpu_v5e_2x2",
+        search=space,
+        hardware_search=hw,
+        global_batch=8 if tiny else 16,
+        seq_len=128 if tiny else 256,
+    )
+
+
+def run(report: Report, tiny: bool = False) -> None:
+    exp = _rigged_exp(tiny=tiny)
+
+    t0 = time.perf_counter()
+    exhaustive = exp.sweep(workers=0)
+    t_exhaustive = time.perf_counter() - t0
+    best_thpt = exhaustive.best.throughput
+    report.log(f"exhaustive: {exhaustive.num_candidates} candidates "
+               f"({exhaustive.num_hardware} hardware variants) in "
+               f"{t_exhaustive:.2f}s; optimum {exhaustive.best.hardware} "
+               f"@ {best_thpt:.3f} samples/s")
+
+    # gate 1: --search exhaustive IS today's path, bit for bit
+    via_strategy = exp.sweep(workers=0, strategy="exhaustive")
+    identical = via_strategy.to_json() == exhaustive.to_json()
+    report.add("search_exhaustive_parity", 0.0,
+               "ok" if identical else "MISMATCH")
+
+    budget = max(1, exhaustive.num_candidates // _SAVINGS)
+    for strategy in ("sh", "evolve", "random"):
+        t0 = time.perf_counter()
+        guided = exp.sweep(workers=0, strategy=strategy,
+                           search_budget=budget, seed=0)
+        t_guided = time.perf_counter() - t0
+        s = guided.search
+        best = guided.best
+        quality = best.throughput / best_thpt if best else 0.0
+        frac = s.full_fidelity_sims / exhaustive.num_candidates
+        found = (f"best {best.hardware} @ {best.throughput:.3f}" if best
+                 else "NO feasible run")
+        report.log(f"{strategy}: {found} ({quality:.1%} of optimum) "
+                   f"with {s.full_fidelity_sims} full-fidelity sims "
+                   f"({frac:.1%} of space; by fidelity {s.sims_per_fidelity}) "
+                   f"in {t_guided:.2f}s")
+        report.add(f"search_{strategy}_wallclock", t_guided * 1e6,
+                   f"{s.full_fidelity_sims}_full_sims")
+        # gate 2 (sh — the headline multi-fidelity strategy): within 2%
+        # of the optimum at <= 1/5 of the full-fidelity simulations
+        if strategy == "sh":
+            ok = quality >= _QUALITY and frac <= 1.0 / _SAVINGS
+            report.add("search_quality_gate", quality,
+                       "ok" if ok else "MISMATCH")
+        # gate 3: fixed seed is bit-reproducible, serial == pool
+        pooled = exp.sweep(workers=2, strategy=strategy,
+                           search_budget=budget, seed=0)
+        ds, dp = guided.to_dict(), pooled.to_dict()
+        ds.pop("executor"), dp.pop("executor")
+        report.add(f"search_{strategy}_repro", 0.0,
+                   "ok" if ds == dp else "MISMATCH")
+
+    speedup = t_exhaustive / t_guided if t_guided > 0 else float("inf")
+    report.add("search_exhaustive_wallclock", t_exhaustive * 1e6,
+               f"{exhaustive.num_candidates}_candidates")
+    report.log(f"exhaustive {t_exhaustive:.2f}s vs guided (last) "
+               f"{t_guided:.2f}s ({speedup:.2f}x)")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="seconds-scale config for CI bench-smoke runs")
+    ap.add_argument("--json", type=Path, default=None, metavar="FILE",
+                    help="write the {rows, lines} JSON report here")
+    args = ap.parse_args(argv)
+
+    report = Report()
+    t0 = time.time()
+    run(report, tiny=args.tiny)
+    elapsed = time.time() - t0
+    report.log(f"[search: {elapsed:.1f}s]")
+
+    if args.json is not None:
+        write_bench_json(report, "search", args.tiny, elapsed, args.json)
+
+    # gate rows double as a smoke gate for CI
+    return 1 if any(row.endswith("MISMATCH") for row in report.rows) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

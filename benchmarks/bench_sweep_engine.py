@@ -23,7 +23,6 @@ if __package__ in (None, ""):
 
 import argparse
 import dataclasses
-import json
 import os
 import pickle
 import sys
@@ -32,7 +31,7 @@ from pathlib import Path
 
 from repro.api import Experiment, HardwareSearchSpace, SearchSpace
 
-from .common import Report
+from .common import Report, write_bench_json
 
 
 def _sweep_exp(memory_cap=None, tiny=False) -> Experiment:
@@ -231,18 +230,7 @@ def main(argv=None) -> int:
     report.log(f"[sweep_engine: {elapsed:.1f}s]")
 
     if args.json is not None:
-        doc = {
-            "suite": "sweep_engine",
-            "tiny": args.tiny,
-            "elapsed_s": elapsed,
-            "rows": [dict(zip(("name", "us_per_call", "derived"),
-                              row.split(",", 2)))
-                     for row in report.rows],
-            "lines": report.lines,
-        }
-        args.json.parent.mkdir(parents=True, exist_ok=True)
-        args.json.write_text(json.dumps(doc, indent=2) + "\n")
-        print(f"[bench report written to {args.json}]")
+        write_bench_json(report, "sweep_engine", args.tiny, elapsed, args.json)
 
     # parity rows double as a smoke gate for CI
     return 1 if any(row.endswith("MISMATCH") for row in report.rows) else 0

@@ -2,6 +2,7 @@
 
 from __future__ import annotations
 
+import json
 import time
 from typing import Callable, Dict, List
 
@@ -29,6 +30,25 @@ class Report:
 
     def csv(self) -> str:
         return "\n".join(self.rows)
+
+
+def write_bench_json(report: Report, suite: str, tiny: bool,
+                     elapsed_s: float, path) -> None:
+    """Write the standard bench artifact document (the shape CI uploads
+    and ``benchmarks/dashboard.py`` consumes). The single place that
+    unpacks Report's ``name,us_per_call,derived`` row contract."""
+    doc = {
+        "suite": suite,
+        "tiny": tiny,
+        "elapsed_s": elapsed_s,
+        "rows": [dict(zip(("name", "us_per_call", "derived"),
+                          row.split(",", 2)))
+                 for row in report.rows],
+        "lines": report.lines,
+    }
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(doc, indent=2) + "\n")
+    print(f"[bench report written to {path}]")
 
 
 def pct_err(sim: float, ref: float) -> float:

@@ -1,0 +1,189 @@
+"""Perf-tracking dashboard: fold bench JSON artifacts into one trend table.
+
+Every benchmark entry point (``bench_sweep_engine.py --json``,
+``bench_search.py --json``, CI's uploaded ``bench-*`` artifacts, local
+``BENCH_*.json`` dumps) writes the same document shape::
+
+    {"suite": ..., "tiny": ..., "elapsed_s": ...,
+     "rows": [{"name": ..., "us_per_call": ..., "derived": ...}, ...],
+     "lines": [...]}
+
+This tool collects any number of those files (newest column last, by
+file mtime), pivots them into one (suite, metric) x run table, and emits
+markdown — and optionally a self-contained HTML page — so perf trends
+across PRs/CI runs are one glance instead of N JSON diffs. Rows whose
+latest value regressed by more than ``--regression-pct`` against the
+previous run are flagged.
+
+    python benchmarks/dashboard.py artifacts/*.json --out dashboard.md
+    python benchmarks/dashboard.py artifacts/*.json --html dashboard.html
+"""
+
+from __future__ import annotations
+
+import argparse
+import html
+import json
+import sys
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+# (suite, metric) -> {column label -> (us_per_call, derived)}
+Table = Dict[Tuple[str, str], Dict[str, Tuple[float, str]]]
+
+
+def load_artifacts(paths: List[Path]) -> Tuple[Table, List[str]]:
+    """Parse artifact files into the pivot table; returns (table, column
+    labels in mtime order). Files without a ``rows`` block are skipped
+    with a warning (they are not bench artifacts)."""
+    table: Table = {}
+    labeled: List[Tuple[float, str, Path]] = []
+    seen: Dict[str, int] = {}
+    for path in paths:
+        label = path.stem
+        if label in seen:               # same stem from different dirs
+            seen[label] += 1
+            label = f"{label}#{seen[label]}"
+        else:
+            seen[label] = 1
+        labeled.append((path.stat().st_mtime, label, path))
+    # mtime order, label as the tie-break (restored CI caches can flatten
+    # mtimes; history files embed the run number in the name)
+    labeled.sort(key=lambda t: (t[0], t[1]))
+    columns: List[str] = []
+    for _, label, path in labeled:
+        try:
+            doc = json.loads(path.read_text())
+        except (ValueError, OSError) as e:
+            print(f"[dashboard] skipping {path}: {e}", file=sys.stderr)
+            continue
+        rows = doc.get("rows")
+        if not isinstance(rows, list):
+            print(f"[dashboard] skipping {path}: no bench rows",
+                  file=sys.stderr)
+            continue
+        suite = str(doc.get("suite", path.stem))
+        columns.append(label)
+        for row in rows:
+            try:
+                us = float(row["us_per_call"])
+            except (KeyError, TypeError, ValueError):
+                continue
+            key = (suite, str(row.get("name", "?")))
+            table.setdefault(key, {})[label] = (us, str(row.get("derived", "")))
+        if "elapsed_s" in doc:
+            table.setdefault((suite, "suite_elapsed"), {})[label] = (
+                float(doc["elapsed_s"]) * 1e6, "tiny" if doc.get("tiny") else "full")
+    return table, columns
+
+
+def _fmt_us(us: float) -> str:
+    if us >= 1e6:
+        return f"{us / 1e6:.2f}s"
+    if us >= 1e3:
+        return f"{us / 1e3:.1f}ms"
+    return f"{us:.1f}us"
+
+
+def _trend(vals: List[Optional[float]], regression_pct: float) -> str:
+    """Latest-vs-previous movement tag for a metric row.
+
+    The REGRESSED flag assumes higher-is-worse and only fires on rows in
+    real latency magnitudes (>= 1 ms): benches also store status rows
+    (0.0 = ok) and ratio/quality gates (~1.0, higher is *better*) in the
+    same column, and those must not be direction-flagged."""
+    present = [v for v in vals if v is not None]
+    if len(present) < 2 or present[-2] <= 0:
+        return ""
+    change = (present[-1] - present[-2]) / present[-2] * 100.0
+    tag = f"{change:+.1f}%"
+    if change > regression_pct and present[-1] >= 1e3:
+        tag += " REGRESSED"
+    return tag
+
+
+def render_markdown(table: Table, columns: List[str],
+                    regression_pct: float = 25.0) -> str:
+    lines = ["# PALM bench trends", "",
+             f"{len(columns)} runs, {len(table)} metrics "
+             "(values are per-call latency; `derived` of the newest run "
+             "in parentheses).", ""]
+    header = ["suite", "metric", *columns, "trend"]
+    lines.append("| " + " | ".join(header) + " |")
+    lines.append("|" + "|".join("---" for _ in header) + "|")
+    for (suite, metric) in sorted(table):
+        cells = table[(suite, metric)]
+        vals = [cells.get(c, (None, ""))[0] for c in columns]
+        rendered = [(_fmt_us(v) if v is not None else "-") for v in vals]
+        newest = next((cells[c] for c in reversed(columns) if c in cells),
+                      None)
+        if newest is not None and newest[1]:
+            for i in range(len(rendered) - 1, -1, -1):
+                if vals[i] is not None:
+                    rendered[i] += f" ({newest[1]})"
+                    break
+        lines.append("| " + " | ".join(
+            [suite, metric, *rendered,
+             _trend(vals, regression_pct)]) + " |")
+    return "\n".join(lines) + "\n"
+
+
+def render_html(markdown: str) -> str:
+    """Minimal self-contained HTML wrapper around the markdown table
+    (no external deps; the table is re-rendered as a real <table>)."""
+    rows = [l for l in markdown.splitlines() if l.startswith("|")]
+    body = []
+    for i, line in enumerate(rows):
+        cells = [c.strip() for c in line.strip("|").split("|")]
+        if i == 1:
+            continue                    # the |---| separator
+        tag = "th" if i == 0 else "td"
+        tds = "".join(
+            f"<{tag} class='r'>{html.escape(c)}</{tag}>"
+            if "REGRESSED" in c else f"<{tag}>{html.escape(c)}</{tag}>"
+            for c in cells)
+        body.append(f"<tr>{tds}</tr>")
+    return ("<!doctype html><meta charset='utf-8'>"
+            "<title>PALM bench trends</title>"
+            "<style>body{font-family:sans-serif}table{border-collapse:"
+            "collapse}td,th{border:1px solid #999;padding:4px 8px;"
+            "text-align:left}tr:nth-child(even){background:#f4f4f4}"
+            ".r{color:#b00}</style>"
+            "<h1>PALM bench trends</h1><table>"
+            + "".join(body) + "</table>")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("artifacts", type=Path, nargs="+",
+                    help="bench JSON files (BENCH_*.json / CI artifacts)")
+    ap.add_argument("--out", type=Path, default=None, metavar="FILE",
+                    help="write the markdown table here (default: stdout)")
+    ap.add_argument("--html", type=Path, default=None, metavar="FILE",
+                    help="also write a self-contained HTML page here")
+    ap.add_argument("--regression-pct", type=float, default=25.0,
+                    help="flag metrics whose newest value regressed by "
+                         "more than this vs the previous run")
+    args = ap.parse_args(argv)
+
+    table, columns = load_artifacts(args.artifacts)
+    if not table:
+        print("error: no bench rows found in the given artifacts",
+              file=sys.stderr)
+        return 1
+    md = render_markdown(table, columns, regression_pct=args.regression_pct)
+    if args.out is None:
+        print(md, end="")
+    else:
+        args.out.parent.mkdir(parents=True, exist_ok=True)
+        args.out.write_text(md)
+        print(f"[dashboard written to {args.out}]")
+    if args.html is not None:
+        args.html.parent.mkdir(parents=True, exist_ok=True)
+        args.html.write_text(render_html(md))
+        print(f"[dashboard written to {args.html}]")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

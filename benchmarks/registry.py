@@ -31,6 +31,7 @@ SUITES: List[Suite] = [
     Suite("roofline", "roofline", "deliverable (g)"),
     Suite("crosscheck", "bench_crosscheck", "PALM vs XLA (beyond-paper)"),
     Suite("sweep_engine", "bench_sweep_engine", "§V-B sweep: serial vs pool"),
+    Suite("search", "bench_search", "§VI guided multi-fidelity co-design"),
 ]
 
 

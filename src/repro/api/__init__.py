@@ -26,7 +26,8 @@ from ..core.hardware import (
     TopologySpec,
 )
 from ..core.parallelism import ParallelPlan
-from ..core.trace import Trace, TraceRecorder, chrome_trace
+from ..core.trace import Trace, TraceDiff, TraceRecorder, chrome_trace
+from ..core.trace import diff as trace_diff
 from ..core.planner import (
     CodesignResult,
     PlannerCfg,
@@ -64,8 +65,10 @@ __all__ = [
     "SweepReport",
     "TopologySpec",
     "Trace",
+    "TraceDiff",
     "TraceRecorder",
     "chrome_trace",
+    "trace_diff",
     "plan_codesign",
     "plan_from_dict",
     "plan_parallelism",

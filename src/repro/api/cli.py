@@ -9,8 +9,11 @@
     python -m repro plan --arch dbrx-132b --hardware wafer_scale
     python -m repro plan --arch yi-6b --hardware wafer_scale \
         --hw-flops 8e12 16e12 --hw-mesh 5x4 4x4 --codesign-json best_hw.json
+    python -m repro plan --arch yi-6b --hardware wafer_scale \
+        --hw-flops 8e12 16e12 32e12 --search sh --search-budget 12 --seed 0
     python -m repro hardware --hardware wafer_scale > wafer.json
     python -m repro simulate --arch yi-6b --hardware-json wafer.json ...
+    python -m repro trace-diff base.npz variant.npz
 
 Every enum-valued flag takes the typed values (``--schedule 1f1b``,
 ``--noc-mode macro``); hardware is a preset name, an ``a100x<N>`` /
@@ -138,6 +141,19 @@ def _add_sweep_flags(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--workers", type=int, default=0,
                     help="0 = serial, N = process pool of N, -1 = all cores")
     ap.add_argument("--top", type=int, default=10)
+    ap.add_argument("--search", default="exhaustive",
+                    choices=["exhaustive", "random", "sh", "evolve"],
+                    help="guided search strategy (repro.search): exhaustive "
+                         "evaluates every candidate; random/sh/evolve spend "
+                         "at most --search-budget full-fidelity simulations "
+                         "(sh climbs cheap fidelity rungs first)")
+    ap.add_argument("--search-budget", type=int, default=None, metavar="N",
+                    help="max full-fidelity simulations for guided search "
+                         "(default: a fifth of the space)")
+    ap.add_argument("--seed", type=int, default=None,
+                    help="guided-search RNG seed (fixed seed = "
+                         "bit-reproducible run, serial or pooled; "
+                         "default 0)")
     hw = ap.add_argument_group(
         "hardware search (cross the plan sweep with hardware variants)")
     hw.add_argument("--hw-flops", type=float, nargs="+", default=[],
@@ -252,29 +268,47 @@ def _make_sweep_experiment(args) -> Experiment:
                       memory_cap=args.memory_cap)
 
 
+def _sweep_call_kwargs(args) -> dict:
+    kw = {"workers": None if args.workers < 0 else args.workers}
+    if args.search != "exhaustive":
+        kw.update(strategy=args.search, search_budget=args.search_budget,
+                  seed=args.seed or 0)
+    elif args.search_budget is not None or args.seed is not None:
+        # never let a "capped" sweep silently run the whole product
+        raise ValueError("--search-budget/--seed only apply to guided "
+                         "search; add --search {random,sh,evolve}")
+    return kw
+
+
+def _print_search_note(report) -> None:
+    if report.search is not None:
+        print(f"[search {report.search.summary()}]")
+
+
 def _cmd_sweep(args) -> int:
     exp = _make_sweep_experiment(args)
-    report = exp.sweep(workers=None if args.workers < 0 else args.workers)
+    report = exp.sweep(**_sweep_call_kwargs(args))
     hw_note = (f", {report.num_hardware} hardware variants"
                if report.num_hardware > 1 else "")
     print(f"== sweep: {report.arch} on {report.hardware} "
           f"({report.executor}; {report.num_candidates} candidates{hw_note}, "
           f"{report.num_pruned_memory} memory-pruned, "
           f"{report.num_failed} failed) ==")
+    _print_search_note(report)
     print(report.table(top=args.top))
     _emit(report, args.json)
     return 0 if report.runs else 1
 
 
 def _cmd_plan(args) -> int:
-    report = _make_sweep_experiment(args).sweep(
-        workers=None if args.workers < 0 else args.workers)
+    report = _make_sweep_experiment(args).sweep(**_sweep_call_kwargs(args))
     best = report.best
     if best is None:
         print("no feasible plan found", file=sys.stderr)
         return 1
     p = best.plan
     print(f"best plan for {report.arch} on {report.hardware}:")
+    _print_search_note(report)
     if report.num_hardware > 1:
         print(f"  hardware: {best.hardware}  (co-design over "
               f"{report.num_hardware} variants)")
@@ -298,6 +332,39 @@ def _cmd_plan(args) -> int:
             args.codesign_json.write_text(text + "\n")
             print(f"[co-design recommendation written to {args.codesign_json}]")
     _emit(best if args.best_only else report, args.json)
+    return 0
+
+
+def _load_trace(path: Path):
+    """Load a columnar trace: ``.npz`` (``simulate --trace-npz``) or a
+    JSON file holding ``Trace.to_dict()`` (or a RunReport dict embedding
+    one under ``"trace"``)."""
+    from ..core.trace import Trace
+    if path.suffix == ".npz":
+        try:
+            return Trace.from_npz(path)
+        except RuntimeError as e:       # numpy-free install
+            raise ValueError(str(e))
+    doc = json.loads(path.read_text())
+    if "traceEvents" in doc:
+        raise ValueError(
+            f"{path} is a Chrome traceEvents export; trace-diff needs the "
+            "columnar form (simulate --trace-npz, or a report with an "
+            "embedded trace dict)")
+    if "trace" in doc and isinstance(doc["trace"], dict):
+        doc = doc["trace"]
+    if "stage" not in doc:
+        raise ValueError(f"{path} does not contain a columnar trace dict")
+    return Trace.from_dict(doc)
+
+
+def _cmd_trace_diff(args) -> int:
+    """Diff two timelines (hardware / plan A/B studies)."""
+    from ..core.trace import diff
+    d = diff(_load_trace(args.a), _load_trace(args.b))
+    print(f"trace diff: {args.a} (A) vs {args.b} (B)")
+    print(d.table(top=args.top))
+    _emit(d, args.json)
     return 0
 
 
@@ -340,6 +407,18 @@ def main(argv: Optional[List[str]] = None) -> int:
                           "recommendation (winning hardware spec JSON + "
                           "plan) here ('-' for stdout)")
     pln.set_defaults(fn=_cmd_plan)
+
+    tdf = sub.add_parser(
+        "trace-diff",
+        help="diff two simulation timelines (per-stage/per-lane busy & "
+             "bubble deltas; A/B hardware studies)")
+    tdf.add_argument("a", type=Path, help="baseline trace (.npz or trace-dict JSON)")
+    tdf.add_argument("b", type=Path, help="comparison trace (.npz or trace-dict JSON)")
+    tdf.add_argument("--top", type=int, default=10,
+                     help="NoC/DRAM lanes shown, ranked by |occupancy delta|")
+    tdf.add_argument("--json", type=Path, default=None, metavar="FILE",
+                     help="write the full diff JSON here ('-' for stdout)")
+    tdf.set_defaults(fn=_cmd_trace_diff)
 
     hwc = sub.add_parser(
         "hardware",

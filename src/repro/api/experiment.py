@@ -479,7 +479,10 @@ class Experiment:
         return run_one(self, self.plan)
 
     def sweep(self, workers: int = 0,
-              return_timelines: bool = False) -> SweepReport:
+              return_timelines: bool = False,
+              strategy: Optional[str] = None,
+              search_budget: Optional[int] = None,
+              seed: Optional[int] = None) -> SweepReport:
         """Evaluate the search space; ``workers=0`` is serial, ``workers=N``
         uses an N-process pool, ``workers=None`` uses all cores. With a
         ``hardware_search``, the full (hardware variant x plan) product is
@@ -488,8 +491,24 @@ class Experiment:
         ``return_timelines=True`` ships each run's columnar event timeline
         back on ``RunReport.trace`` — and the full :class:`SimResult` on
         ``RunReport.sim`` — in compressed struct-of-arrays form (reports
-        stay scalar by default)."""
+        stay scalar by default).
+
+        ``strategy`` selects guided search (:mod:`repro.search`):
+        ``"random"`` / ``"sh"`` / ``"evolve"`` evaluate only a budgeted
+        subset of the space at full fidelity (``search_budget``, default
+        a fifth of the space) and nest a :class:`SearchReport` into the
+        result; ``None`` or ``"exhaustive"`` is the legacy exhaustive
+        path, unchanged."""
         return_timelines = return_timelines or self.collect_timeline
+        if strategy not in (None, "exhaustive"):
+            from ..search import run_search     # search builds on api
+            return run_search(self, strategy=strategy, budget=search_budget,
+                              seed=seed or 0, workers=workers,
+                              return_timelines=return_timelines)
+        if search_budget is not None or seed is not None:
+            # never let a "capped" sweep silently run the whole product
+            raise ValueError("search_budget/seed only apply to guided "
+                             "search; pass strategy='random'/'sh'/'evolve'")
         if self.hardware_search is not None:
             return self._sweep_hardware(workers, return_timelines)
         if self.search is None:
@@ -505,6 +524,25 @@ class Experiment:
         return SweepEngine(workers=workers,
                            return_timelines=return_timelines,
                            trace_resources=self.collect_timeline).sweep(self, plans)
+
+    def _hardware_label(self, num_hardware: int) -> str:
+        """Report hardware name: the base spec for single-machine sweeps,
+        a variant-count label for hardware x plan sweeps."""
+        base = self.hardware_spec
+        return (base.name if num_hardware == 1
+                else f"{base.name} (x{num_hardware} hardware variants)")
+
+    def _record_hardware_specs(self, report: SweepReport,
+                               specs: Sequence[HardwareSpec]) -> None:
+        """Store each kept variant's spec dict on the report so the
+        winning machine is recoverable from the report alone."""
+        for spec in specs:
+            try:
+                # normalize through JSON (tuples -> lists) so stored dicts
+                # compare equal across a report to_json/from_json round-trip
+                report.hardware_specs[spec.name] = json.loads(spec.to_json())
+            except ValueError:
+                pass        # custom topology without a declarative spec
 
     def _plans_for(self, spec: HardwareSpec) -> List[ParallelPlan]:
         """Plan list for one hardware variant (raises ValueError when the
@@ -543,17 +581,10 @@ class Experiment:
                              trace_resources=self.collect_timeline)
         report = engine.sweep_jobs(
             self, kept, jobs,
-            hardware_name=(base.name if len(specs) == 1
-                           else f"{base.name} (x{len(specs)} hardware variants)"),
+            hardware_name=self._hardware_label(len(specs)),
             num_hardware=len(specs),
             extra_failed=failed)
-        for spec in kept:
-            try:
-                # normalize through JSON (tuples -> lists) so stored dicts
-                # compare equal across a report to_json/from_json round-trip
-                report.hardware_specs[spec.name] = json.loads(spec.to_json())
-            except ValueError:
-                pass        # custom topology without a declarative spec
+        self._record_hardware_specs(report, kept)
         return report
 
     def with_(self, **kw) -> "Experiment":

@@ -25,7 +25,10 @@ from __future__ import annotations
 import dataclasses
 import json
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, TYPE_CHECKING
+
+if TYPE_CHECKING:                       # search builds on api; keep it lazy
+    from ..search.report import SearchReport
 
 from ..core.enums import Layout, Schedule
 from ..core.parallelism import ParallelPlan
@@ -161,6 +164,9 @@ class SweepReport:
     # variant name -> HardwareSpec dict for hardware x plan sweeps, so the
     # winning machine is recoverable from the report alone (co-design)
     hardware_specs: Dict[str, Dict[str, Any]] = field(default_factory=dict)
+    # guided-search accounting (repro.search): per-rung history, sims per
+    # fidelity, best-so-far curve. None for exhaustive sweeps.
+    search: Optional["SearchReport"] = None
 
     @property
     def best(self) -> Optional[RunReport]:
@@ -174,10 +180,14 @@ class SweepReport:
         return self.hardware_specs.get(self.best.hardware)
 
     def to_dict(self) -> Dict[str, Any]:
-        # leave runs out of the asdict recursion (their sims could be huge);
-        # each run serializes itself
-        d = dataclasses.asdict(dataclasses.replace(self, runs=[]))
+        # leave runs (their sims could be huge) and the typed search report
+        # out of the asdict recursion; both serialize themselves
+        d = dataclasses.asdict(dataclasses.replace(self, runs=[], search=None))
         d["runs"] = [r.to_dict() for r in self.runs]
+        if self.search is not None:
+            d["search"] = self.search.to_dict()
+        else:
+            d.pop("search", None)
         return d
 
     def to_json(self, **kw: Any) -> str:
@@ -187,6 +197,10 @@ class SweepReport:
     def from_dict(cls, d: Dict[str, Any]) -> "SweepReport":
         d = dict(d)
         d["runs"] = [RunReport.from_dict(r) for r in d.get("runs", [])]
+        search = d.pop("search", None)
+        if search is not None:
+            from ..search.report import SearchReport
+            d["search"] = SearchReport.from_dict(search)
         return cls(**d)
 
     @classmethod

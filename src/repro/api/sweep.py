@@ -34,15 +34,26 @@ sweeps produce identical SweepReports.
 
 from __future__ import annotations
 
+import dataclasses
 import os
 import pickle
 import warnings
 from concurrent.futures import ProcessPoolExecutor
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from ..core.enums import NoCMode
 from ..core.hardware import HardwareSpec
 from ..core.parallelism import ParallelPlan, map_graph
 from ..core.scheduler import PipelineSimulator, plan_memory
+from ..core.trace import (
+    KIND_BD,
+    KIND_CODES,
+    KIND_DRAM,
+    KIND_FD,
+    KIND_GU,
+    KIND_NAMES,
+    KIND_NOC,
+)
 from .report import RunReport, SweepReport
 
 __all__ = ["SweepEngine", "run_one"]
@@ -50,17 +61,88 @@ __all__ = ["SweepEngine", "run_one"]
 # outcome tags for one plan evaluation
 _OK, _PRUNED, _FAILED = "ok", "pruned", "failed"
 
-# a job is (hardware-variant index, plan); plain plan sweeps use index 0
+# a job is (hardware-variant index, plan) — or (variant, plan, fidelity)
+# where fidelity is a reduced-cost evaluation knob (see
+# :class:`repro.search.Fidelity`): anything with ``apply(plan)`` and a
+# ``noc_mode`` attribute. Plain plan sweeps use variant index 0.
 Job = Tuple[int, ParallelPlan]
+
+# lane-drop priority when a trace payload budget is exceeded: resource
+# lanes go first, FD/BD last (they carry the pipeline structure)
+_LANE_DROP_ORDER = (KIND_DRAM, KIND_NOC, KIND_GU, KIND_BD, KIND_FD)
+
+
+def _lane_codes(lanes) -> Optional[Tuple[int, ...]]:
+    """Normalize a lane filter (names or kind codes) to sorted codes."""
+    if lanes is None:
+        return None
+    out = set()
+    for lane in lanes:
+        if isinstance(lane, str):
+            if lane.upper() not in KIND_CODES:
+                raise ValueError(f"unknown trace lane {lane!r}; known: "
+                                 f"{', '.join(KIND_NAMES)}")
+            out.add(KIND_CODES[lane.upper()])
+        else:
+            if not 0 <= int(lane) < len(KIND_NAMES):
+                raise ValueError(f"unknown trace lane code {lane!r}")
+            out.add(int(lane))
+    return tuple(sorted(out))
+
+
+def _apply_trace_policy(report: RunReport,
+                        lanes: Optional[Tuple[int, ...]],
+                        budget: Optional[int]) -> RunReport:
+    """Lane-filter (and budget-bound) the trace a run ships back through
+    the pool. Scalar digests were extracted before this runs, so reports
+    keep exact bubble/occupancy numbers whatever lanes survive."""
+    trace = report.trace
+    if trace is None or (lanes is None and budget is None):
+        return report
+    present = {int(k) for k in trace.kind}
+    keep = set(lanes) if lanes is not None else set(range(len(KIND_NAMES)))
+    filtered = trace
+    if lanes is not None and not present <= keep:
+        filtered = trace.filter(kinds=sorted(keep))
+    dropped: List[str] = []
+    if budget is not None:
+        for kind in _LANE_DROP_ORDER:
+            if filtered.nbytes <= budget:
+                break
+            if kind in keep and kind in present:
+                keep.discard(kind)
+                dropped.append(KIND_NAMES[kind])
+                filtered = filtered.filter(kinds=sorted(keep))
+    if filtered is trace:
+        return report
+    report.trace = filtered
+    if report.sim is not None:
+        report.sim = dataclasses.replace(report.sim, trace=filtered)
+    if dropped:
+        report.extra["trace_lanes_dropped"] = dropped
+    return report
 
 
 def _evaluate(exp, plan: ParallelPlan, graph_cache: Dict,
               hw: HardwareSpec,
               return_timelines: bool = False,
-              trace_resources: bool = False) -> Tuple[str, object]:
+              trace_resources: bool = False,
+              fidelity=None,
+              trace_lanes: Optional[Tuple[int, ...]] = None,
+              trace_budget_bytes: Optional[int] = None) -> Tuple[str, object]:
     """Evaluate one (hardware, plan) job: build (memoized) graph, map,
-    prune on memory, simulate. Returns (tag, RunReport | reason)."""
+    prune on memory, simulate. Returns (tag, RunReport | reason).
+
+    ``fidelity`` optionally cheapens the simulation (coarser NoC model
+    and/or fewer microbatches) for multi-fidelity search rungs; the graph
+    memo is unaffected because the per-iteration batch
+    (``microbatch * dp``) does not change."""
     try:
+        noc_mode = exp.noc_mode
+        if fidelity is not None:
+            plan = fidelity.apply(plan)
+            if fidelity.noc_mode is not None:
+                noc_mode = NoCMode(fidelity.noc_mode)
         if exp.graph_builder is None:
             # arch_to_graph depends only on (arch, seq_len, batch, mode) —
             # never on the hardware — so the memo is shared across variants
@@ -80,7 +162,7 @@ def _evaluate(exp, plan: ParallelPlan, graph_cache: Dict,
         # compute lanes are always recorded; resource busy lanes stay off
         # unless the experiment asked for them (collect_timeline=True) so
         # default timeline sweeps keep pool payloads lean
-        sim = PipelineSimulator(mapped, noc_mode=exp.noc_mode,
+        sim = PipelineSimulator(mapped, noc_mode=noc_mode,
                                 boundary_mode=exp.boundary_mode,
                                 memory_plan=mem_plan,
                                 collect_timeline=trace_resources)
@@ -90,8 +172,11 @@ def _evaluate(exp, plan: ParallelPlan, graph_cache: Dict,
         result.noc_occupancy_fallback.clear()
     except (ValueError, KeyError, TypeError) as e:
         return (_FAILED, f"{type(e).__name__}: {e}")
-    return (_OK, RunReport.from_sim(exp.arch_name, hw.name, plan, result,
-                                    keep_sim=return_timelines))
+    report = RunReport.from_sim(exp.arch_name, hw.name, plan, result,
+                                keep_sim=return_timelines)
+    if return_timelines:
+        report = _apply_trace_policy(report, trace_lanes, trace_budget_bytes)
+    return (_OK, report)
 
 
 def run_one(exp, plan: ParallelPlan) -> RunReport:
@@ -114,20 +199,27 @@ _WORKER: Dict = {}
 
 
 def _init_worker(exp_bytes: bytes, specs_bytes: bytes,
-                 return_timelines: bool, trace_resources: bool) -> None:
+                 return_timelines: bool, trace_resources: bool,
+                 trace_lanes: Optional[Tuple[int, ...]] = None,
+                 trace_budget_bytes: Optional[int] = None) -> None:
     _WORKER["exp"] = pickle.loads(exp_bytes)
     _WORKER["specs"] = pickle.loads(specs_bytes)
     _WORKER["graphs"] = {}
     _WORKER["return_timelines"] = return_timelines
     _WORKER["trace_resources"] = trace_resources
+    _WORKER["trace_lanes"] = trace_lanes
+    _WORKER["trace_budget_bytes"] = trace_budget_bytes
 
 
-def _eval_in_worker(job: Job) -> Tuple[str, object]:
-    variant, plan = job
+def _eval_in_worker(job) -> Tuple[str, object]:
+    variant, plan, fidelity = job if len(job) == 3 else (*job, None)
     return _evaluate(_WORKER["exp"], plan, _WORKER["graphs"],
                      hw=_WORKER["specs"][variant],
                      return_timelines=_WORKER["return_timelines"],
-                     trace_resources=_WORKER["trace_resources"])
+                     trace_resources=_WORKER["trace_resources"],
+                     fidelity=fidelity,
+                     trace_lanes=_WORKER["trace_lanes"],
+                     trace_budget_bytes=_WORKER["trace_budget_bytes"])
 
 
 class SweepEngine:
@@ -142,14 +234,66 @@ class SweepEngine:
     ``trace_resources=True`` (``Experiment.collect_timeline``) further
     records NoC-link / DRAM-channel busy intervals into those traces —
     richer, but a bigger pool payload.
+
+    ``trace_lanes`` restricts the lanes shipped back (names like
+    ``("FD", "BD", "NOC")`` or kind codes), and ``trace_budget_bytes``
+    bounds the worst-case per-run columnar payload: lanes are dropped
+    in the fixed priority DRAM, NOC, GU, BD, FD until the trace fits
+    (dropped lanes are recorded in ``RunReport.extra``). Report scalars
+    (bubble ratio, occupancies) are computed *before* filtering, so they
+    are exact regardless of what ships.
+
+    Used as a context manager the engine keeps one process pool alive
+    across ``sweep``/``sweep_jobs``/``evaluate_jobs`` calls (workers stay
+    warm across search generations); otherwise each call owns its pool.
     """
 
     def __init__(self, workers: Optional[int] = 0,
                  return_timelines: bool = False,
-                 trace_resources: bool = False):
+                 trace_resources: bool = False,
+                 trace_lanes: Optional[Sequence] = None,
+                 trace_budget_bytes: Optional[int] = None):
         self.workers = os.cpu_count() if workers is None else workers
         self.return_timelines = return_timelines
         self.trace_resources = trace_resources
+        self.trace_lanes = _lane_codes(trace_lanes)
+        self.trace_budget_bytes = trace_budget_bytes
+        self._persist = False
+        self._pool: Optional[ProcessPoolExecutor] = None
+        self._pool_key: Optional[Tuple[bytes, bytes]] = None
+        # serial-path graph memo kept warm across calls in persistent mode
+        self._memo_exp = None
+        self._memo_graphs: Dict = {}
+
+    # -- persistent-pool lifecycle ------------------------------------------
+    def __enter__(self) -> "SweepEngine":
+        self._persist = True
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def close(self) -> None:
+        """Shut the persistent pool down (no-op outside a with-block)."""
+        self._shutdown_pool()
+        self._persist = False
+        self._memo_exp = None
+        self._memo_graphs = {}
+
+    def _serial_memo(self, exp) -> Dict:
+        """Graph memo for the serial path: per-call normally, kept warm
+        across calls (per experiment) in persistent mode."""
+        if not self._persist:
+            return {}
+        if self._memo_exp is not exp:
+            self._memo_exp, self._memo_graphs = exp, {}
+        return self._memo_graphs
+
+    def _shutdown_pool(self) -> None:
+        if self._pool is not None:
+            self._pool.shutdown()
+            self._pool = None
+            self._pool_key = None
 
     def sweep(self, exp, plans: Sequence[ParallelPlan]) -> SweepReport:
         """Plan sweep on the experiment's single hardware spec."""
@@ -166,7 +310,7 @@ class SweepEngine:
         merged ranked report. ``extra_failed`` accounts for variants that
         failed before any job was enumerated (e.g. too few devices)."""
         specs, jobs = list(specs), list(jobs)
-        outcomes, executor = self._evaluate_all(exp, specs, jobs)
+        outcomes, executor = self.evaluate_jobs(exp, specs, jobs)
 
         runs: List[RunReport] = []
         pruned = failed = 0
@@ -189,9 +333,16 @@ class SweepEngine:
             num_hardware=num_hardware,
         )
 
-    def _evaluate_all(self, exp, specs: Sequence[HardwareSpec],
-                      jobs: Sequence[Job]):
-        if self.workers >= 2 and len(jobs) > 1:
+    def evaluate_jobs(self, exp, specs: Sequence[HardwareSpec],
+                      jobs: Sequence[Job]) -> Tuple[List[Tuple[str, object]], str]:
+        """Raw evaluation of a job stream: ``(tag, payload)`` outcomes in
+        job order plus the executor label. Jobs may carry a per-job
+        fidelity as a third element (multi-fidelity search rungs)."""
+        jobs = list(jobs)
+        # a 1-job batch is cheaper in-process — unless a persistent pool
+        # exists (or will): search generations can shrink to one candidate
+        # and must keep hitting the warm workers
+        if self.workers >= 2 and (len(jobs) > 1 or self._persist):
             try:
                 exp_bytes = pickle.dumps(exp)
                 specs_bytes = pickle.dumps(list(specs))
@@ -200,16 +351,33 @@ class SweepEngine:
                     f"experiment not picklable ({e}); sweeping serially",
                     RuntimeWarning, stacklevel=3)
             else:
+                initargs = (exp_bytes, specs_bytes, self.return_timelines,
+                            self.trace_resources, self.trace_lanes,
+                            self.trace_budget_bytes)
+                if self._persist:
+                    key = (exp_bytes, specs_bytes)
+                    if self._pool is None or self._pool_key != key:
+                        self._shutdown_pool()
+                        self._pool = ProcessPoolExecutor(
+                            max_workers=self.workers,
+                            initializer=_init_worker, initargs=initargs)
+                        self._pool_key = key
+                    return (list(self._pool.map(_eval_in_worker, jobs)),
+                            f"process[{self.workers}]")
                 n = min(self.workers, len(jobs))
                 with ProcessPoolExecutor(
                         max_workers=n,
                         initializer=_init_worker,
-                        initargs=(exp_bytes, specs_bytes,
-                                  self.return_timelines,
-                                  self.trace_resources)) as pool:
+                        initargs=initargs) as pool:
                     return list(pool.map(_eval_in_worker, jobs)), f"process[{n}]"
-        graphs: Dict = {}
-        return [_evaluate(exp, plan, graphs, hw=specs[variant],
-                          return_timelines=self.return_timelines,
-                          trace_resources=self.trace_resources)
-                for variant, plan in jobs], "serial"
+        graphs = self._serial_memo(exp)
+        out = []
+        for job in jobs:
+            variant, plan, fidelity = job if len(job) == 3 else (*job, None)
+            out.append(_evaluate(exp, plan, graphs, hw=specs[variant],
+                                 return_timelines=self.return_timelines,
+                                 trace_resources=self.trace_resources,
+                                 fidelity=fidelity,
+                                 trace_lanes=self.trace_lanes,
+                                 trace_budget_bytes=self.trace_budget_bytes))
+        return out, "serial"

@@ -50,10 +50,12 @@ from .trace import (
     KIND_NOC,
     RESOURCE_KINDS,
     Trace,
+    TraceDiff,
     TraceRecorder,
     TraceRow,
     chrome_trace,
 )
+from .trace import diff as trace_diff
 from .noc import NoCModel, collective_steps, ring_time
 from .dram import DRAMModel
 from .parallelism import (

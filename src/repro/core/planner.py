@@ -55,6 +55,14 @@ class PlannerCfg:
     # merged ranking scores joint (hardware, plan) candidates through one
     # shared-pool sweep
     hardware_search: Optional["HardwareSearchSpace"] = None
+    # guided search (repro.search): "exhaustive" evaluates the full
+    # product (legacy path); "random" / "sh" / "evolve" spend at most
+    # `search_budget` full-fidelity simulations (default: a fifth of the
+    # space) steered by cheap reduced-fidelity rungs, seeded for
+    # bit-reproducible runs
+    search_strategy: str = "exhaustive"
+    search_budget: Optional[int] = None
+    search_seed: Optional[int] = None      # guided strategies only; 0 default
 
 
 @dataclass
@@ -122,10 +130,24 @@ def _make_experiment(arch: ArchConfig, hardware: Optional[HardwareSpec],
     )
 
 
+def _sweep_kwargs(cfg: PlannerCfg, strategy: Optional[str]) -> Dict[str, Any]:
+    strategy = strategy or cfg.search_strategy
+    kw: Dict[str, Any] = {"workers": cfg.workers}
+    if strategy not in (None, "exhaustive"):
+        kw.update(strategy=strategy, search_budget=cfg.search_budget,
+                  seed=cfg.search_seed or 0)
+    elif cfg.search_budget is not None or cfg.search_seed is not None:
+        raise ValueError("PlannerCfg.search_budget/search_seed only apply "
+                         "to guided search; set search_strategy to "
+                         "'random'/'sh'/'evolve'")
+    return kw
+
+
 def plan_parallelism(
     arch: ArchConfig,
     hardware: Optional[HardwareSpec] = None,
     cfg: PlannerCfg = PlannerCfg(),
+    strategy: Optional[str] = None,
 ):
     """Sweep (pp, dp, tp, microbatch, layout, schedule) and rank by
     simulated throughput. Returns sorted RunReports (best first).
@@ -135,14 +157,19 @@ def plan_parallelism(
     pool) and the ranking covers (hardware, plan) pairs — each report's
     ``.hardware`` names the variant. Use :func:`plan_codesign` to get the
     winning variant back as a full :class:`HardwareSpec`.
+
+    ``strategy`` (or ``cfg.search_strategy``) other than ``"exhaustive"``
+    runs a guided budgeted search instead of the full product.
     """
-    return _make_experiment(arch, hardware, cfg).sweep(workers=cfg.workers).runs
+    exp = _make_experiment(arch, hardware, cfg)
+    return exp.sweep(**_sweep_kwargs(cfg, strategy)).runs
 
 
 def plan_codesign(
     arch: ArchConfig,
     hardware: Optional[HardwareSpec] = None,
     cfg: PlannerCfg = PlannerCfg(),
+    strategy: Optional[str] = None,
 ) -> CodesignResult:
     """Joint hardware/parallelism co-design (§VI): rank the flattened
     (hardware variant x plan) product and return the best pair as a
@@ -150,12 +177,16 @@ def plan_codesign(
 
     ``cfg.hardware_search`` must be set — with no hardware axes there is
     nothing to co-design and :func:`plan_parallelism` is the right call.
+    ``strategy`` (or ``cfg.search_strategy``) other than ``"exhaustive"``
+    runs the §VI loop as a guided budgeted search (see
+    :mod:`repro.search`); the ranked report then carries a nested
+    :class:`~repro.search.SearchReport`.
     """
     if cfg.hardware_search is None:
         raise ValueError("plan_codesign needs cfg.hardware_search (use "
                          "plan_parallelism for a parallelism-only sweep)")
     exp = _make_experiment(arch, hardware, cfg)
-    report = exp.sweep(workers=cfg.workers)
+    report = exp.sweep(**_sweep_kwargs(cfg, strategy))
     best = report.best
     if best is None:
         raise RuntimeError(

@@ -46,7 +46,8 @@ except ImportError:         # pragma: no cover - exercised by CI bench-smoke
 __all__ = [
     "KIND_FD", "KIND_BD", "KIND_GU", "KIND_NOC", "KIND_DRAM",
     "KIND_NAMES", "KIND_CODES", "COMPUTE_KINDS", "RESOURCE_KINDS",
-    "TraceRow", "Trace", "TraceRecorder", "chrome_trace",
+    "TraceRow", "Trace", "TraceRecorder", "TraceDiff", "chrome_trace",
+    "diff",
 ]
 
 # event-kind enum codes (paper Fig. 4/5 taxonomy + resource lanes)
@@ -656,3 +657,116 @@ def chrome_trace(trace: Trace, label: str = "palm") -> Dict[str, Any]:
                        "cat": KIND_NAMES[r.kind], "ts": r.start * 1e6,
                        "dur": (r.end - r.start) * 1e6, "args": args})
     return {"displayTimeUnit": "ms", "traceEvents": events}
+
+
+# ---------------------------------------------------------------------------
+# Trace diff (hardware / plan A/B studies)
+# ---------------------------------------------------------------------------
+
+def _paired(a: Dict[int, float], b: Dict[int, float]) -> Dict[int, Tuple[float, float]]:
+    """Union the key sets; missing entries read as 0.0."""
+    return {k: (a.get(k, 0.0), b.get(k, 0.0))
+            for k in sorted(set(a) | set(b))}
+
+
+class TraceDiff:
+    """Structural comparison of two timelines (A vs B).
+
+    Every per-key dict maps to an ``(a, b)`` value pair over the union of
+    the two traces' keys (a stage / resource present in only one trace
+    reads as 0.0 in the other), so a hardware variant that adds NoC links
+    or drops a pipeline stage still diffs cleanly. Deltas are ``b - a``.
+    """
+
+    def __init__(self, a: Trace, b: Trace):
+        self.total_time = (a.total_time, b.total_time)
+        self.events = (len(a), len(b))
+        self.bubble_fraction = (a.bubble_fraction(), b.bubble_fraction())
+        self.stage_busy = _paired(a.stage_busy(), b.stage_busy())
+        self.stage_utilization = _paired(a.stage_utilization(),
+                                         b.stage_utilization())
+        self.noc_occupancy = _paired(a.resource_occupancy(KIND_NOC),
+                                     b.resource_occupancy(KIND_NOC))
+        self.dram_occupancy = _paired(a.resource_occupancy(KIND_DRAM),
+                                      b.resource_occupancy(KIND_DRAM))
+
+    # -- deltas (b - a) ------------------------------------------------------
+    @property
+    def total_time_delta(self) -> float:
+        return self.total_time[1] - self.total_time[0]
+
+    @property
+    def bubble_delta(self) -> float:
+        return self.bubble_fraction[1] - self.bubble_fraction[0]
+
+    def stage_busy_delta(self) -> Dict[int, float]:
+        return {s: b - a for s, (a, b) in self.stage_busy.items()}
+
+    def stage_utilization_delta(self) -> Dict[int, float]:
+        return {s: b - a for s, (a, b) in self.stage_utilization.items()}
+
+    def noc_occupancy_delta(self) -> Dict[int, float]:
+        return {r: b - a for r, (a, b) in self.noc_occupancy.items()}
+
+    def dram_occupancy_delta(self) -> Dict[int, float]:
+        return {r: b - a for r, (a, b) in self.dram_occupancy.items()}
+
+    # -- serialization -------------------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        def pairs(d: Dict[int, Tuple[float, float]]) -> Dict[str, Any]:
+            return {str(k): {"a": a, "b": b, "delta": b - a}
+                    for k, (a, b) in d.items()}
+        return {
+            "total_time": {"a": self.total_time[0], "b": self.total_time[1],
+                           "delta": self.total_time_delta},
+            "events": {"a": self.events[0], "b": self.events[1],
+                       "delta": self.events[1] - self.events[0]},
+            "bubble_fraction": {"a": self.bubble_fraction[0],
+                                "b": self.bubble_fraction[1],
+                                "delta": self.bubble_delta},
+            "stage_busy": pairs(self.stage_busy),
+            "stage_utilization": pairs(self.stage_utilization),
+            "noc_occupancy": pairs(self.noc_occupancy),
+            "dram_occupancy": pairs(self.dram_occupancy),
+        }
+
+    def to_json(self, **kw: Any) -> str:
+        return json.dumps(self.to_dict(), **kw)
+
+    def table(self, top: int = 10) -> str:
+        """Human-readable digest: scalar deltas plus the per-stage table
+        and the ``top`` NoC/DRAM lanes by absolute occupancy delta."""
+        ta, tb = self.total_time
+        rel = f" ({(tb - ta) / ta:+.1%})" if ta > 0 else ""
+        lines = [
+            f"total_time: {ta:.6g}s -> {tb:.6g}s"
+            f" (delta {self.total_time_delta:+.6g}s{rel})",
+            f"bubble:     {self.bubble_fraction[0]:.1%} -> "
+            f"{self.bubble_fraction[1]:.1%} (delta {self.bubble_delta:+.1%})",
+            f"events:     {self.events[0]} -> {self.events[1]}",
+            "",
+            f"{'stage':>5s} {'busy_a (s)':>12s} {'busy_b (s)':>12s} "
+            f"{'delta (s)':>12s} {'util delta':>10s}",
+        ]
+        util_delta = self.stage_utilization_delta()
+        for s, (a, b) in self.stage_busy.items():
+            lines.append(f"{s:5d} {a:12.6g} {b:12.6g} {b - a:+12.6g} "
+                         f"{util_delta.get(s, 0.0):+10.1%}")
+        for label, paired in (("NoC link", self.noc_occupancy),
+                              ("DRAM channel", self.dram_occupancy)):
+            if not paired:
+                continue
+            ranked = sorted(paired.items(),
+                            key=lambda kv: -abs(kv[1][1] - kv[1][0]))[:top]
+            lines.append("")
+            lines.append(f"{label:>12s} {'occ_a':>8s} {'occ_b':>8s} "
+                         f"{'delta':>8s}   (top {len(ranked)} by |delta|)")
+            for rid, (a, b) in ranked:
+                lines.append(f"{rid:12d} {a:8.1%} {b:8.1%} {b - a:+8.1%}")
+        return "\n".join(lines)
+
+
+def diff(a: Trace, b: Trace) -> TraceDiff:
+    """Per-stage / per-lane busy & bubble deltas between two timelines
+    (e.g. the same workload on two hardware variants)."""
+    return TraceDiff(a, b)

@@ -1,0 +1,93 @@
+"""Simulation-fidelity rungs for multi-fidelity search.
+
+The PALM simulator exposes two natural cost knobs, and both preserve
+the *relative* ordering of candidates well enough to steer a search:
+
+* **NoC model fidelity** (:class:`~repro.core.enums.NoCMode`): the pure
+  analytical ring model and the per-collective macro model are orders of
+  magnitude cheaper than per-link event-driven simulation;
+* **microbatch count**: event count is O(M) in the number of pipeline
+  microbatches, and a run truncated to a few microbatches already prices
+  the steady-state stage times, collectives and DRAM streams — only the
+  ramp-up/ramp-down amortization shifts.
+
+A :class:`Fidelity` bundles both knobs. ``Fidelity()`` (no overrides) is
+*full* fidelity: evaluating a candidate under it is exactly the
+evaluation the exhaustive sweep performs, which is why final rungs and
+final reports are comparable across search strategies.
+
+Reducing the microbatch count only ever *lowers* the per-tile memory
+footprint (fewer in-flight microbatches), so a low-fidelity rung never
+memory-prunes a candidate the full-fidelity evaluation would keep.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+from ..core.enums import NoCMode
+from ..core.parallelism import ParallelPlan
+
+__all__ = ["Fidelity", "FULL", "default_ladder"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Fidelity:
+    """One simulation-fidelity point; picklable, ships inside pool jobs."""
+
+    name: str = "full"
+    noc_mode: Optional[NoCMode] = None       # None = the experiment's mode
+    max_microbatches: Optional[int] = None   # None = the plan's full count
+
+    def __post_init__(self):
+        if self.noc_mode is not None:
+            object.__setattr__(self, "noc_mode", NoCMode(self.noc_mode))
+        if self.max_microbatches is not None and self.max_microbatches < 1:
+            raise ValueError("max_microbatches must be >= 1")
+        if self.name == "full" and not self.is_full:
+            # a reduced rung must never masquerade as "full" in the
+            # accounting — derive a descriptive name instead
+            noc = str(self.noc_mode) if self.noc_mode is not None else "noc"
+            mb = (f"mb{self.max_microbatches}"
+                  if self.max_microbatches is not None else "mball")
+            object.__setattr__(self, "name", f"{noc}-{mb}")
+
+    @property
+    def is_full(self) -> bool:
+        return self.noc_mode is None and self.max_microbatches is None
+
+    def apply(self, plan: ParallelPlan) -> ParallelPlan:
+        """Truncate the plan's microbatch count (the per-iteration batch
+        ``microbatch * dp`` — and thus the workload graph — is
+        unchanged, so sweep-engine graph memos stay shared)."""
+        if self.max_microbatches is None:
+            return plan
+        if plan.num_microbatches <= self.max_microbatches:
+            return plan
+        return dataclasses.replace(
+            plan,
+            global_batch=plan.microbatch * plan.dp * self.max_microbatches)
+
+
+FULL = Fidelity()
+
+
+def default_ladder(noc_mode: NoCMode = NoCMode.MACRO,
+                   num_rungs: int = 3) -> List[Fidelity]:
+    """Cheapest-first fidelity ladder ending at full fidelity.
+
+    ``noc_mode`` is the experiment's own (full-fidelity) NoC model; the
+    middle rung steps down event-driven runs to the macro model and
+    leaves cheaper modes untouched.
+    """
+    if not 1 <= num_rungs <= 3:
+        raise ValueError("num_rungs must be 1, 2 or 3")
+    noc_mode = NoCMode(noc_mode)
+    mid_noc = NoCMode.MACRO if noc_mode == NoCMode.DETAILED else noc_mode
+    ladder = [
+        Fidelity("analytical-mb2", NoCMode.ANALYTICAL, 2),
+        Fidelity(f"{mid_noc}-mb4", mid_noc, 4),
+        FULL,
+    ]
+    return ladder[3 - num_rungs:]

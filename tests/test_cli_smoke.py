@@ -186,6 +186,86 @@ def test_cli_hardware_torus_variant_dump(tmp_path):
     assert payload["throughput"] > 0
 
 
+def test_cli_plan_guided_search(tmp_path):
+    """`plan --search sh` runs the guided co-design loop: budgeted
+    full-fidelity sims, a search accounting note, and a report carrying
+    the nested SearchReport."""
+    out = tmp_path / "guided.json"
+    proc = _run(["-m", "repro", "plan", "--arch", "yi-6b",
+                 "--hardware", "tpu_v5e_2x2", "--global-batch", "8",
+                 "--seq-len", "128", "--max-plans", "3",
+                 "--microbatch-sizes", "1", "--layouts", "s_shape",
+                 "--hw-flops", "100e12", "197e12",
+                 "--search", "sh", "--search-budget", "2", "--seed", "0",
+                 "--json", str(out)])
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "[search sh" in proc.stdout
+    doc = json.loads(out.read_text())
+    search = doc["search"]
+    assert search["strategy"] == "sh" and search["seed"] == 0
+    assert search["full_fidelity_sims"] <= 2
+    assert search["rungs"] and search["best_curve"]
+    # faster tiles still win under the budgeted search
+    assert "197T" in doc["runs"][0]["hardware"]
+
+
+def test_cli_sweep_guided_search_deterministic():
+    args = ["-m", "repro", "sweep", "--arch", "yi-6b",
+            "--hardware", "tpu_v5e_2x2", "--global-batch", "8",
+            "--seq-len", "128", "--max-plans", "4",
+            "--microbatch-sizes", "1",
+            "--search", "random", "--search-budget", "3", "--seed", "7",
+            "--json", "-"]
+    a, b = _run(args), _run(args)
+    assert a.returncode == 0, a.stderr[-2000:]
+    assert a.stdout[a.stdout.index("{"):] == b.stdout[b.stdout.index("{"):]
+
+
+def test_cli_search_budget_requires_guided_strategy():
+    """--search-budget without --search {random,sh,evolve} must not
+    silently run the full exhaustive product."""
+    proc = _run(["-m", "repro", "sweep", "--arch", "yi-6b",
+                 "--hardware", "tpu_v5e_2x2", "--global-batch", "8",
+                 "--seq-len", "128", "--max-plans", "3",
+                 "--search-budget", "2"])
+    assert proc.returncode == 2
+    assert "--search" in proc.stderr
+
+
+def test_cli_trace_diff(tmp_path):
+    """Simulate two plans, diff their timelines (trace-diff satellite)."""
+    pytest.importorskip("numpy")        # --trace-npz needs numpy
+    npzs = []
+    for pp, dp in ((2, 2), (4, 1)):
+        npz = tmp_path / f"pp{pp}.npz"
+        proc = _run(["-m", "repro", "simulate", "--arch", "yi-6b",
+                     "--hardware", "tpu_v5e_2x2", "--pp", str(pp),
+                     "--dp", str(dp), "--global-batch", "8",
+                     "--seq-len", "128", "--trace-npz", str(npz)])
+        assert proc.returncode == 0, proc.stderr[-2000:]
+        npzs.append(npz)
+    out = tmp_path / "diff.json"
+    proc = _run(["-m", "repro", "trace-diff", str(npzs[0]), str(npzs[1]),
+                 "--json", str(out)])
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "total_time:" in proc.stdout and "bubble:" in proc.stdout
+    doc = json.loads(out.read_text())
+    assert set(doc) >= {"total_time", "bubble_fraction", "stage_busy",
+                        "noc_occupancy", "dram_occupancy"}
+    # pp=2 ran stages 0-1, pp=4 ran 0-3: union keys, zero-filled
+    assert set(doc["stage_busy"]) == {"0", "1", "2", "3"}
+    assert doc["total_time"]["delta"] == pytest.approx(
+        doc["total_time"]["b"] - doc["total_time"]["a"])
+
+
+def test_cli_trace_diff_rejects_chrome_export(tmp_path):
+    bad = tmp_path / "chrome.json"
+    bad.write_text(json.dumps({"traceEvents": []}))
+    proc = _run(["-m", "repro", "trace-diff", str(bad), str(bad)])
+    assert proc.returncode == 2
+    assert "columnar" in proc.stderr
+
+
 def test_cli_sweep_hardware_variants():
     proc = _run(["-m", "repro", "sweep", "--arch", "yi-6b",
                  "--hardware", "tpu_v5e_2x2", "--global-batch", "8",

@@ -1,0 +1,348 @@
+"""Guided multi-fidelity search (repro.search): encoded-space structure,
+strategy determinism and parity, budget enforcement, report round-trips,
+and the sweep-engine trace lane filter / payload budget satellites."""
+
+import random
+
+import pytest
+
+from repro.api import (
+    Experiment,
+    HardwareSearchSpace,
+    Layout,
+    SearchSpace,
+    SweepEngine,
+    SweepReport,
+)
+from repro.core import tpu_v5e_pod
+from repro.search import (
+    EncodedSpace,
+    Evolutionary,
+    FULL,
+    Fidelity,
+    RandomSearch,
+    SearchReport,
+    SuccessiveHalving,
+    default_ladder,
+    make_strategy,
+    run_search,
+)
+
+
+def _exp(**kw):
+    defaults = dict(
+        arch="yi-6b",
+        hardware=tpu_v5e_pod(2, 2),
+        seq_len=128,
+        global_batch=8,
+        search=SearchSpace(max_plans=4, microbatch_sizes=(1,)),
+        hardware_search=HardwareSearchSpace(tile_flops=(100e12, 197e12),
+                                            dram_bandwidth=(400e9, 819e9)),
+    )
+    defaults.update(kw)
+    return Experiment(**defaults)
+
+
+# ---------------------------------------------------------------------------
+# EncodedSpace
+# ---------------------------------------------------------------------------
+
+def test_encoded_space_matches_exhaustive_enumeration():
+    exp = _exp()
+    space = EncodedSpace.from_experiment(exp)
+    report = exp.sweep(workers=0)
+    assert len(space) == report.num_candidates
+    assert len(space.specs) == report.num_hardware
+    # flat order is the exhaustive job stream: variant-major, plan-minor
+    jobs = space.jobs()
+    for i, (v, plan) in enumerate(jobs):
+        cand = space.from_flat(i)
+        assert space.flat_index(cand) == i
+        assert space.job(cand) == (v, plan)
+    axes = space.describe()["hardware_axes"]
+    assert axes == {"tile_flops": 2, "dram_bandwidth": 2}
+
+
+def test_encoded_space_counts_failed_variants():
+    exp = _exp(search=SearchSpace(degrees=[(2, 2, 1)], microbatch_sizes=(1,),
+                                  layouts=(Layout.S_SHAPE,)),
+               hardware_search=HardwareSearchSpace(mesh_shapes=((2, 2), (1, 2))))
+    space = EncodedSpace.from_experiment(exp)
+    assert space.extra_failed == 1          # the 2-device 1x2 variant
+    assert space.num_enumerated == 2
+    assert len(space.specs) == 1
+
+
+def test_encoded_space_sample_and_mutate_are_seed_deterministic():
+    space = EncodedSpace.from_experiment(_exp())
+    a, b = random.Random(7), random.Random(7)
+    sa = [space.sample(a) for _ in range(20)]
+    sb = [space.sample(b) for _ in range(20)]
+    assert sa == sb
+    ma = [space.mutate(c, a) for c in sa]
+    mb = [space.mutate(c, b) for c in sb]
+    assert ma == mb
+    for src, dst in zip(sa, ma):
+        assert dst != src
+        v, plan = space.job(dst)            # every mutant decodes to a job
+        assert plan in space.plans[v]
+
+
+def test_fidelity_apply_truncates_microbatches_only():
+    from repro.api import ParallelPlan
+    plan = ParallelPlan(pp=2, dp=2, tp=1, microbatch=1, global_batch=16)
+    assert plan.num_microbatches == 8
+    low = Fidelity("mb2", max_microbatches=2).apply(plan)
+    assert low.num_microbatches == 2
+    assert (low.microbatch, low.dp, low.pp) == (1, 2, 2)
+    assert FULL.apply(plan) is plan
+    # already-short plans are untouched
+    assert Fidelity("mb16", max_microbatches=16).apply(plan) is plan
+
+
+def test_unnamed_reduced_fidelity_gets_derived_name_and_cannot_poison_cache():
+    """A reduced rung left with the default name must not masquerade as
+    "full": the accounting name is derived, and run_search keys its
+    evaluation cache on the Fidelity object, so a custom ladder with
+    sloppy names still dispatches real full-fidelity sims."""
+    from repro.api import NoCMode
+    f = Fidelity(noc_mode=NoCMode.ANALYTICAL)       # name not given
+    assert f.name != "full" and not f.is_full
+    exp = _exp()
+    rep = run_search(exp, strategy="sh", budget=2, seed=0,
+                     ladder=[Fidelity(noc_mode=NoCMode.ANALYTICAL), FULL])
+    assert rep.runs, "full-fidelity rung must have dispatched real sims"
+    assert rep.search.full_fidelity_sims > 0
+    assert rep.search.sims_per_fidelity.get("full") == \
+        rep.search.full_fidelity_sims
+
+
+def test_default_ladder_ends_full_and_steps_down_detailed():
+    from repro.api import NoCMode
+    ladder = default_ladder(NoCMode.DETAILED)
+    assert [f.is_full for f in ladder] == [False, False, True]
+    assert ladder[0].noc_mode == NoCMode.ANALYTICAL
+    assert ladder[1].noc_mode == NoCMode.MACRO
+    assert len(default_ladder(NoCMode.MACRO, num_rungs=2)) == 2
+
+
+# ---------------------------------------------------------------------------
+# strategies: exhaustive parity, budget, determinism
+# ---------------------------------------------------------------------------
+
+def test_exhaustive_strategy_is_bit_identical_to_legacy_sweep():
+    """Satellite acceptance: --search exhaustive IS today's path."""
+    exp = _exp()
+    assert exp.sweep(workers=0).to_json() == \
+        exp.sweep(workers=0, strategy="exhaustive").to_json()
+
+
+def test_random_search_respects_budget_and_seed():
+    exp = _exp()
+    rep = exp.sweep(workers=0, strategy="random", search_budget=5, seed=3)
+    s = rep.search
+    assert s is not None and s.strategy == "random"
+    assert s.full_fidelity_sims <= 5
+    assert len(rep.runs) <= 5
+    assert sorted(s.sims_per_fidelity) == ["full"]
+    again = exp.sweep(workers=0, strategy="random", search_budget=5, seed=3)
+    assert again.to_json() == rep.to_json()
+
+
+def test_sh_finds_rigged_optimum_within_budget():
+    """Rigged space: the 197T/819G variant dominates; successive halving
+    must find a within-2% point with a fifth of the full-fidelity sims."""
+    exp = _exp()
+    exhaustive = exp.sweep(workers=0)
+    budget = max(1, exhaustive.num_candidates // 5)
+    rep = exp.sweep(workers=0, strategy="sh", search_budget=budget, seed=0)
+    s = rep.search
+    assert s.full_fidelity_sims <= budget
+    assert rep.best.throughput >= 0.98 * exhaustive.best.throughput
+    # multi-fidelity: the cheap rungs did the bulk of the evaluations
+    assert s.sims_per_fidelity.get("analytical-mb2", 0) > s.full_fidelity_sims
+    # best-so-far curve is monotone in both coordinates
+    curve = s.best_curve
+    assert curve and all(a[0] <= b[0] and a[1] <= b[1]
+                         for a, b in zip(curve, curve[1:]))
+
+
+def test_sh_never_promotes_past_rung_budget():
+    """Satellite acceptance: each rung promotes at most its successor's
+    cohort budget, and the full-fidelity rung never exceeds the budget."""
+    space = EncodedSpace.from_experiment(_exp())
+    budget = 3
+    ladder = default_ladder()
+    sh = SuccessiveHalving(space, budget=budget, seed=0, ladder=ladder, eta=2)
+    sizes = sh._rung_sizes
+    assert sizes[-1] <= budget
+    while True:
+        asks = sh.ask()
+        if not asks:
+            break
+        rung = sh._rung
+        assert len(asks) <= sizes[rung]
+        assert all(f.name == ladder[rung].name for _, f in asks)
+        # feed synthetic monotone results: higher flat index = faster
+        from repro.search import EvalOutcome
+        sh.tell([EvalOutcome(c, f, ok=True,
+                             throughput=float(space.flat_index(c)))
+                 for c, f in asks])
+    recs = sh.rung_records()
+    assert len(recs) == len(ladder)
+    for prev, nxt in zip(recs, recs[1:]):
+        assert prev.promoted == nxt.evaluated
+        assert prev.promoted <= prev.evaluated
+    assert recs[-1].evaluated <= budget
+    assert recs[-1].promoted == 0
+
+
+def test_evolve_respects_budget_and_finds_optimum():
+    exp = _exp()
+    rep = exp.sweep(workers=0, strategy="evolve", search_budget=10, seed=0)
+    s = rep.search
+    assert s.full_fidelity_sims <= 10
+    assert "197T" in rep.best.hardware
+    assert s.rungs and all(r.fidelity == "full" for r in s.rungs)
+
+
+@pytest.mark.parametrize("strategy", ["random", "sh", "evolve"])
+def test_fixed_seed_serial_matches_pool(strategy):
+    """Tentpole acceptance: fixed-seed guided runs are bit-reproducible
+    across executors (serial vs shared process pool)."""
+    exp = _exp()
+    serial = exp.sweep(workers=0, strategy=strategy, search_budget=4, seed=1)
+    pooled = exp.sweep(workers=2, strategy=strategy, search_budget=4, seed=1)
+    assert pooled.executor.startswith("process")
+    ds, dp = serial.to_dict(), pooled.to_dict()
+    ds.pop("executor"), dp.pop("executor")
+    assert ds == dp
+
+
+def test_empty_space_matches_exhaustive_empty_report():
+    """An infeasible space yields an empty ranked report (CLI exit 1),
+    not an error — same contract as the exhaustive path."""
+    exp = _exp(search=SearchSpace(degrees=[(2, 2, 1)], microbatch_sizes=(1,),
+                                  layouts=(Layout.S_SHAPE,)),
+               hardware_search=HardwareSearchSpace(mesh_shapes=((1, 2),)))
+    exhaustive = exp.sweep(workers=0)
+    guided = exp.sweep(workers=0, strategy="random", search_budget=2, seed=0)
+    assert exhaustive.runs == [] and guided.runs == []
+    assert guided.num_failed == exhaustive.num_failed == 1
+    assert guided.num_candidates == exhaustive.num_candidates == 0
+    assert guided.hardware == exhaustive.hardware
+    assert guided.search.full_fidelity_sims == 0
+    assert guided.best is None
+
+
+def test_make_strategy_rejects_unknown():
+    space = EncodedSpace.from_experiment(_exp())
+    with pytest.raises(ValueError, match="unknown search strategy"):
+        make_strategy("bayes", space, budget=4)
+
+
+def test_search_budget_without_strategy_raises():
+    """Budget/seed on an exhaustive sweep must fail loudly, not silently
+    run the whole product — in the API and in the planner alike."""
+    exp = _exp()
+    with pytest.raises(ValueError, match="guided search"):
+        exp.sweep(search_budget=4)
+    with pytest.raises(ValueError, match="guided search"):
+        exp.sweep(seed=1)
+    from repro.api import PlannerCfg, plan_parallelism
+    from repro.configs import get_config
+    with pytest.raises(ValueError, match="guided search"):
+        plan_parallelism(get_config("yi-6b"), tpu_v5e_pod(2, 2),
+                         PlannerCfg(global_batch=8, seq_len=128,
+                                    max_plans=2, search_budget=4))
+
+
+def test_search_report_round_trips_inside_sweep_report():
+    exp = _exp()
+    rep = exp.sweep(workers=0, strategy="sh", search_budget=3, seed=0)
+    back = SweepReport.from_json(rep.to_json())
+    assert back == rep
+    assert isinstance(back.search, SearchReport)
+    assert back.search == rep.search
+    assert back.search.rungs == rep.search.rungs
+    # the winning variant is still recoverable (co-design contract)
+    assert rep.best_hardware_dict() is not None
+
+
+def test_run_search_without_hardware_search():
+    """Plan-only spaces search too (single variant, plan axes only)."""
+    exp = _exp(hardware_search=None,
+               search=SearchSpace(max_plans=6, microbatch_sizes=(1, 2)))
+    rep = run_search(exp, strategy="random", budget=3, seed=0)
+    assert rep.num_hardware == 1 and rep.hardware == "tpu_v5e_2x2"
+    assert rep.search.full_fidelity_sims <= 3 and rep.runs
+
+
+def test_plan_codesign_with_guided_strategy():
+    from repro.api import PlannerCfg, plan_codesign
+    from repro.configs import get_config
+    cfg = PlannerCfg(
+        global_batch=8, seq_len=128, max_plans=3, microbatch_sizes=(1,),
+        hardware_search=HardwareSearchSpace(tile_flops=(100e12, 197e12)),
+        search_strategy="sh", search_budget=2, search_seed=0)
+    res = plan_codesign(get_config("yi-6b"), tpu_v5e_pod(2, 2), cfg)
+    assert "197T" in res.hardware.name
+    assert res.report.search is not None
+    assert res.report.search.full_fidelity_sims <= 2
+
+
+# ---------------------------------------------------------------------------
+# sweep-engine trace lane filter / payload budget (satellite)
+# ---------------------------------------------------------------------------
+
+def _timeline_exp():
+    return Experiment(arch="yi-6b", hardware=tpu_v5e_pod(2, 2), seq_len=128,
+                      global_batch=8, collect_timeline=True,
+                      search=SearchSpace(max_plans=3, microbatch_sizes=(1,),
+                                         layouts=(Layout.S_SHAPE,)))
+
+
+def test_trace_lane_filter_keeps_scalars_exact():
+    exp = _timeline_exp()
+    plans = exp.search.enumerate_plans(exp.hardware_spec, exp.global_batch,
+                                       arch=exp.arch_config)
+    full = SweepEngine(workers=0, return_timelines=True,
+                       trace_resources=True).sweep(exp, plans)
+    lean = SweepEngine(workers=0, return_timelines=True, trace_resources=True,
+                       trace_lanes=("FD", "BD")).sweep(exp, plans)
+    assert [r.plan for r in lean.runs] == [r.plan for r in full.runs]
+    assert [r.throughput for r in lean.runs] == \
+           [r.throughput for r in full.runs]
+    # scalars were digested before filtering: bubble/occupancy stay exact
+    assert [r.bubble_ratio for r in lean.runs] == \
+           [r.bubble_ratio for r in full.runs]
+    for r in lean.runs:
+        assert {int(k) for k in r.trace.kind} <= {0, 1}      # FD, BD only
+    assert sum(r.trace.nbytes for r in lean.runs) < \
+        sum(r.trace.nbytes for r in full.runs)
+
+
+def test_trace_budget_bounds_payload_and_records_drops():
+    exp = _timeline_exp()
+    plans = exp.search.enumerate_plans(exp.hardware_spec, exp.global_batch,
+                                       arch=exp.arch_config)
+    budget = 2000
+    rep = SweepEngine(workers=0, return_timelines=True, trace_resources=True,
+                      trace_budget_bytes=budget).sweep(exp, plans)
+    for r in rep.runs:
+        assert r.trace.nbytes <= budget
+        dropped = r.extra.get("trace_lanes_dropped", [])
+        assert dropped, "tight budget must have dropped lanes"
+        assert dropped == sorted(dropped, key=["DRAM", "NOC", "GU", "BD",
+                                               "FD"].index)
+    # serial and pooled engines apply the identical policy
+    pooled = SweepEngine(workers=2, return_timelines=True,
+                         trace_resources=True,
+                         trace_budget_bytes=budget).sweep(exp, plans)
+    assert all(a.trace == b.trace and a.extra == b.extra
+               for a, b in zip(rep.runs, pooled.runs))
+
+
+def test_trace_lanes_rejects_unknown_names():
+    with pytest.raises(ValueError, match="unknown trace lane"):
+        SweepEngine(trace_lanes=("FD", "PCIE"))
