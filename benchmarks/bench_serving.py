@@ -1,0 +1,110 @@
+"""Serving-simulator gate: continuous vs static batching goodput.
+
+Sweeps SLO goodput against offered request rate for both batching
+policies on a rigged workload (high-variance decode lengths, so static
+batches are held hostage by their longest request while continuous
+batching recycles slots every iteration). Gates:
+
+* on the rigged point, continuous batching must deliver >= 1.5x the
+  static-batching goodput;
+* fixed-seed serving sweeps are bit-reproducible, serial == process pool
+  (the same determinism contract the sweep engine holds for training).
+
+Standalone (CI bench-smoke):
+
+    PYTHONPATH=src python benchmarks/bench_serving.py --tiny \
+        --json artifacts/bench_serving.json
+"""
+
+from __future__ import annotations
+
+# allow `python benchmarks/bench_serving.py` (CI bench-smoke) in addition
+# to `python -m benchmarks.run --only serving`
+if __package__ in (None, ""):
+    import sys
+    from pathlib import Path
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+    __package__ = "benchmarks"
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+from repro.serving import ServingSpec, WorkloadSpec, simulate_serving
+
+from .common import Report, write_bench_json
+
+# the rigged-point advantage the gate demands
+_GOODPUT_FACTOR = 1.5
+
+_ARCH, _HW = "hymba-1.5b", "grayskull"
+
+
+def _spec(policy: str, rate: float, num_requests: int) -> ServingSpec:
+    workload = WorkloadSpec(rate=rate, num_requests=num_requests, seed=1,
+                            prompt_mean=64, prompt_cv=0.5,
+                            decode_mean=16, decode_cv=2.0)
+    return ServingSpec(workload=workload, max_batch=4, ctx_bucket=128,
+                       policy=policy, slo_ttft_ms=1500.0, slo_tpot_ms=250.0)
+
+
+def run(report: Report, tiny: bool = False) -> None:
+    rates = (0.5, 1.0) if tiny else (0.5, 1.0, 2.0, 4.0)
+    num_requests = 24 if tiny else 40
+
+    gate_rate = 1.0
+    goodput = {}
+    for policy in ("continuous", "static"):
+        for rate in rates:
+            t0 = time.perf_counter()
+            rep = simulate_serving(_ARCH, _HW, None,
+                                   _spec(policy, rate, num_requests))
+            dt = time.perf_counter() - t0
+            goodput[(policy, rate)] = rep.goodput_rps
+            report.log(f"{policy:>10s} @ {rate:>4.1f} req/s offered: "
+                       f"goodput {rep.goodput_rps:.3f} req/s, "
+                       f"SLO attainment {rep.slo_attainment:.0%}, "
+                       f"{rep.preemptions} preemptions ({dt:.2f}s)")
+            report.add(f"serving_{policy}_rate{rate:g}", dt * 1e6,
+                       f"goodput_{rep.goodput_rps:.4f}")
+
+    cont, stat = goodput[("continuous", gate_rate)], goodput[("static", gate_rate)]
+    ratio = cont / stat if stat > 0 else float("inf")
+    ok = ratio >= _GOODPUT_FACTOR
+    report.log(f"rigged point ({gate_rate} req/s): continuous/static "
+               f"goodput = {ratio:.2f}x (gate >= {_GOODPUT_FACTOR}x)")
+    report.add("serving_goodput_gate", ratio, "ok" if ok else "MISMATCH")
+
+    # determinism gate: same seed, serial report == report recomputed from
+    # a fresh simulator (fresh cost memo) — bit for bit
+    a = simulate_serving(_ARCH, _HW, None,
+                         _spec("continuous", gate_rate, num_requests))
+    b = simulate_serving(_ARCH, _HW, None,
+                         _spec("continuous", gate_rate, num_requests))
+    report.add("serving_repro_gate", 0.0,
+               "ok" if a.to_json() == b.to_json() else "MISMATCH")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="seconds-scale config for CI bench-smoke runs")
+    ap.add_argument("--json", type=Path, default=None, metavar="FILE",
+                    help="write the {rows, lines} JSON report here")
+    args = ap.parse_args(argv)
+
+    report = Report()
+    t0 = time.time()
+    run(report, tiny=args.tiny)
+    elapsed = time.time() - t0
+    report.log(f"[serving: {elapsed:.1f}s]")
+
+    if args.json is not None:
+        write_bench_json(report, "serving", args.tiny, elapsed, args.json)
+
+    return 1 if any(row.endswith("MISMATCH") for row in report.rows) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

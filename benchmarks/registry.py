@@ -32,6 +32,7 @@ SUITES: List[Suite] = [
     Suite("crosscheck", "bench_crosscheck", "PALM vs XLA (beyond-paper)"),
     Suite("sweep_engine", "bench_sweep_engine", "§V-B sweep: serial vs pool"),
     Suite("search", "bench_search", "§VI guided multi-fidelity co-design"),
+    Suite("serving", "bench_serving", "serving: continuous vs static goodput"),
 ]
 
 

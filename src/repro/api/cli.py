@@ -335,6 +335,84 @@ def _cmd_plan(args) -> int:
     return 0
 
 
+def _serving_workload(args):
+    from ..serving.workload import WorkloadSpec, workload_from_json
+    if args.replay is not None:
+        return workload_from_json(args.replay.read_text())
+    return WorkloadSpec(kind=args.workload, rate=args.rate,
+                        num_requests=args.num_requests, seed=args.seed,
+                        prompt_mean=args.prompt_mean, prompt_cv=args.prompt_cv,
+                        decode_mean=args.decode_mean, decode_cv=args.decode_cv,
+                        burst_factor=args.burst_factor,
+                        burst_dwell_s=args.burst_dwell_s)
+
+
+def _cmd_serve_sim(args) -> int:
+    from ..serving.system import ServingSpec, simulate_serving
+    from ..serving.workload import workload_to_json
+    workload = _serving_workload(args)
+    spec = ServingSpec(workload=workload,
+                       slo_ttft_ms=args.slo_ttft_ms,
+                       slo_tpot_ms=args.slo_tpot_ms,
+                       max_batch=args.max_batch,
+                       kv_budget_bytes=args.kv_budget,
+                       policy=args.policy,
+                       ctx_bucket=args.ctx_bucket)
+    plan = None
+    if args.dp != 1 or args.tp != 1 or args.pp != 1:
+        plan = ParallelPlan(pp=args.pp, dp=args.dp, tp=args.tp,
+                            microbatch=1, global_batch=args.dp,
+                            schedule=Schedule.GPIPE, training=False)
+    want_trace = args.trace_out is not None or args.trace_npz is not None
+    report = simulate_serving(args.arch, _resolve_hardware_args(args), plan,
+                              spec, noc_mode=args.noc_mode,
+                              boundary_mode=args.boundary_mode,
+                              collect_trace=want_trace)
+    print(report.summary())
+    if args.workload_out is not None:
+        args.workload_out.write_text(
+            workload_to_json(workload.generate()) + "\n")
+        print(f"[replayable workload trace written to {args.workload_out}]")
+    if want_trace:
+        trace = report.trace
+        if args.trace_out is not None:
+            from ..core.trace import chrome_trace
+            doc = chrome_trace(trace, label=f"{report.arch}@{report.hardware}")
+            text = json.dumps(doc)
+            if str(args.trace_out) == "-":
+                print(text)
+            else:
+                args.trace_out.write_text(text + "\n")
+                print(f"[serving trace written to {args.trace_out}: "
+                      f"{len(trace)} spans]")
+        if args.trace_npz is not None:
+            trace.to_npz(args.trace_npz)
+            print(f"[columnar trace written to {args.trace_npz}]")
+    _emit(report, args.json)
+    return 0
+
+
+def _cmd_serve_plan(args) -> int:
+    from ..serving.planner import plan_serving
+    try:
+        mesh, report = plan_serving(
+            args.arch, _resolve_hardware_args(args), batch=args.batch,
+            context_len=args.context_len, workers=args.workers,
+            memory_cap=args.memory_cap)
+    except RuntimeError as e:           # infeasibility, with diagnostics
+        print(f"error: {e}", file=sys.stderr)
+        return 1
+    best = report.best
+    print(f"best serving split for {report.arch} on {report.hardware}: "
+          f"data={mesh['data']} model={mesh['model']} "
+          f"({best.throughput:.3f} decode steps/s over "
+          f"{report.num_candidates} splits, "
+          f"{report.num_pruned_memory} memory-pruned, "
+          f"{report.num_failed} failed)")
+    _emit(report, args.json)
+    return 0
+
+
 def _load_trace(path: Path):
     """Load a columnar trace: ``.npz`` (``simulate --trace-npz``) or a
     JSON file holding ``Trace.to_dict()`` (or a RunReport dict embedding
@@ -407,6 +485,87 @@ def main(argv: Optional[List[str]] = None) -> int:
                           "recommendation (winning hardware spec JSON + "
                           "plan) here ('-' for stdout)")
     pln.set_defaults(fn=_cmd_plan)
+
+    ssv = sub.add_parser(
+        "serve-sim",
+        help="traffic-driven serving simulation (continuous batching, "
+             "KV-cache pressure, TTFT/TPOT/goodput SLO metrics)")
+    ssv.add_argument("--arch", required=True,
+                     help=f"arch-config name (e.g. {', '.join(list_archs()[:3])})")
+    _add_hardware(ssv)
+    wl = ssv.add_argument_group("workload (seeded request traffic)")
+    wl.add_argument("--workload", default="poisson",
+                    choices=["poisson", "bursty"],
+                    help="arrival process (bursty = 2-state MMPP)")
+    wl.add_argument("--rate", type=float, default=4.0,
+                    help="offered request rate (req/s)")
+    wl.add_argument("--num-requests", type=int, default=64)
+    wl.add_argument("--seed", type=int, default=0)
+    wl.add_argument("--prompt-mean", type=int, default=512)
+    wl.add_argument("--prompt-cv", type=float, default=0.0,
+                    help="lognormal coefficient of variation (0 = fixed)")
+    wl.add_argument("--decode-mean", type=int, default=64)
+    wl.add_argument("--decode-cv", type=float, default=0.0)
+    wl.add_argument("--burst-factor", type=float, default=4.0,
+                    help="bursty only: burst-state rate multiplier")
+    wl.add_argument("--burst-dwell-s", type=float, default=2.0,
+                    help="bursty only: mean dwell per MMPP state (s)")
+    wl.add_argument("--replay", type=Path, default=None, metavar="FILE",
+                    help="replay a recorded workload trace JSON "
+                         "(overrides the generator flags)")
+    wl.add_argument("--workload-out", type=Path, default=None, metavar="FILE",
+                    help="write the generated workload as a replayable "
+                         "trace JSON")
+    sv = ssv.add_argument_group("serving engine")
+    sv.add_argument("--slo-ttft-ms", type=float, default=2000.0,
+                    help="time-to-first-token SLO (ms)")
+    sv.add_argument("--slo-tpot-ms", type=float, default=200.0,
+                    help="time-per-output-token SLO (ms)")
+    sv.add_argument("--max-batch", type=int, default=32)
+    sv.add_argument("--policy", default="continuous",
+                    choices=["continuous", "static"],
+                    help="continuous = iteration-level admission; static = "
+                         "batches drain fully before the next forms")
+    sv.add_argument("--kv-budget", type=float, default=None,
+                    help="KV-cache byte budget (default: derived from DRAM "
+                         "headroom after weights/activations)")
+    sv.add_argument("--ctx-bucket", type=int, default=512,
+                    help="context-length rounding for step-cost memoization")
+    sv.add_argument("--pp", type=int, default=1)
+    sv.add_argument("--dp", type=int, default=1)
+    sv.add_argument("--tp", type=int, default=1)
+    ssv.add_argument("--noc-mode", type=NoCMode, choices=list(NoCMode),
+                     default=NoCMode.MACRO)
+    ssv.add_argument("--boundary-mode", type=BoundaryMode,
+                     choices=list(BoundaryMode), default=BoundaryMode.PAIRWISE)
+    ssv.add_argument("--trace-out", type=Path, default=None, metavar="FILE",
+                     help="write the per-request serving timeline as "
+                          "Chrome/Perfetto traceEvents JSON ('-' for stdout)")
+    ssv.add_argument("--trace-npz", type=Path, default=None, metavar="FILE",
+                     help="write the columnar trace as .npz (needs numpy)")
+    ssv.add_argument("--json", type=Path, default=None, metavar="FILE",
+                     help="write the ServingReport JSON here ('-' for stdout)")
+    ssv.set_defaults(fn=_cmd_serve_sim)
+
+    spl = sub.add_parser(
+        "serve-plan",
+        help="pick the best (data, model) serving split by simulated "
+             "decode throughput")
+    spl.add_argument("--arch", required=True,
+                     help=f"arch-config name (e.g. {', '.join(list_archs()[:3])})")
+    _add_hardware(spl)
+    spl.add_argument("--batch", type=int, default=8,
+                     help="decode batch the split must serve")
+    spl.add_argument("--context-len", type=int, default=4096,
+                     help="KV-cache context length for the decode step")
+    spl.add_argument("--workers", type=int, default=0,
+                     help="0 = serial, N = process pool of N")
+    spl.add_argument("--memory-cap", type=float, default=None,
+                     help="bytes per tile; infeasible splits are pruned and "
+                          "explained (per-split deficits) when nothing fits")
+    spl.add_argument("--json", type=Path, default=None, metavar="FILE",
+                     help="write the SweepReport JSON here ('-' for stdout)")
+    spl.set_defaults(fn=_cmd_serve_plan)
 
     tdf = sub.add_parser(
         "trace-diff",

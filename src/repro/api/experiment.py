@@ -25,7 +25,16 @@ import functools
 import itertools
 import json
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+from typing import (
+    TYPE_CHECKING,
+    Callable,
+    Dict,
+    List,
+    Optional,
+    Sequence,
+    Tuple,
+    Union,
+)
 
 from ..configs import get_config
 from ..configs.base import ArchConfig
@@ -43,7 +52,11 @@ from ..core.hardware import (
 )
 from ..core.parallelism import ParallelPlan
 from ..core.workload import arch_to_graph
+from ..serving.system import ServingSpec
 from .report import RunReport, SweepReport
+
+if TYPE_CHECKING:
+    from .sweep import SweepEngine
 
 __all__ = ["Experiment", "SearchSpace", "HardwareSearchSpace",
            "resolve_hardware", "HARDWARE_PRESETS"]
@@ -412,6 +425,10 @@ class Experiment:
     # record NoC/DRAM busy-interval lanes into the trace (compute lanes are
     # always recorded); in sweeps this also implies return_timelines
     collect_timeline: bool = False
+    # score candidates with the traffic-driven serving simulator instead
+    # of one pipeline iteration: RunReport.throughput becomes SLO goodput
+    # and the full ServingReport rides in RunReport.extra["serving"]
+    serving: Optional[ServingSpec] = None
 
     def __post_init__(self):
         self.noc_mode = NoCMode(self.noc_mode)
@@ -469,6 +486,13 @@ class Experiment:
                     f"microbatch*dp = {p.microbatch * p.dp}")
         if self.seq_len < 1 or self.global_batch < 1:
             raise ValueError("seq_len and global_batch must be >= 1")
+        if self.serving is not None:
+            if self.training:
+                raise ValueError("serving experiments score decode traffic; "
+                                 "set training=False")
+            if self.arch is None:
+                raise ValueError("serving experiments need an `arch` (the KV "
+                                 "model derives from the ArchConfig)")
 
     # -- execution ----------------------------------------------------------
     def run(self) -> RunReport:
@@ -482,7 +506,8 @@ class Experiment:
               return_timelines: bool = False,
               strategy: Optional[str] = None,
               search_budget: Optional[int] = None,
-              seed: Optional[int] = None) -> SweepReport:
+              seed: Optional[int] = None,
+              engine: Optional["SweepEngine"] = None) -> SweepReport:
         """Evaluate the search space; ``workers=0`` is serial, ``workers=N``
         uses an N-process pool, ``workers=None`` uses all cores. With a
         ``hardware_search``, the full (hardware variant x plan) product is
@@ -498,19 +523,26 @@ class Experiment:
         subset of the space at full fidelity (``search_budget``, default
         a fifth of the space) and nest a :class:`SearchReport` into the
         result; ``None`` or ``"exhaustive"`` is the legacy exhaustive
-        path, unchanged."""
+        path, unchanged.
+
+        ``engine`` lends an open (usually persistent, ``with``-entered)
+        :class:`SweepEngine` whose warm process pool is reused instead of
+        constructing one per call; it is used as-is and never closed, and
+        its ``workers``/``return_timelines`` settings win over the
+        same-named arguments here."""
         return_timelines = return_timelines or self.collect_timeline
         if strategy not in (None, "exhaustive"):
             from ..search import run_search     # search builds on api
             return run_search(self, strategy=strategy, budget=search_budget,
                               seed=seed or 0, workers=workers,
-                              return_timelines=return_timelines)
+                              return_timelines=return_timelines,
+                              engine=engine)
         if search_budget is not None or seed is not None:
             # never let a "capped" sweep silently run the whole product
             raise ValueError("search_budget/seed only apply to guided "
                              "search; pass strategy='random'/'sh'/'evolve'")
         if self.hardware_search is not None:
-            return self._sweep_hardware(workers, return_timelines)
+            return self._sweep_hardware(workers, return_timelines, engine)
         if self.search is None:
             if self.plan is not None:   # degenerate single-point sweep
                 plans = [self.plan]
@@ -521,9 +553,10 @@ class Experiment:
                 self.hardware_spec, self.global_batch,
                 training=self.training, arch=self.arch_config)
         from .sweep import SweepEngine
-        return SweepEngine(workers=workers,
-                           return_timelines=return_timelines,
-                           trace_resources=self.collect_timeline).sweep(self, plans)
+        eng = engine if engine is not None else SweepEngine(
+            workers=workers, return_timelines=return_timelines,
+            trace_resources=self.collect_timeline)
+        return eng.sweep(self, plans)
 
     def _hardware_label(self, num_hardware: int) -> str:
         """Report hardware name: the base spec for single-machine sweeps,
@@ -556,7 +589,8 @@ class Experiment:
         return [self.plan]
 
     def _sweep_hardware(self, workers: int,
-                        return_timelines: bool = False) -> SweepReport:
+                        return_timelines: bool = False,
+                        engine: Optional["SweepEngine"] = None) -> SweepReport:
         """Merged hardware x plan sweep: flatten every variant's plan list
         into one (variant, plan) job stream and evaluate it through one
         shared process pool (workers are initialized once with all variant
@@ -577,8 +611,10 @@ class Experiment:
                 continue
             jobs.extend((len(kept), p) for p in plans)
             kept.append(spec)
-        engine = SweepEngine(workers=workers, return_timelines=return_timelines,
-                             trace_resources=self.collect_timeline)
+        if engine is None:
+            engine = SweepEngine(workers=workers,
+                                 return_timelines=return_timelines,
+                                 trace_resources=self.collect_timeline)
         report = engine.sweep_jobs(
             self, kept, jobs,
             hardware_name=self._hardware_label(len(specs)),

@@ -164,6 +164,11 @@ class SweepReport:
     # variant name -> HardwareSpec dict for hardware x plan sweeps, so the
     # winning machine is recoverable from the report alone (co-design)
     hardware_specs: Dict[str, Dict[str, Any]] = field(default_factory=dict)
+    # representative per-outcome diagnostics (capped; counters above stay
+    # exact): memory-pruned plans carry peak/cap/deficit bytes, failed
+    # plans the raised error — so planners can say *why* nothing fit
+    pruned_records: List[Dict[str, Any]] = field(default_factory=list)
+    failed_records: List[Dict[str, Any]] = field(default_factory=list)
     # guided-search accounting (repro.search): per-rung history, sims per
     # fidelity, best-so-far curve. None for exhaustive sweeps.
     search: Optional["SearchReport"] = None

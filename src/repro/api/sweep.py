@@ -71,6 +71,17 @@ Job = Tuple[int, ParallelPlan]
 # lanes go first, FD/BD last (they carry the pipeline structure)
 _LANE_DROP_ORDER = (KIND_DRAM, KIND_NOC, KIND_GU, KIND_BD, KIND_FD)
 
+# cap on per-outcome diagnostic records kept in a SweepReport (counters
+# stay exact; records exist so planners can explain representative
+# failures, not to mirror the whole job stream)
+_MAX_RECORDS = 128
+
+
+def _plan_summary(plan: ParallelPlan) -> Dict:
+    """Compact identity of a plan for pruned/failed diagnostics."""
+    return {"pp": plan.pp, "dp": plan.dp, "tp": plan.tp,
+            "microbatch": plan.microbatch}
+
 
 def _lane_codes(lanes) -> Optional[Tuple[int, ...]]:
     """Normalize a lane filter (names or kind codes) to sorted codes."""
@@ -136,7 +147,20 @@ def _evaluate(exp, plan: ParallelPlan, graph_cache: Dict,
     ``fidelity`` optionally cheapens the simulation (coarser NoC model
     and/or fewer microbatches) for multi-fidelity search rungs; the graph
     memo is unaffected because the per-iteration batch
-    (``microbatch * dp``) does not change."""
+    (``microbatch * dp``) does not change.
+
+    Memory-pruned jobs carry a diagnostic payload (peak/cap/deficit
+    bytes) so planners can explain *why* nothing was feasible instead of
+    raising a bare error; :meth:`SweepEngine.sweep_jobs` merges it with
+    the job's plan/hardware identity into ``SweepReport.pruned_records``.
+
+    With ``exp.serving`` set (a :class:`repro.serving.system.ServingSpec`)
+    the job is scored by the traffic-driven serving simulator instead of
+    one pipeline iteration: ``RunReport.throughput`` becomes the SLO
+    *goodput* (requests meeting both SLOs per second), the full
+    :class:`ServingReport` dict rides in ``extra["serving"]``, and the
+    per-request trace ships back when timelines were requested. The
+    pre-simulation memory pruning is unchanged."""
     try:
         noc_mode = exp.noc_mode
         if fidelity is not None:
@@ -157,8 +181,34 @@ def _evaluate(exp, plan: ParallelPlan, graph_cache: Dict,
         mem_plan = None
         if exp.memory_cap is not None:
             mem_plan = plan_memory(mapped)
-            if max(m.total for m in mem_plan[0]) > exp.memory_cap:
-                return (_PRUNED, None)
+            peak = max(m.total for m in mem_plan[0])
+            if peak > exp.memory_cap:
+                return (_PRUNED, {"peak_bytes": peak,
+                                  "cap_bytes": exp.memory_cap,
+                                  "deficit_bytes": peak - exp.memory_cap})
+        serving = getattr(exp, "serving", None)
+        if serving is not None:
+            from ..serving.system import ServingSimulator  # lazy: no cycle
+            ssim = ServingSimulator(
+                exp.arch_config, hw, plan, serving, noc_mode=noc_mode,
+                boundary_mode=exp.boundary_mode,
+                collect_trace=return_timelines or trace_resources)
+            srep = ssim.run()
+            report = RunReport(
+                arch=exp.arch_name, hardware=hw.name, plan=plan,
+                total_time=srep.sim_time, throughput=srep.goodput_rps,
+                bubble_ratio=0.0,
+                peak_memory_bytes=(max(m.total for m in mem_plan[0])
+                                   if mem_plan is not None else 0.0),
+                recompute=False,
+                event_count=srep.steps.get("events", 0),
+                noc_bytes=0.0, dram_bytes=0.0,
+                extra={"serving": srep.to_dict()},
+                trace=srep.trace if return_timelines else None)
+            if return_timelines:
+                report = _apply_trace_policy(report, trace_lanes,
+                                             trace_budget_bytes)
+            return (_OK, report)
         # compute lanes are always recorded; resource busy lanes stay off
         # unless the experiment asked for them (collect_timeline=True) so
         # default timeline sweeps keep pool payloads lean
@@ -261,6 +311,9 @@ class SweepEngine:
         self._persist = False
         self._pool: Optional[ProcessPoolExecutor] = None
         self._pool_key: Optional[Tuple[bytes, bytes]] = None
+        # how many process pools this engine has created (tests assert a
+        # persistent engine initializes exactly once across planner calls)
+        self.pool_inits = 0
         # serial-path graph memo kept warm across calls in persistent mode
         self._memo_exp = None
         self._memo_graphs: Dict = {}
@@ -314,13 +367,26 @@ class SweepEngine:
 
         runs: List[RunReport] = []
         pruned = failed = 0
-        for tag, payload in outcomes:
+        pruned_records: List[Dict] = []
+        failed_records: List[Dict] = []
+        for job, (tag, payload) in zip(jobs, outcomes):
             if tag == _OK:
                 runs.append(payload)
-            elif tag == _PRUNED:
+                continue
+            variant, plan = job[0], job[1]
+            record = {"plan": _plan_summary(plan),
+                      "hardware": specs[variant].name}
+            if tag == _PRUNED:
                 pruned += 1
+                if isinstance(payload, dict):
+                    record.update(payload)
+                if len(pruned_records) < _MAX_RECORDS:
+                    pruned_records.append(record)
             else:
                 failed += 1
+                record["reason"] = payload
+                if len(failed_records) < _MAX_RECORDS:
+                    failed_records.append(record)
         runs.sort(key=lambda r: -r.throughput)
         return SweepReport(
             arch=exp.arch_name,
@@ -331,6 +397,8 @@ class SweepEngine:
             num_failed=failed + extra_failed,
             executor=executor,
             num_hardware=num_hardware,
+            pruned_records=pruned_records,
+            failed_records=failed_records,
         )
 
     def evaluate_jobs(self, exp, specs: Sequence[HardwareSpec],
@@ -362,9 +430,11 @@ class SweepEngine:
                             max_workers=self.workers,
                             initializer=_init_worker, initargs=initargs)
                         self._pool_key = key
+                        self.pool_inits += 1
                     return (list(self._pool.map(_eval_in_worker, jobs)),
                             f"process[{self.workers}]")
                 n = min(self.workers, len(jobs))
+                self.pool_inits += 1
                 with ProcessPoolExecutor(
                         max_workers=n,
                         initializer=_init_worker,

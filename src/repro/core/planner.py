@@ -34,6 +34,8 @@ from .hardware import HardwareSpec, tpu_v5e_pod
 
 if TYPE_CHECKING:                       # api builds on core; keep it lazy
     from ..api import HardwareSearchSpace, RunReport, SweepReport
+    from ..api.sweep import SweepEngine
+    from ..serving.system import ServingSpec
     from .parallelism import ParallelPlan
 
 __all__ = ["PlannerCfg", "CodesignResult", "plan_parallelism", "plan_codesign"]
@@ -63,6 +65,10 @@ class PlannerCfg:
     search_strategy: str = "exhaustive"
     search_budget: Optional[int] = None
     search_seed: Optional[int] = None      # guided strategies only; 0 default
+    # SLO-aware serving objective: with objective="slo" candidates are
+    # scored by SLO goodput under this traffic spec (the traffic-driven
+    # serving simulator) instead of one training-iteration step time
+    slo: Optional["ServingSpec"] = None
 
 
 @dataclass
@@ -79,6 +85,7 @@ class CodesignResult:
     plan: "ParallelPlan"
     run: "RunReport"
     report: "SweepReport" = field(repr=False)
+    objective: str = "throughput"        # "throughput" | "slo"
 
     @property
     def throughput(self) -> float:
@@ -89,6 +96,7 @@ class CodesignResult:
         return {
             "hardware": self.hardware.to_dict(),
             "plan": plan_to_dict(self.plan),
+            "objective": self.objective,
             "throughput": self.run.throughput,
             "total_time": self.run.total_time,
             "bubble_ratio": self.run.bubble_ratio,
@@ -102,16 +110,51 @@ class CodesignResult:
 
     def summary(self) -> str:
         p = self.plan
+        unit = ("req/s SLO goodput" if self.objective == "slo"
+                else "samples/s")
         return (f"{self.hardware.name}: pp={p.pp} dp={p.dp} tp={p.tp} "
                 f"mb={p.microbatch} {p.schedule}/{p.layout} -> "
-                f"{self.run.throughput:.2f} samples/s")
+                f"{self.run.throughput:.2f} {unit}")
+
+
+def _resolve_objective(cfg: PlannerCfg, objective: str) -> Optional["ServingSpec"]:
+    """Validate the scoring objective; returns the ServingSpec for "slo"."""
+    if objective == "throughput":
+        return None
+    if objective != "slo":
+        raise ValueError(f"unknown objective {objective!r}; "
+                         "known: throughput, slo")
+    from ..serving.system import ServingSpec    # jax-free simulation half
+    return cfg.slo if cfg.slo is not None else ServingSpec()
 
 
 def _make_experiment(arch: ArchConfig, hardware: Optional[HardwareSpec],
-                     cfg: PlannerCfg):
+                     cfg: PlannerCfg,
+                     serving: Optional["ServingSpec"] = None):
     from ..api import Experiment, SearchSpace   # api builds on core
 
     hardware = hardware or tpu_v5e_pod()
+    if serving is not None:
+        # SLO objective: score candidates on decode traffic — the plan's
+        # own batch is resized per engine step by the StepCostModel, so
+        # global_batch only gates which dp splits enumerate
+        return Experiment(
+            arch=arch,
+            hardware=hardware,
+            search=SearchSpace(
+                layouts=tuple(cfg.layouts),
+                microbatch_sizes=(1,),
+                max_plans=cfg.max_plans,
+            ),
+            hardware_search=cfg.hardware_search,
+            seq_len=cfg.seq_len,
+            global_batch=serving.max_batch,
+            training=False,
+            decode=True,
+            noc_mode=cfg.noc_mode,
+            memory_cap=cfg.memory_cap,
+            serving=serving,
+        )
     return Experiment(
         arch=arch,
         hardware=hardware,
@@ -148,6 +191,8 @@ def plan_parallelism(
     hardware: Optional[HardwareSpec] = None,
     cfg: PlannerCfg = PlannerCfg(),
     strategy: Optional[str] = None,
+    objective: str = "throughput",
+    engine: Optional["SweepEngine"] = None,
 ):
     """Sweep (pp, dp, tp, microbatch, layout, schedule) and rank by
     simulated throughput. Returns sorted RunReports (best first).
@@ -160,9 +205,16 @@ def plan_parallelism(
 
     ``strategy`` (or ``cfg.search_strategy``) other than ``"exhaustive"``
     runs a guided budgeted search instead of the full product.
+
+    ``objective="slo"`` ranks candidates by SLO goodput under the traffic
+    spec in ``cfg.slo`` (the serving simulator) instead of training step
+    throughput; each report's full :class:`ServingReport` dict rides in
+    ``.extra["serving"]``. ``engine`` lends an open persistent
+    :class:`SweepEngine` whose warm pool is reused (never closed here).
     """
-    exp = _make_experiment(arch, hardware, cfg)
-    return exp.sweep(**_sweep_kwargs(cfg, strategy)).runs
+    exp = _make_experiment(arch, hardware, cfg,
+                           serving=_resolve_objective(cfg, objective))
+    return exp.sweep(engine=engine, **_sweep_kwargs(cfg, strategy)).runs
 
 
 def plan_codesign(
@@ -170,6 +222,8 @@ def plan_codesign(
     hardware: Optional[HardwareSpec] = None,
     cfg: PlannerCfg = PlannerCfg(),
     strategy: Optional[str] = None,
+    objective: str = "throughput",
+    engine: Optional["SweepEngine"] = None,
 ) -> CodesignResult:
     """Joint hardware/parallelism co-design (§VI): rank the flattened
     (hardware variant x plan) product and return the best pair as a
@@ -181,12 +235,19 @@ def plan_codesign(
     runs the §VI loop as a guided budgeted search (see
     :mod:`repro.search`); the ranked report then carries a nested
     :class:`~repro.search.SearchReport`.
+
+    ``objective="slo"`` co-designs for *serving*: every (hardware, plan)
+    pair is scored by SLO goodput under ``cfg.slo`` traffic, so a machine
+    that wins on training step time can lose to one with the bandwidth
+    headroom decode traffic actually needs. ``engine`` lends an open
+    persistent :class:`SweepEngine` (reused, never closed here).
     """
     if cfg.hardware_search is None:
         raise ValueError("plan_codesign needs cfg.hardware_search (use "
                          "plan_parallelism for a parallelism-only sweep)")
-    exp = _make_experiment(arch, hardware, cfg)
-    report = exp.sweep(**_sweep_kwargs(cfg, strategy))
+    exp = _make_experiment(arch, hardware, cfg,
+                           serving=_resolve_objective(cfg, objective))
+    report = exp.sweep(engine=engine, **_sweep_kwargs(cfg, strategy))
     best = report.best
     if best is None:
         raise RuntimeError(
@@ -206,4 +267,4 @@ def plan_codesign(
             "HardwareSpec (custom topology without a declarative spec); "
             "build the base hardware from a TopologySpec to co-design")
     return CodesignResult(hardware=spec, plan=best.plan, run=best,
-                          report=report)
+                          report=report, objective=objective)

@@ -45,7 +45,9 @@ except ImportError:         # pragma: no cover - exercised by CI bench-smoke
 
 __all__ = [
     "KIND_FD", "KIND_BD", "KIND_GU", "KIND_NOC", "KIND_DRAM",
+    "KIND_PREFILL", "KIND_DECODE", "KIND_QUEUE",
     "KIND_NAMES", "KIND_CODES", "COMPUTE_KINDS", "RESOURCE_KINDS",
+    "REQUEST_KINDS",
     "TraceRow", "Trace", "TraceRecorder", "TraceDiff", "chrome_trace",
     "diff",
 ]
@@ -53,11 +55,17 @@ __all__ = [
 # event-kind enum codes (paper Fig. 4/5 taxonomy + resource lanes)
 KIND_FD, KIND_BD, KIND_GU = 0, 1, 2        # compute lanes (per stage)
 KIND_NOC, KIND_DRAM = 3, 4                 # resource busy-interval lanes
+# per-request serving lanes (repro.serving.system): the `resource` column
+# carries the request id, `micro` the batching episode (bumped on each
+# eviction/resume), `stage` stays -1
+KIND_PREFILL, KIND_DECODE, KIND_QUEUE = 5, 6, 7
 
-KIND_NAMES: Tuple[str, ...] = ("FD", "BD", "GU", "NOC", "DRAM")
+KIND_NAMES: Tuple[str, ...] = ("FD", "BD", "GU", "NOC", "DRAM",
+                               "PREFILL", "DECODE", "QUEUE")
 KIND_CODES: Dict[str, int] = {name: code for code, name in enumerate(KIND_NAMES)}
 COMPUTE_KINDS: Tuple[int, ...] = (KIND_FD, KIND_BD, KIND_GU)
 RESOURCE_KINDS: Tuple[int, ...] = (KIND_NOC, KIND_DRAM)
+REQUEST_KINDS: Tuple[int, ...] = (KIND_PREFILL, KIND_DECODE, KIND_QUEUE)
 
 _SCHEMA = 1
 _MAGIC = b"PTRC"
@@ -600,6 +608,18 @@ class TraceRecorder:
         self._start.append(start)
         self._end.append(end)
 
+    def request(self, kind: int, request_id: int, episode: int,
+                start: float, end: float) -> None:
+        """One per-request serving span (PREFILL/DECODE/QUEUE): the
+        ``resource`` column carries the request id and ``micro`` the
+        batching episode (bumped each time a preempted request resumes)."""
+        self._stage.append(-1)
+        self._kind.append(kind)
+        self._micro.append(episode)
+        self._resource.append(request_id)
+        self._start.append(start)
+        self._end.append(end)
+
     def interval_cb(self, kind: int, resource_id: int) -> Callable[[float, float], None]:
         """Busy-interval callback for one resource (what
         :class:`~repro.core.events.Resource` calls on busy->idle)."""
@@ -618,7 +638,7 @@ class TraceRecorder:
 # Chrome / Perfetto export
 # ---------------------------------------------------------------------------
 
-_PID_STAGES, _PID_NOC, _PID_DRAM = 0, 1, 2
+_PID_STAGES, _PID_NOC, _PID_DRAM, _PID_REQUESTS = 0, 1, 2, 3
 
 
 def chrome_trace(trace: Trace, label: str = "palm") -> Dict[str, Any]:
@@ -626,13 +646,15 @@ def chrome_trace(trace: Trace, label: str = "palm") -> Dict[str, Any]:
     (load via chrome://tracing or https://ui.perfetto.dev).
 
     Pipeline stages are threads of process 0 (one row per stage); NoC link
-    and DRAM channel busy intervals are threads of processes 1 and 2.
-    Timestamps are microseconds (the format's unit); durations are
-    complete events (``ph: "X"``)."""
+    and DRAM channel busy intervals are threads of processes 1 and 2;
+    serving per-request lanes (PREFILL/DECODE/QUEUE spans, one thread per
+    request id) are threads of process 3. Timestamps are microseconds (the
+    format's unit); durations are complete events (``ph: "X"``)."""
     events: List[Dict[str, Any]] = []
     for pid, name in ((_PID_STAGES, f"{label}: pipeline stages"),
                       (_PID_NOC, f"{label}: NoC links"),
-                      (_PID_DRAM, f"{label}: DRAM channels")):
+                      (_PID_DRAM, f"{label}: DRAM channels"),
+                      (_PID_REQUESTS, f"{label}: requests")):
         events.append({"ph": "M", "pid": pid, "name": "process_name",
                        "args": {"name": name}})
     seen_tids = set()
@@ -642,6 +664,11 @@ def chrome_trace(trace: Trace, label: str = "palm") -> Dict[str, Any]:
             name = f"{KIND_NAMES[r.kind]} mb{r.micro}"
             args: Dict[str, Any] = {"micro": r.micro}
             tname = f"stage {r.stage}"
+        elif r.kind in REQUEST_KINDS:
+            pid, tid = _PID_REQUESTS, r.resource
+            name = f"{KIND_NAMES[r.kind]} ep{r.micro}"
+            args = {"episode": r.micro}
+            tname = f"req {r.resource}"
         else:
             pid = _PID_NOC if r.kind == KIND_NOC else _PID_DRAM
             tid = r.resource

@@ -1,6 +1,58 @@
-"""Serving runtime: batched prefill + decode with sharded KV/SSM caches."""
+"""Serving: batched prefill/decode runtime + traffic-driven system simulator.
 
-from .serve import make_prefill_step, make_serve_step, greedy_generate, plan_serving
+Two halves:
 
-__all__ = ["make_prefill_step", "make_serve_step", "greedy_generate",
-           "plan_serving"]
+* runtime (``serve``) — jax prefill/decode step factories with sharded
+  KV/SSM caches (:func:`make_serve_step`, :func:`greedy_generate`);
+* simulation (``workload`` / ``batcher`` / ``system`` / ``planner``) —
+  dependency-free request-level serving simulator (continuous batching,
+  KV-cache pressure, SLO metrics) built on the PALM event core.
+
+The jax runtime is imported lazily so the simulation half (and
+``python -m repro serve-sim`` / ``serve-plan``) works in jax-free
+environments.
+"""
+
+from typing import TYPE_CHECKING
+
+from .batcher import ActiveRequest, ContinuousBatcher, KVCacheModel
+from .planner import plan_serving
+from .system import (
+    ServingReport,
+    ServingSimulator,
+    ServingSpec,
+    StepCostModel,
+    simulate_serving,
+)
+from .workload import Request, WorkloadSpec, workload_from_json, workload_to_json
+
+if TYPE_CHECKING:                       # jax runtime half (lazy at runtime)
+    from .serve import greedy_generate, make_prefill_step, make_serve_step
+
+__all__ = [
+    "ActiveRequest",
+    "ContinuousBatcher",
+    "KVCacheModel",
+    "Request",
+    "ServingReport",
+    "ServingSimulator",
+    "ServingSpec",
+    "StepCostModel",
+    "WorkloadSpec",
+    "greedy_generate",
+    "make_prefill_step",
+    "make_serve_step",
+    "plan_serving",
+    "simulate_serving",
+    "workload_from_json",
+    "workload_to_json",
+]
+
+_JAX_EXPORTS = ("make_prefill_step", "make_serve_step", "greedy_generate")
+
+
+def __getattr__(name: str):
+    if name in _JAX_EXPORTS:
+        from . import serve
+        return getattr(serve, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -12,67 +12,19 @@ mapped to TPU.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from ..configs.base import ArchConfig
 from ..models.lm import RunCfg, decode_step, forward, init_cache
 from ..parallel.sharding import ShardingPlanner
+from .planner import plan_serving
 
 __all__ = ["make_serve_step", "make_prefill_step", "greedy_generate",
            "plan_serving"]
-
-
-def plan_serving(arch: "ArchConfig | str", hardware="tpu_v5e", batch: int = 8,
-                 context_len: int = 4096, workers: int = 0,
-                 collect_timeline: bool = False):
-    """Pick a ``(data, model)`` mesh split for serving by sweeping
-    decode-step parallelism through the PALM simulator.
-
-    The decode graph (1-token step against a ``context_len`` KV cache) is
-    swept over ``dp x tp`` splits of the device count — the same two axes
-    :func:`make_serve_step`'s ShardingPlanner shards over (KV-cache batch
-    on ``data``, heads/features on ``model``). Returns ``(mesh_axes,
-    SweepReport)`` where ``mesh_axes`` is ``{"data": dp, "model": tp}``
-    for the highest simulated decode throughput.
-
-    ``collect_timeline=True`` attaches each candidate's columnar event
-    timeline to ``RunReport.trace`` — the *same*
-    :class:`~repro.core.trace.Trace` schema training simulations emit, so
-    serving and training timelines can be compared (or rendered through
-    :func:`repro.core.trace.chrome_trace`) side by side.
-    """
-    from ..api import Experiment, Layout, SearchSpace, resolve_hardware
-    from ..configs import get_config
-
-    arch = get_config(arch) if isinstance(arch, str) else arch
-    hw = resolve_hardware(hardware)
-    n = hw.num_devices
-    degrees = [(1, dp, n // dp) for dp in range(1, n + 1)
-               if n % dp == 0 and batch % dp == 0]
-    # one layout and max_plans == len(degrees): every split is simulated
-    # (the diversity budget would otherwise keep layout duplicates of
-    # low-dp splits and drop the high-dp ones)
-    report = Experiment(
-        arch=arch,
-        hardware=hw,
-        search=SearchSpace(degrees=degrees, microbatch_sizes=(1,),
-                           layouts=(Layout.S_SHAPE,),
-                           max_plans=len(degrees) or 1),
-        seq_len=context_len,
-        global_batch=batch,
-        training=False,
-        decode=True,
-        collect_timeline=collect_timeline,   # full NoC/DRAM lanes in traces
-    ).sweep(workers=workers)
-    if report.best is None:
-        raise RuntimeError(f"no feasible serving split for {arch.name} on {hw.name}")
-    best = report.best.plan
-    return {"data": best.dp, "model": best.tp}, report
 
 
 def _mesh_cfg(cfg: RunCfg, mesh: Optional[Mesh]) -> RunCfg:

@@ -1,0 +1,476 @@
+"""Traffic-driven serving simulator: workload generators, continuous
+batching / KV pressure, SLO metrics, the serving-scored sweep path, and
+SLO-aware co-design (the serving-subsystem PR)."""
+
+import json
+import math
+from pathlib import Path
+
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import ArchConfig
+from repro.serving.batcher import ContinuousBatcher, KVCacheModel
+from repro.serving.system import ServingReport, ServingSpec, StepCostModel, simulate_serving
+from repro.serving.workload import (
+    Request,
+    WorkloadSpec,
+    workload_from_json,
+    workload_to_json,
+)
+
+GOLDEN = Path(__file__).parent / "data" / "serving_golden.json"
+
+TINY_WORKLOAD = WorkloadSpec(rate=2.0, num_requests=10, seed=3,
+                             prompt_mean=64, decode_mean=8,
+                             prompt_cv=0.5, decode_cv=0.5)
+TINY_SPEC = ServingSpec(workload=TINY_WORKLOAD, max_batch=4, ctx_bucket=128)
+
+
+def _attn_arch(**kw) -> ArchConfig:
+    base = dict(name="toy-attn", family="test", num_layers=4, d_model=256,
+                n_heads=8, n_kv=4, d_ff=512, vocab=1000, head_dim=32)
+    base.update(kw)
+    return ArchConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# workload generators
+# ---------------------------------------------------------------------------
+
+def test_poisson_workload_is_seed_deterministic():
+    a = TINY_WORKLOAD.generate()
+    b = TINY_WORKLOAD.generate()
+    assert a == b
+    c = WorkloadSpec(rate=2.0, num_requests=10, seed=4,
+                     prompt_mean=64, decode_mean=8,
+                     prompt_cv=0.5, decode_cv=0.5).generate()
+    assert a != c
+    assert all(r.arrival <= s.arrival for r, s in zip(a, a[1:]))
+    assert all(r.decode_len >= 1 for r in a)
+
+
+def test_bursty_workload_generates_and_differs_from_poisson():
+    poisson = TINY_WORKLOAD.generate()
+    bursty = WorkloadSpec(kind="bursty", rate=2.0, num_requests=10, seed=3,
+                          prompt_mean=64, decode_mean=8,
+                          prompt_cv=0.5, decode_cv=0.5).generate()
+    assert len(bursty) == 10
+    assert [r.arrival for r in bursty] != [r.arrival for r in poisson]
+    assert all(r.arrival <= s.arrival for r, s in zip(bursty, bursty[1:]))
+
+
+def test_workload_trace_replay_round_trip():
+    reqs = TINY_WORKLOAD.generate()
+    replay = workload_from_json(workload_to_json(reqs))
+    assert replay.kind == "replay"
+    assert replay.generate() == reqs
+    # replay's offered rate spans the recorded arrivals
+    span = reqs[-1].arrival - reqs[0].arrival
+    assert replay.offered_rate == pytest.approx((len(reqs) - 1) / span)
+
+
+def test_workload_spec_dict_round_trip():
+    spec = WorkloadSpec(kind="bursty", rate=3.0, num_requests=7, seed=9,
+                        burst_factor=2.5)
+    assert WorkloadSpec.from_dict(spec.to_dict()) == spec
+
+
+def test_cv_zero_means_fixed_lengths():
+    reqs = WorkloadSpec(rate=1.0, num_requests=5, seed=0,
+                        prompt_mean=100, decode_mean=20).generate()
+    assert {r.prompt_len for r in reqs} == {100}
+    assert {r.decode_len for r in reqs} == {20}
+
+
+# ---------------------------------------------------------------------------
+# KV-cache model + batcher policy
+# ---------------------------------------------------------------------------
+
+def test_kv_cache_model_attention_bytes():
+    arch = _attn_arch()
+    kv = KVCacheModel.from_arch(arch, precision_bytes=2)
+    # 2 (K+V) x n_kv x head_dim x precision x layers per token
+    assert kv.per_token_bytes == 2 * 4 * 32 * 2 * 4
+    assert kv.fixed_bytes == 0
+    assert kv.request_bytes(10) == 10 * kv.per_token_bytes
+
+
+def test_kv_cache_model_window_caps_tokens():
+    kv = KVCacheModel.from_arch(_attn_arch(window=16), precision_bytes=2)
+    assert kv.request_bytes(8) == 8 * kv.per_token_bytes
+    assert kv.request_bytes(100) == 16 * kv.per_token_bytes
+
+
+def test_kv_cache_model_ssm_is_fixed_size():
+    arch = ArchConfig(name="toy-ssm", family="test", num_layers=2,
+                      d_model=256, n_heads=8, n_kv=8, d_ff=512, vocab=1000,
+                      block="ssm", ssm_state=64, d_inner=512, conv_width=4)
+    kv = KVCacheModel.from_arch(arch, precision_bytes=2)
+    assert kv.per_token_bytes == 0
+    assert kv.fixed_bytes == 2 * 2 * (512 * 64 + 512 * 4)
+    assert kv.request_bytes(1) == kv.request_bytes(10_000)
+
+
+def _batcher(budget, max_batch=4, policy="continuous"):
+    kv = KVCacheModel(per_token_bytes=1.0, fixed_bytes=0.0)
+    return ContinuousBatcher(kv, kv_budget_bytes=budget,
+                             max_batch=max_batch, policy=policy)
+
+
+def test_batcher_rejects_request_that_can_never_fit():
+    b = _batcher(budget=10.0)
+    assert b.add(Request(rid=0, arrival=0.0, prompt_len=8, decode_len=8),
+                 now=0.0) is None
+    assert len(b.rejected) == 1 and not b.waiting
+    assert b.add(Request(rid=1, arrival=0.0, prompt_len=4, decode_len=2),
+                 now=0.0) is not None
+
+
+def test_batcher_preempts_lifo_and_resumes_at_front():
+    b = _batcher(budget=20.0, max_batch=3)
+    for rid in range(3):
+        b.add(Request(rid=rid, arrival=0.0, prompt_len=4, decode_len=10),
+              now=0.0)
+    admitted = b.admit(now=0.0)
+    assert [a.rid for a in admitted] == [0, 1, 2]
+    b.finish_prefill(admitted, now=1.0)       # contexts 5 each -> 15 bytes
+    b.finish_decode(now=2.0)                  # 18 bytes, fits
+    retired, evicted = b.finish_decode(now=3.0)   # 21 bytes > 20: evict
+    assert not retired
+    assert [a.rid for a in evicted] == [2]    # LIFO: newest admission
+    assert b.waiting[0].rid == 2              # resumes at the queue front
+    victim = b.waiting[0]
+    assert victim.episode == 1 and victim.context == 0
+    assert victim.resume_context == 4 + victim.generated  # recompute-on-resume
+    assert b.preemptions == 1
+
+
+def test_batcher_never_evicts_last_running_request():
+    b = _batcher(budget=12.0, max_batch=2)
+    b.add(Request(rid=0, arrival=0.0, prompt_len=4, decode_len=8), now=0.0)
+    admitted = b.admit(now=0.0)
+    b.finish_prefill(admitted, now=1.0)
+    for step in range(6):                     # grows past the budget alone?
+        _, evicted = b.finish_decode(now=2.0 + step)
+        assert not evicted                    # deadlock guard: add() vetted it
+    assert len(b.running) == 1
+
+
+def test_static_policy_blocks_admission_until_batch_drains():
+    b = _batcher(budget=1e9, max_batch=2, policy="static")
+    for rid in range(3):
+        b.add(Request(rid=rid, arrival=0.0, prompt_len=2, decode_len=2),
+              now=0.0)
+    first = b.admit(now=0.0)
+    assert [a.rid for a in first] == [0, 1]
+    assert b.admit(now=1.0) == []             # batch still running
+    b.finish_prefill(first, now=1.0)
+    b.finish_decode(now=2.0)                  # both retire (decode_len=2)
+    assert not b.running
+    assert [a.rid for a in b.admit(now=3.0)] == [2]
+
+
+# ---------------------------------------------------------------------------
+# the serving simulator
+# ---------------------------------------------------------------------------
+
+def test_serving_report_bit_reproducible_and_round_trips():
+    a = simulate_serving("hymba-1.5b", "grayskull", None, TINY_SPEC)
+    b = simulate_serving("hymba-1.5b", "grayskull", None, TINY_SPEC)
+    assert a.to_json() == b.to_json()
+    back = ServingReport.from_json(a.to_json())
+    assert back.to_json() == a.to_json()
+    assert a.completed == TINY_SPEC.workload.num_requests
+    assert a.goodput_rps <= a.throughput_rps
+    assert 0.0 <= a.slo_attainment <= 1.0
+    # the SLO curve is monotone in the scale
+    atts = [pt["attainment"] for pt in a.slo_curve]
+    assert atts == sorted(atts)
+
+
+def test_serving_golden_report_fixture():
+    """The tiny Poisson run is locked down bit-for-bit. Regenerate with:
+    PYTHONPATH=src python tests/test_serving.py regen"""
+    got = simulate_serving("hymba-1.5b", "grayskull", None, TINY_SPEC).to_dict()
+    want = json.loads(GOLDEN.read_text())
+    assert got == want
+
+
+def _grayskull_kv() -> KVCacheModel:
+    """The exact KV model the simulator builds: hardware precision, not a
+    guessed one (grayskull serves at 1 byte/elem)."""
+    from repro.api.experiment import resolve_hardware
+    hw = resolve_hardware("grayskull")
+    return KVCacheModel.from_arch(get_config("hymba-1.5b"),
+                                  hw.precision_bytes)
+
+
+def test_kv_pressure_causes_preemption_and_recovery():
+    workload = WorkloadSpec(rate=50.0, num_requests=6, seed=0,
+                            prompt_mean=32, decode_mean=16)
+    kv = _grayskull_kv()
+    # three requests fit at prompt size but not at full context: decode
+    # growth pushes occupancy over the budget and forces an eviction
+    budget = kv.request_bytes(32 + 16) * 2.8
+    spec = ServingSpec(workload=workload, max_batch=4, ctx_bucket=64,
+                       kv_budget_bytes=budget)
+    rep = simulate_serving("hymba-1.5b", "grayskull", None, spec)
+    assert rep.preemptions > 0
+    assert rep.completed == 6                 # everyone finishes eventually
+    assert rep.kv_peak_bytes <= budget
+    assert rep.kv_budget_bytes == budget
+
+
+def test_serving_rejects_request_larger_than_budget():
+    workload = WorkloadSpec(rate=10.0, num_requests=4, seed=0,
+                            prompt_mean=512, decode_mean=8)
+    kv = _grayskull_kv()
+    spec = ServingSpec(workload=workload, max_batch=4, ctx_bucket=64,
+                       kv_budget_bytes=kv.request_bytes(100))
+    rep = simulate_serving("hymba-1.5b", "grayskull", None, spec)
+    assert rep.rejected == 4 and rep.completed == 0
+    assert rep.slo_attainment == 0.0          # rejections count as misses
+
+
+def test_continuous_beats_static_goodput_on_rigged_workload():
+    """The benchmark gate in miniature: high-variance decode lengths hold
+    static batches hostage while continuous batching recycles slots."""
+    def run(policy):
+        workload = WorkloadSpec(rate=1.0, num_requests=24, seed=1,
+                                prompt_mean=64, prompt_cv=0.5,
+                                decode_mean=16, decode_cv=2.0)
+        spec = ServingSpec(workload=workload, max_batch=4, ctx_bucket=128,
+                           policy=policy, slo_ttft_ms=1500.0,
+                           slo_tpot_ms=250.0)
+        return simulate_serving("hymba-1.5b", "grayskull", None, spec)
+    assert run("continuous").goodput_rps >= 1.5 * run("static").goodput_rps
+
+
+def test_step_cost_model_memoizes_by_bucket():
+    arch = get_config("hymba-1.5b")
+    from repro.api.experiment import resolve_hardware
+    from repro.core.parallelism import ParallelPlan
+    from repro.core.enums import Schedule
+    plan = ParallelPlan(pp=1, dp=1, tp=1, microbatch=1, global_batch=1,
+                        schedule=Schedule.GPIPE, training=False)
+    cost = StepCostModel(arch, resolve_hardware("grayskull"), plan,
+                         ctx_bucket=128)
+    a = cost.decode_cost(3, 100)
+    b = cost.decode_cost(4, 120)              # same batch/ctx buckets
+    assert a == b and cost.sims == 1
+    cost.decode_cost(4, 200)                  # new ctx bucket
+    assert cost.sims == 2
+    assert cost.prefill_cost(4, 120) != a     # prefill is a separate key
+    assert cost.sims == 3
+
+
+def test_derived_kv_budget_unbounded_on_inf_dram():
+    arch = get_config("hymba-1.5b")
+    from repro.api.experiment import resolve_hardware
+    from repro.core.parallelism import ParallelPlan
+    from repro.core.enums import Schedule
+    plan = ParallelPlan(pp=1, dp=1, tp=1, microbatch=1, global_batch=1,
+                        schedule=Schedule.GPIPE, training=False)
+    cost = StepCostModel(arch, resolve_hardware("grayskull"), plan,
+                         ctx_bucket=128)
+    assert math.isinf(cost.derive_kv_budget())
+
+
+# ---------------------------------------------------------------------------
+# per-request trace lanes
+# ---------------------------------------------------------------------------
+
+def _traced_report():
+    workload = WorkloadSpec(rate=50.0, num_requests=6, seed=0,
+                            prompt_mean=32, decode_mean=16)
+    kv = _grayskull_kv()
+    spec = ServingSpec(workload=workload, max_batch=4, ctx_bucket=64,
+                       kv_budget_bytes=kv.request_bytes(48) * 2.8)
+    return simulate_serving("hymba-1.5b", "grayskull", None, spec,
+                            collect_trace=True)
+
+
+def test_serving_trace_has_request_lanes_and_round_trips():
+    from repro.core.trace import (
+        KIND_DECODE, KIND_PREFILL, KIND_QUEUE, Trace,
+    )
+    rep = _traced_report()
+    trace = rep.trace
+    kinds = set(trace.kind)
+    assert {KIND_PREFILL, KIND_DECODE} <= kinds
+    assert KIND_QUEUE in kinds                # eviction re-queues requests
+    # resource column carries the request id; stage is -1 for request lanes
+    assert set(trace.stage) == {-1}
+    assert set(trace.resource) <= set(range(6))
+    # an evicted request decodes over more than one episode
+    assert max(trace.micro) >= 1
+    back = Trace.from_bytes(trace.to_bytes())
+    assert back.to_bytes() == trace.to_bytes()
+
+
+def test_serving_trace_npz_round_trip(tmp_path):
+    np = pytest.importorskip("numpy")  # noqa: F841 — npz needs numpy
+    from repro.core.trace import Trace
+    rep = _traced_report()
+    path = tmp_path / "serving.npz"
+    rep.trace.to_npz(path)
+    back = Trace.from_npz(path)
+    assert back.to_bytes() == rep.trace.to_bytes()
+
+
+def test_serving_chrome_trace_request_process():
+    from repro.core.trace import chrome_trace
+    rep = _traced_report()
+    doc = chrome_trace(rep.trace, label="serving")
+    events = doc["traceEvents"]
+    req = [e for e in events if e.get("pid") == 3 and e.get("ph") == "X"]
+    assert req, "per-request lanes missing from the Chrome export"
+    names = {e["name"] for e in req}
+    assert any(n.startswith("PREFILL ep") for n in names)
+    assert any(n.startswith("DECODE ep") for n in names)
+    meta = [e for e in events
+            if e.get("ph") == "M" and e.get("name") == "process_name"]
+    assert any("requests" in m["args"]["name"] for m in meta)
+    # thread ids are request ids
+    assert all(isinstance(e["tid"], int) for e in req)
+
+
+# ---------------------------------------------------------------------------
+# the serving-scored sweep path (Experiment.serving)
+# ---------------------------------------------------------------------------
+
+def _serving_experiment(workers_unused=None):
+    from repro.api import Experiment, SearchSpace
+    from repro.core.enums import Layout
+    return Experiment(
+        arch="hymba-1.5b", hardware="grayskull",
+        search=SearchSpace(degrees=[(1, 1, 4), (1, 2, 2), (1, 4, 1)],
+                           microbatch_sizes=(1,), layouts=(Layout.S_SHAPE,),
+                           max_plans=3),
+        seq_len=128, global_batch=4, training=False, decode=True,
+        serving=TINY_SPEC)
+
+
+def test_serving_sweep_serial_equals_pool_bit_for_bit():
+    exp = _serving_experiment()
+    serial, pooled = exp.sweep(workers=0).to_dict(), exp.sweep(workers=2).to_dict()
+    assert serial.pop("executor") == "serial"
+    assert pooled.pop("executor") == "process[2]"
+    assert serial == pooled
+    runs = serial["runs"]
+    assert all("serving" in r["extra"] for r in runs)
+    goodputs = [r["throughput"] for r in runs]
+    assert goodputs == sorted(goodputs, reverse=True)
+    # throughput IS the embedded report's goodput
+    for r in runs:
+        assert r["throughput"] == r["extra"]["serving"]["goodput_rps"]
+
+
+def test_serving_experiment_requires_inference_mode():
+    from repro.api import Experiment, SearchSpace
+    with pytest.raises(ValueError, match="training=False"):
+        Experiment(arch="hymba-1.5b", hardware="grayskull",
+                   search=SearchSpace(max_plans=1), serving=TINY_SPEC)
+
+
+# ---------------------------------------------------------------------------
+# planners: persistent engines, infeasibility diagnostics, SLO co-design
+# ---------------------------------------------------------------------------
+
+def test_plan_serving_reuses_persistent_engine_pool():
+    from repro.api.sweep import SweepEngine
+    from repro.serving.planner import plan_serving
+    with SweepEngine(workers=2) as eng:
+        mesh_a, report_a = plan_serving("yi-6b", "tpu_v5e_2x2", batch=4,
+                                        context_len=128, engine=eng)
+        mesh_b, report_b = plan_serving("yi-6b", "tpu_v5e_2x2", batch=4,
+                                        context_len=128, engine=eng)
+        # same spec both calls: the worker pool was initialized exactly once
+        assert eng.pool_inits == 1
+    assert mesh_a == mesh_b
+    assert report_a.executor == "process[2]"
+    assert {"data", "model"} <= set(mesh_a)
+    assert mesh_a["data"] * mesh_a["model"] == 4
+
+
+def test_plan_serving_explains_infeasibility():
+    from repro.serving.planner import plan_serving
+    with pytest.raises(RuntimeError) as err:
+        plan_serving("yi-6b", "tpu_v5e_2x2", batch=4, context_len=128,
+                     memory_cap=1e6)
+    msg = str(err.value)
+    assert "no feasible serving split" in msg
+    assert "memory-pruned" in msg
+    # every split is named with its per-tile deficit
+    assert "(dp=1, tp=4)" in msg and "(dp=4, tp=1)" in msg
+    assert "over the" in msg and "cap by" in msg
+
+
+def test_sweep_report_carries_pruning_records():
+    from repro.api import Experiment, SearchSpace
+    from repro.api.report import SweepReport
+    exp = Experiment(arch="yi-6b", hardware="tpu_v5e_2x2",
+                     search=SearchSpace(max_plans=3, microbatch_sizes=(1,)),
+                     seq_len=128, global_batch=8, memory_cap=1e6)
+    report = exp.sweep(workers=0)
+    assert report.num_pruned_memory == len(report.pruned_records) > 0
+    rec = report.pruned_records[0]
+    assert rec["deficit_bytes"] == rec["peak_bytes"] - rec["cap_bytes"] > 0
+    assert {"pp", "dp", "tp", "microbatch"} <= set(rec["plan"])
+    # records survive the report JSON round-trip
+    back = SweepReport.from_json(report.to_json())
+    assert back.pruned_records == report.pruned_records
+
+
+def test_plan_codesign_slo_objective_flips_the_winner():
+    """Rigged co-design space: the step-time objective picks a pipelined
+    plan on the 1x4 mesh (best training throughput); under a tight TPOT
+    SLO the serving objective needs tensor-parallel decode and picks the
+    2x2 mesh instead."""
+    from repro.api import HardwareSearchSpace
+    from repro.core.hardware import tpu_v5e_pod
+    from repro.core.planner import PlannerCfg, plan_codesign
+    arch = get_config("yi-6b")
+    hw = tpu_v5e_pod(2, 2)
+    slo = ServingSpec(
+        workload=WorkloadSpec(rate=8.0, num_requests=12, seed=0,
+                              prompt_mean=128, decode_mean=16),
+        max_batch=4, ctx_bucket=128, slo_ttft_ms=500.0, slo_tpot_ms=8.0)
+    cfg = PlannerCfg(global_batch=32, seq_len=256, microbatch_sizes=(1,),
+                     max_plans=8, slo=slo,
+                     hardware_search=HardwareSearchSpace(
+                         mesh_shapes=((1, 4), (2, 2))))
+    step = plan_codesign(arch, hw, cfg)
+    served = plan_codesign(arch, hw, cfg, objective="slo")
+    step_winner = (step.hardware.name, step.plan.pp, step.plan.dp, step.plan.tp)
+    slo_winner = (served.hardware.name, served.plan.pp, served.plan.dp,
+                  served.plan.tp)
+    assert step_winner != slo_winner
+    assert served.objective == "slo" and "req/s" in served.summary()
+    # the serving winner actually meets the SLO; the step-time winner's
+    # split does not (that is what makes the rig a rig)
+    best = served.run.extra["serving"]
+    assert best["slo"]["attainment"] > 0.5
+    ranked = {(r.hardware, r.plan.pp, r.plan.dp, r.plan.tp): r
+              for r in served.report.runs}
+    step_as_served = ranked.get(step_winner)
+    if step_as_served is not None:
+        assert step_as_served.throughput < served.run.throughput
+
+
+def test_plan_codesign_rejects_unknown_objective():
+    from repro.core.planner import PlannerCfg, plan_parallelism
+    with pytest.raises(ValueError, match="unknown objective"):
+        plan_parallelism(get_config("yi-6b"), None, PlannerCfg(),
+                         objective="latency")
+
+
+if __name__ == "__main__":
+    import sys
+    if len(sys.argv) > 1 and sys.argv[1] == "regen":
+        GOLDEN.parent.mkdir(parents=True, exist_ok=True)
+        doc = simulate_serving("hymba-1.5b", "grayskull", None,
+                               TINY_SPEC).to_dict()
+        GOLDEN.write_text(json.dumps(doc, indent=2) + "\n")
+        print(f"[golden fixture written to {GOLDEN}]")
