@@ -1,4 +1,5 @@
-"""Paper Fig. 6: ring all-reduce validation on 4 and 16 workers.
+"""Paper Fig. 6: ring all-reduce validation on 4 and 16 workers — plus
+the scale-out fabric collective-algorithm comparison.
 
 The paper validates PALM's NoC model against a real GPU system with ring
 topology from Astra-Sim 2.0 [38], claiming <=5% error. The published raw
@@ -9,13 +10,46 @@ follows at these sizes (bandwidth-dominated regime). We assert the
 detailed event-driven simulation matches that reference within 5% on 4
 and 16 workers across 1-128 MB, and additionally that the macro
 (O(1)-event) mode matches the detailed mode.
+
+The fabric section compares the cross-chip collective families
+(:mod:`repro.fabric`) — flat ring vs binomial tree vs hierarchical
+(per-level reduce-scatter/all-gather) — on the 2-node ``cluster_2x2``
+preset and an 8-chip 3-tier rack, gated on two properties:
+
+* every simulated cost respects the alpha-beta bandwidth lower bound;
+* hierarchical beats (or ties) the flat ring for small messages at the
+  higher chip count — the latency regime hierarchical collectives exist
+  for (fewer rounds, and upper-tier traffic shrunk by the level fan-in).
+
+Standalone (CI bench-smoke):
+
+    PYTHONPATH=src python benchmarks/bench_allreduce.py --tiny \
+        --json artifacts/bench_allreduce.json
 """
 
 from __future__ import annotations
 
+# allow `python benchmarks/bench_allreduce.py` (CI bench-smoke) in
+# addition to `python -m benchmarks.run --only allreduce`
+if __package__ in (None, ""):
+    import sys
+    from pathlib import Path
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+    __package__ = "benchmarks"
+
+import argparse
+import dataclasses
+import sys
+import time
+from pathlib import Path
+
 from repro.core import DRAMSpec, Environment, GPUCluster, HardwareSpec, NoCModel, TileSpec
 from repro.core.noc import collective_steps
-from .common import Report, pct_err
+from repro.core.topology import MeshSpec
+from repro.fabric import FabricSpec, alpha_beta_lower_bound, cluster_2x2, rack_2x2x2
+from repro.fabric.model import FabricModel
+
+from .common import Report, pct_err, write_bench_json
 
 GB = 1e9
 BW = 300 * GB
@@ -49,13 +83,99 @@ def reference_ring_time(p: int, nbytes: float) -> float:
     return steps * (nbytes / p / BW + 2 * LAT)
 
 
-def run(report: Report):
+# ---------------------------------------------------------------------------
+# Fabric collective families (cross-chip all-reduce)
+# ---------------------------------------------------------------------------
+
+def _fabric_hw(fabric: FabricSpec) -> HardwareSpec:
+    """One device per chip: intra-chip legs are no-ops, so the simulated
+    time is the pure fabric schedule cost."""
+    return HardwareSpec(
+        name=f"fab_{fabric.name}",
+        topology=MeshSpec(rows=1, cols=1, intra_bw=1e12),
+        tile=TileSpec(flops=1e12, sram_bytes=1e6),
+        dram=DRAMSpec(bandwidth=1e12),
+        fabric=fabric)
+
+
+def simulate_fabric_allreduce(fabric: FabricSpec, nbytes: float,
+                              collective: str, mode: str = "detailed") -> float:
+    spec = dataclasses.replace(fabric, collective=collective)
+    hw = _fabric_hw(spec)
+    env = Environment()
+    fm = FabricModel(env, hw, mode=mode)
+    group = list(range(spec.num_chips))      # one device per chip
+    proc = env.process(fm.collective("all_reduce", group, nbytes))
+    env.run(until_event=proc)
+    return env.now
+
+
+def fabric_allreduce_bound(fab: FabricSpec, nbytes: float) -> float:
+    """Per-level alpha-beta bandwidth bound for cluster all-reduce: the
+    payload entering level L is the level-(L-1) reduce-scatter output
+    ``n / chips_per_child(L)``, and no algorithm moves it across the
+    level in less than the ring term ``2(d-1)/d * payload / bw``."""
+    return sum(
+        alpha_beta_lower_bound("all_reduce", lvl.degree,
+                               nbytes / fab.chips_per_child(i), lvl.bandwidth)
+        for i, lvl in enumerate(fab.levels))
+
+
+def run_fabric(report: Report, tiny: bool = False) -> int:
+    """Ring vs tree vs hierarchical across message sizes; returns the
+    number of gate violations (0 = pass)."""
+    report.log()
+    report.log("== fabric: cross-chip all-reduce, ring vs tree vs "
+               "hierarchical ==")
+    presets = [("cluster_2x2", cluster_2x2()), ("rack_2x2x2", rack_2x2x2())]
+    sizes_kb = (64, 1024) if tiny else (64, 1024, 16384)
+    report.log(f"{'fabric':>12s} {'KB':>7s} {'ring(us)':>10s} "
+               f"{'tree(us)':>10s} {'hier(us)':>10s} {'bound(us)':>10s}")
+    violations = 0
+    small_kb = sizes_kb[0]
+    for name, fab in presets:
+        p = fab.num_chips
+        for kb in sizes_kb:
+            nbytes = kb * 1e3
+            times = {c: simulate_fabric_allreduce(fab, nbytes, c)
+                     for c in ("ring", "tree", "hierarchical")}
+            bound = fabric_allreduce_bound(fab, nbytes)
+            for c, t in times.items():
+                if t < bound * (1 - 1e-9):
+                    violations += 1
+                    report.log(f"  !! {name}/{c} @ {kb}KB beats the "
+                               f"alpha-beta bound ({t:.2e} < {bound:.2e})")
+                    report.add(f"fabric_bound_{name}_{c}_{kb}KB", t * 1e6,
+                               "MISMATCH")
+            report.log(f"{name:>12s} {kb:7d} {times['ring']*1e6:10.1f} "
+                       f"{times['tree']*1e6:10.1f} "
+                       f"{times['hierarchical']*1e6:10.1f} {bound*1e6:10.1f}")
+            report.add(f"fabric_allreduce_{name}_{kb}KB",
+                       times["hierarchical"] * 1e6,
+                       f"ring_us={times['ring']*1e6:.1f};"
+                       f"tree_us={times['tree']*1e6:.1f};"
+                       f"bound_us={bound*1e6:.1f}")
+            # latency-regime gate at the higher chip count
+            if kb == small_kb and p >= 8:
+                ok = times["hierarchical"] <= times["ring"] * (1 + 1e-9)
+                if not ok:
+                    violations += 1
+                report.add(f"fabric_hier_vs_ring_{name}", 0.0,
+                           f"hier_us={times['hierarchical']*1e6:.1f};"
+                           f"ring_us={times['ring']*1e6:.1f};"
+                           + ("ok" if ok else "MISMATCH"))
+    report.log(f"fabric gate violations: {violations}")
+    return violations
+
+
+def run(report: Report, tiny: bool = False):
     report.log("== Fig 6: ring all-reduce, PALM detailed vs reference ==")
     report.log(f"{'P':>3s} {'MB':>6s} {'detailed(us)':>13s} {'ref(us)':>10s} "
                f"{'macro(us)':>10s} {'err%':>6s}")
     worst = 0.0
+    sizes = (1, 16) if tiny else (1, 4, 16, 64, 128)
     for p in (4, 16):
-        for mb in (1, 4, 16, 64, 128):
+        for mb in sizes:
             nbytes = mb * 1e6
             t_det = simulate_allreduce(p, nbytes, "detailed")
             t_mac = simulate_allreduce(p, nbytes, "macro")
@@ -68,4 +188,29 @@ def run(report: Report):
                        f"ref_us={t_ref*1e6:.1f};err_pct={err:.2f}")
     report.log(f"worst error vs ring reference: {worst:.2f}% (paper: <=5%)")
     report.add("allreduce_worst_err", 0.0, f"worst_err_pct={worst:.2f}")
+    run_fabric(report, tiny=tiny)
     return worst
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="seconds-scale config for CI bench-smoke runs")
+    ap.add_argument("--json", type=Path, default=None, metavar="FILE",
+                    help="write the {rows, lines} JSON report here")
+    args = ap.parse_args(argv)
+
+    report = Report()
+    t0 = time.time()
+    run(report, tiny=args.tiny)
+    elapsed = time.time() - t0
+    report.log(f"[allreduce: {elapsed:.1f}s]")
+
+    if args.json is not None:
+        write_bench_json(report, "allreduce", args.tiny, elapsed, args.json)
+
+    return 1 if any(row.endswith("MISMATCH") for row in report.rows) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

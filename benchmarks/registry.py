@@ -21,7 +21,7 @@ class Suite:
 
 
 SUITES: List[Suite] = [
-    Suite("allreduce", "bench_allreduce", "Fig 6"),
+    Suite("allreduce", "bench_allreduce", "Fig 6 + fabric collectives"),
     Suite("congestion", "bench_congestion", "Fig 7"),
     Suite("megatron", "bench_megatron", "Table IV"),
     Suite("grayskull", "bench_grayskull", "Table V"),

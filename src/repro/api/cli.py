@@ -65,17 +65,46 @@ def _add_hardware(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--d-model", type=int, default=None,
                     help="calibrate the a100 sustained-GEMM efficiency curve "
                          "at this hidden size (a100x<N> only)")
+    ap.add_argument("--fabric", default=None, metavar="PRESET",
+                    help="attach a scale-out fabric preset (board_pair, "
+                         "cluster_2x2, rack_2x2x2) replicating the chip into "
+                         "a multi-chip cluster")
+    ap.add_argument("--fabric-json", type=Path, default=None, metavar="FILE",
+                    help="attach the FabricSpec in this JSON file (overrides "
+                         "--fabric; schema: `python -m repro fabric`)")
+
+
+def _resolve_fabric_args(args):
+    """FabricSpec from --fabric/--fabric-json (None when neither given)."""
+    if getattr(args, "fabric_json", None) is not None:
+        from ..fabric import FabricSpec
+        return FabricSpec.from_json(args.fabric_json.read_text())
+    if getattr(args, "fabric", None) is not None:
+        from ..fabric import FABRIC_PRESETS
+        builder = FABRIC_PRESETS.get(args.fabric)
+        if builder is None:
+            raise ValueError(f"unknown fabric preset {args.fabric!r}; "
+                             f"known: {', '.join(sorted(FABRIC_PRESETS))}")
+        return builder()
+    return None
 
 
 def _resolve_hardware_args(args) -> "HardwareSpec | str":
+    fabric = _resolve_fabric_args(args)
     if args.hardware_json is not None:
         if args.d_model is not None:
             raise ValueError("--d-model calibrates the a100x<N> preset; it "
                              "cannot recalibrate a --hardware-json file")
-        return HardwareSpec.from_json(args.hardware_json.read_text())
-    if args.d_model is not None:
-        return resolve_hardware(args.hardware, d_model=args.d_model)
-    return args.hardware
+        hw = HardwareSpec.from_json(args.hardware_json.read_text())
+    elif args.d_model is not None:
+        hw = resolve_hardware(args.hardware, d_model=args.d_model)
+    elif fabric is not None:
+        hw = resolve_hardware(args.hardware)
+    else:
+        return args.hardware
+    if fabric is not None:
+        hw = hw.with_(fabric=fabric)
+    return hw
 
 
 def _add_common(ap: argparse.ArgumentParser) -> None:
@@ -170,6 +199,13 @@ def _add_sweep_flags(ap: argparse.ArgumentParser) -> None:
                     help="DRAM channel counts to sweep")
     hw.add_argument("--hw-dram-bw", type=float, nargs="+", default=[],
                     help="DRAM channel bandwidths (bytes/s) to sweep")
+    hw.add_argument("--hw-fabric-bw", type=float, nargs="+", default=[],
+                    help="outermost fabric-level bandwidths (bytes/s) to "
+                         "sweep (hardware must carry a fabric: --fabric / "
+                         "--fabric-json)")
+    hw.add_argument("--hw-fabric-coll", nargs="+", default=[],
+                    choices=["hierarchical", "ring", "tree", "hd"],
+                    help="cross-chip collective families to sweep")
     hw.add_argument("--hw-max-specs", type=int, default=32,
                     help="cap on enumerated hardware variants")
 
@@ -183,11 +219,14 @@ def _hardware_search(args) -> Optional[HardwareSearchSpace]:
         mesh_shapes=tuple(args.hw_mesh),
         dram_channels=tuple(args.hw_dram_channels),
         dram_bandwidth=tuple(args.hw_dram_bw),
+        fabric_bw=tuple(args.hw_fabric_bw),
+        fabric_collectives=tuple(args.hw_fabric_coll),
         max_specs=args.hw_max_specs,
     )
     has_axes = any((space.tile_flops, space.sram_bytes, space.intra_bw,
                     space.inter_bw, space.mesh_shapes, space.dram_channels,
-                    space.dram_bandwidth))
+                    space.dram_bandwidth, space.fabric_bw,
+                    space.fabric_collectives))
     return space if has_axes else None
 
 
@@ -459,6 +498,26 @@ def _cmd_hardware(args) -> int:
     return 0
 
 
+def _cmd_fabric(args) -> int:
+    """Dump a FabricSpec as JSON (the --fabric-json schema)."""
+    from ..fabric import FABRIC_PRESETS, FabricSpec
+    if args.fabric_json is not None:
+        spec = FabricSpec.from_json(args.fabric_json.read_text())
+    else:
+        builder = FABRIC_PRESETS.get(args.preset)
+        if builder is None:
+            raise ValueError(f"unknown fabric preset {args.preset!r}; "
+                             f"known: {', '.join(sorted(FABRIC_PRESETS))}")
+        spec = builder()
+    text = spec.to_json(indent=2)
+    if args.json is None or str(args.json) == "-":
+        print(text)
+    else:
+        args.json.write_text(text + "\n")
+        print(f"[fabric spec written to {args.json}]", file=sys.stderr)
+    return 0
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro",
@@ -586,6 +645,19 @@ def main(argv: Optional[List[str]] = None) -> int:
     hwc.add_argument("--json", type=Path, default=None, metavar="FILE",
                      help="write the spec here instead of stdout")
     hwc.set_defaults(fn=_cmd_hardware)
+
+    fbc = sub.add_parser(
+        "fabric",
+        help="dump a fabric preset as tweakable --fabric-json JSON")
+    fbc.add_argument("--preset", default="cluster_2x2",
+                     help="fabric preset: board_pair, cluster_2x2, "
+                          "rack_2x2x2")
+    fbc.add_argument("--fabric-json", type=Path, default=None, metavar="FILE",
+                     help="round-trip this FabricSpec JSON file instead of "
+                          "a preset (validates the schema)")
+    fbc.add_argument("--json", type=Path, default=None, metavar="FILE",
+                     help="write the spec here instead of stdout")
+    fbc.set_defaults(fn=_cmd_fabric)
 
     args = ap.parse_args(argv)
     try:

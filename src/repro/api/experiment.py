@@ -245,12 +245,23 @@ class HardwareSearchSpace:
     mesh_shapes: Sequence[Tuple[int, int]] = ()
     dram_channels: Sequence[int] = ()
     dram_bandwidth: Sequence[float] = ()
+    # scale-out fabric axes (base hardware must carry a FabricSpec):
+    # bandwidth of the outermost fabric level, and the cross-chip
+    # collective family ("hierarchical"/"ring"/"tree"/"hd")
+    fabric_bw: Sequence[float] = ()
+    fabric_collectives: Sequence[str] = ()
     max_specs: int = 32
 
     def __post_init__(self):
         self.mesh_shapes = tuple((int(r), int(c)) for r, c in self.mesh_shapes)
         if self.max_specs < 1:
             raise ValueError("max_specs must be >= 1")
+        from ..fabric.spec import COLLECTIVE_FAMILIES  # pure data, no cycle
+        for fam in self.fabric_collectives:
+            if fam not in COLLECTIVE_FAMILIES:
+                raise ValueError(
+                    f"unknown fabric collective {fam!r}; "
+                    f"expected one of {COLLECTIVE_FAMILIES}")
 
     # axis name -> (values, variant-name tag, formatter)
     def _axes(self):
@@ -262,6 +273,8 @@ class HardwareSearchSpace:
             ("mesh_shape", self.mesh_shapes, "mesh", lambda v: f"{v[0]}x{v[1]}"),
             ("dram_channels", self.dram_channels, "ch", str),
             ("dram_bandwidth", self.dram_bandwidth, "dram", _fmt),
+            ("fabric_bw", self.fabric_bw, "fab", _fmt),
+            ("fabric_collective", self.fabric_collectives, "coll", str),
         ]
 
     def enumerate_specs(self, base: HardwareSpec) -> List[HardwareSpec]:
@@ -308,12 +321,29 @@ class HardwareSearchSpace:
                                                  dram_ports)
             topo_spec = new_spec
 
+        fabric = base.fabric
+        fabric_axes = {k for k in ("fabric_bw", "fabric_collective")
+                       if k in chosen}
+        if fabric_axes:
+            if fabric is None:
+                raise ValueError(
+                    f"hardware {base.name!r} has no fabric spec; fabric axes "
+                    "(fabric_bw/fabric_collectives) need one")
+            if "fabric_bw" in chosen:
+                # the outermost level is the usual bottleneck — that's the
+                # knob worth sweeping
+                top = fabric.num_levels - 1
+                fabric = fabric.with_level(top, bandwidth=chosen["fabric_bw"])
+            if "fabric_collective" in chosen:
+                fabric = dataclasses.replace(
+                    fabric, collective=chosen["fabric_collective"])
+
         name = base.name + ("~" + "~".join(tags) if tags else "")
         return HardwareSpec(
             name=name,
             topology=topo_spec if topo_spec is not None else base.topology,
             tile=tile, dram=dram, dram_ports=dram_ports,
-            precision_bytes=base.precision_bytes)
+            precision_bytes=base.precision_bytes, fabric=fabric)
 
     @staticmethod
     def _mutate_topology(spec: TopologySpec, axes: dict) -> TopologySpec:

@@ -49,6 +49,7 @@ from ..core.trace import (
     KIND_BD,
     KIND_CODES,
     KIND_DRAM,
+    KIND_FABRIC,
     KIND_FD,
     KIND_GU,
     KIND_NAMES,
@@ -69,7 +70,7 @@ Job = Tuple[int, ParallelPlan]
 
 # lane-drop priority when a trace payload budget is exceeded: resource
 # lanes go first, FD/BD last (they carry the pipeline structure)
-_LANE_DROP_ORDER = (KIND_DRAM, KIND_NOC, KIND_GU, KIND_BD, KIND_FD)
+_LANE_DROP_ORDER = (KIND_FABRIC, KIND_DRAM, KIND_NOC, KIND_GU, KIND_BD, KIND_FD)
 
 # cap on per-outcome diagnostic records kept in a SweepReport (counters
 # stay exact; records exist so planners can explain representative
@@ -189,6 +190,8 @@ def _evaluate(exp, plan: ParallelPlan, graph_cache: Dict,
         serving = getattr(exp, "serving", None)
         if serving is not None:
             from ..serving.system import ServingSimulator  # lazy: no cycle
+            if fidelity is not None:
+                serving = fidelity.apply_serving(serving)
             ssim = ServingSimulator(
                 exp.arch_config, hw, plan, serving, noc_mode=noc_mode,
                 boundary_mode=exp.boundary_mode,

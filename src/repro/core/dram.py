@@ -25,20 +25,25 @@ __all__ = ["DRAMModel"]
 
 class DRAMModel:
     def __init__(self, env: Environment, hardware: HardwareSpec, noc: NoCModel,
-                 recorder: Optional[TraceRecorder] = None):
+                 recorder: Optional[TraceRecorder] = None,
+                 resource_base: int = 0):
         self.env = env
         self.hw = hardware
         self.noc = noc
         # when set, every channel records its busy intervals into the
-        # trace's DRAM resource lane
+        # trace's DRAM resource lane. ``resource_base`` offsets the
+        # recorded/reported channel keys so per-chip DRAM instances of a
+        # multi-chip fabric occupy disjoint trace-lane id ranges.
         self.recorder = recorder
+        self.resource_base = resource_base
         self._channels: Dict[int, Resource] = {}
         self.bytes_accessed = 0.0
 
     def _channel(self, key: int) -> Resource:
         res = self._channels.get(key)
         if res is None:
-            cb = (self.recorder.interval_cb(KIND_DRAM, key)
+            cb = (self.recorder.interval_cb(KIND_DRAM,
+                                            self.resource_base + key)
                   if self.recorder is not None else None)
             res = Resource(self.env, capacity=1, name=f"dram{key}",
                            interval_cb=cb)
@@ -47,7 +52,7 @@ class DRAMModel:
 
     def occupancy_report(self) -> Dict[int, float]:
         """Channel utilizations in sorted key order."""
-        return {key: self._channels[key].utilization()
+        return {self.resource_base + key: self._channels[key].utilization()
                 for key in sorted(self._channels)}
 
     def close_open_intervals(self, t: float) -> None:
@@ -57,7 +62,8 @@ class DRAMModel:
         for key in sorted(self._channels):
             since = self._channels[key].busy_since
             if since is not None and t > since:
-                self.recorder.resource(KIND_DRAM, key, since, t)
+                self.recorder.resource(KIND_DRAM, self.resource_base + key,
+                                       since, t)
 
     def access(self, device: int, nbytes: float, priority: int = 0,
                write: bool = False) -> Generator:

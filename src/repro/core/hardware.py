@@ -58,6 +58,7 @@ __all__ = [
     "wafer_scale",
     "a100_cluster",
     "tpu_v5e_pod",
+    "tiled_cluster",
 ]
 
 GB = 1e9
@@ -130,6 +131,10 @@ class HardwareSpec:
     # device has local HBM (GPU/TPU style, no NoC traversal to reach DRAM).
     dram_ports: Tuple[int, ...] = ()
     precision_bytes: int = 2
+    # scale-out fabric (repro.fabric.FabricSpec) replicating the chip
+    # described above into a board/node/cluster hierarchy; None = single
+    # chip (every existing preset, bit-identical behaviour).
+    fabric: Optional[Any] = None
     topology_spec: Optional[TopologySpec] = None
     _port_cache: Dict[int, Optional[int]] = field(
         default_factory=dict, init=False, repr=False, compare=False)
@@ -145,8 +150,20 @@ class HardwareSpec:
         self.dram_ports = tuple(self.dram_ports)
 
     @property
-    def num_devices(self) -> int:
+    def num_chips(self) -> int:
+        """Chips in the cluster (1 when no fabric is attached)."""
+        return self.fabric.num_chips if self.fabric is not None else 1
+
+    @property
+    def chip_devices(self) -> int:
+        """Devices on one chip (the compiled topology's grid)."""
         return self.topology.num_devices
+
+    @property
+    def num_devices(self) -> int:
+        """Total devices across the cluster; global device ids are
+        ``chip * chip_devices + local``."""
+        return self.topology.num_devices * self.num_chips
 
     def nearest_dram_port(self, device: int) -> Optional[int]:
         if not self.dram_ports:
@@ -170,7 +187,7 @@ class HardwareSpec:
                 f"hardware {self.name!r} has a custom {type(self.topology).__name__} "
                 "topology with no declarative spec; build it from a TopologySpec "
                 "to serialize")
-        return {
+        d = {
             "name": self.name,
             "topology": self.topology_spec.to_dict(),
             "tile": self.tile.to_dict(),
@@ -178,9 +195,17 @@ class HardwareSpec:
             "dram_ports": list(self.dram_ports),
             "precision_bytes": self.precision_bytes,
         }
+        if self.fabric is not None:
+            d["fabric"] = self.fabric.to_dict()
+        return d
 
     @classmethod
     def from_dict(cls, d: Dict[str, Any]) -> "HardwareSpec":
+        fabric = None
+        if d.get("fabric") is not None:
+            from ..fabric.spec import FabricSpec  # pure data, no cycle
+
+            fabric = FabricSpec.from_dict(d["fabric"])
         try:
             return cls(
                 name=d["name"],
@@ -189,6 +214,7 @@ class HardwareSpec:
                 dram=DRAMSpec.from_dict(d["dram"]),
                 dram_ports=tuple(d.get("dram_ports", ())),
                 precision_bytes=d.get("precision_bytes", 2),
+                fabric=fabric,
             )
         except (KeyError, TypeError) as e:
             raise ValueError(f"bad hardware dict: {e}") from None
@@ -301,6 +327,26 @@ def tpu_v5e_pod(rows: int = 16, cols: int = 16,
     )
 
 
+def tiled_cluster() -> HardwareSpec:
+    """Four-chip cluster: 2 boards x 2 chips, each chip a 4x4 tiled
+    accelerator with local HBM-style DRAM. The acceptance machine for the
+    fabric subsystem — dp gradient all-reduces span chips and decompose
+    into NoC legs + board/node fabric legs (hierarchical by default)."""
+    from ..fabric.spec import cluster_2x2  # pure data, no cycle
+
+    spec = MeshSpec(rows=4, cols=4, intra_bw=512 * GB, link_latency=2e-8)
+    return HardwareSpec(
+        name="tiled_cluster",
+        topology=spec,
+        tile=TileSpec(flops=16 * TFLOPS, sram_bytes=3.75 * MB,
+                      compute_efficiency=0.55, vector_efficiency=0.15),
+        dram=DRAMSpec(bandwidth=256 * GB, response_time=2e-7, channels=16),
+        dram_ports=(),
+        precision_bytes=2,
+        fabric=cluster_2x2(),
+    )
+
+
 def tpu_v5e_torus_pod(rows: int = 16, cols: int = 16) -> HardwareSpec:
     """The tpu_v5e pod on the wraparound-ICI topology (MeshSpec torus)."""
     return tpu_v5e_pod(rows, cols, torus=True)
@@ -314,4 +360,5 @@ HARDWARE_PRESETS = {
     "wafer_scale": wafer_scale,
     "tpu_v5e": tpu_v5e_pod,
     "tpu_v5e_torus": tpu_v5e_torus_pod,
+    "tiled_cluster": tiled_cluster,
 }

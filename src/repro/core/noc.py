@@ -73,14 +73,19 @@ class NoCModel:
 
     def __init__(self, env: Environment, hardware: HardwareSpec,
                  mode: NoCMode = NoCMode.DETAILED,
-                 recorder: Optional[TraceRecorder] = None):
+                 recorder: Optional[TraceRecorder] = None,
+                 resource_base: int = 0):
         self.env = env
         self.hw = hardware
         self.topo: Topology = hardware.topology
         self.mode = NoCMode(mode)
         # when set, every link records its busy intervals into the trace's
-        # NOC resource lane (closed on busy->idle transitions)
+        # NOC resource lane (closed on busy->idle transitions).
+        # ``resource_base`` offsets the recorded/reported link ids so the
+        # per-chip NoC instances of a multi-chip fabric occupy disjoint
+        # trace-lane id ranges (0 for the single-chip simulator).
         self.recorder = recorder
+        self.resource_base = resource_base
         self._links: Dict[int, Resource] = {}
         # ring-collective link footprints, keyed by the group tuple (macro
         # mode re-runs the same groups every micro-batch)
@@ -93,7 +98,8 @@ class NoCModel:
     def link(self, link_id: int) -> Resource:
         res = self._links.get(link_id)
         if res is None:
-            cb = (self.recorder.interval_cb(KIND_NOC, link_id)
+            cb = (self.recorder.interval_cb(KIND_NOC,
+                                            self.resource_base + link_id)
                   if self.recorder is not None else None)
             res = Resource(self.env, capacity=1, name=f"link{link_id}",
                            interval_cb=cb)
@@ -103,7 +109,7 @@ class NoCModel:
     def occupancy_report(self) -> Dict[int, float]:
         """Link utilizations in sorted link-id order (deterministic JSON /
         equality across pool workers regardless of link touch order)."""
-        return {lid: self._links[lid].utilization()
+        return {self.resource_base + lid: self._links[lid].utilization()
                 for lid in sorted(self._links)}
 
     def close_open_intervals(self, t: float) -> None:
@@ -113,7 +119,8 @@ class NoCModel:
         for lid in sorted(self._links):
             since = self._links[lid].busy_since
             if since is not None and t > since:
-                self.recorder.resource(KIND_NOC, lid, since, t)
+                self.recorder.resource(KIND_NOC, self.resource_base + lid,
+                                       since, t)
 
     # -- primitive transfer ------------------------------------------------------
     def _path_time(self, route: Sequence[int], nbytes: float) -> float:

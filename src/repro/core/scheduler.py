@@ -168,9 +168,20 @@ class PipelineSimulator:
         self.recorder = TraceRecorder()
         self.collect_timeline = collect_timeline
         res_rec = self.recorder if collect_timeline else None
-        self.noc = NoCModel(self.env, self.hw, mode=NoCMode(noc_mode),
-                            recorder=res_rec)
-        self.dram = DRAMModel(self.env, self.hw, self.noc, recorder=res_rec)
+        if getattr(self.hw, "fabric", None) is not None:
+            # multi-chip machine: the fabric facade owns one NoC + DRAM
+            # per chip and routes chip-spanning traffic over the scale-out
+            # links. Single-chip specs keep the plain models (bit-identical).
+            from ..fabric.model import FabricModel
+
+            self.noc = FabricModel(self.env, self.hw, mode=NoCMode(noc_mode),
+                                   recorder=res_rec)
+            self.dram = self.noc.dram
+        else:
+            self.noc = NoCModel(self.env, self.hw, mode=NoCMode(noc_mode),
+                                recorder=res_rec)
+            self.dram = DRAMModel(self.env, self.hw, self.noc,
+                                  recorder=res_rec)
         self.boundary_mode = BoundaryMode(boundary_mode)
 
         S = mapped.num_stages

@@ -460,9 +460,11 @@ class MeshSpec(TopologySpec):
 
     def compile(self, cache_routing: bool = True) -> Mesh2D:
         cls = Torus2D if self.torus else Mesh2D
-        return cls(self.rows, self.cols, intra_bw=self.intra_bw,
+        topo = cls(self.rows, self.cols, intra_bw=self.intra_bw,
                    inter_bw=self.inter_bw, link_latency=self.link_latency,
                    tile_shape=self.tile_shape, cache_routing=cache_routing)
+        topo.spec = self
+        return topo
 
     @classmethod
     def from_dict(cls, d: Dict[str, Any]) -> "MeshSpec":
@@ -493,11 +495,13 @@ class GPUClusterSpec(TopologySpec):
         return self.num_gpus
 
     def compile(self, cache_routing: bool = True) -> GPUCluster:
-        return GPUCluster(self.num_gpus, gpus_per_node=self.gpus_per_node,
+        topo = GPUCluster(self.num_gpus, gpus_per_node=self.gpus_per_node,
                           nvlink_bw=self.nvlink_bw, nic_bw=self.nic_bw,
                           nvlink_latency=self.nvlink_latency,
                           nic_latency=self.nic_latency,
                           cache_routing=cache_routing)
+        topo.spec = self
+        return topo
 
 
 @_register("hierarchical")
@@ -510,6 +514,15 @@ class HierarchicalSpec(TopologySpec):
     the outer grid places ``grid_rows x grid_cols`` tiles whose boundary
     hops run at ``inter_bw``. Compiles to the flattened core mesh the
     simulator routes on (uniform X-Y routing, two-level bandwidth).
+
+    .. deprecated::
+        For hierarchies *above* one chip (board/node/cluster tiers with
+        their own link budgets and collective algorithms) prefer a
+        :class:`repro.fabric.FabricSpec` attached to
+        ``HardwareSpec.fabric`` — it models the scale-out levels as
+        switched links with real collective schedules instead of
+        flattening them into one mesh. ``HierarchicalSpec`` remains the
+        right tool for the on-die two-level NoC of paper Table VI.
     """
 
     tile: MeshSpec
@@ -543,7 +556,11 @@ class HierarchicalSpec(TopologySpec):
         )
 
     def compile(self, cache_routing: bool = True) -> Mesh2D:
-        return self.flatten().compile(cache_routing=cache_routing)
+        topo = self.flatten().compile(cache_routing=cache_routing)
+        # override the flattened MeshSpec attachment: serialization must
+        # round-trip the *hierarchical* description, not its flattening
+        topo.spec = self
+        return topo
 
     def to_dict(self) -> Dict[str, Any]:
         d = super().to_dict()
@@ -572,7 +589,16 @@ def topology_spec_from_dict(d: Dict[str, Any]) -> TopologySpec:
 
 def spec_of(topo: Topology) -> Optional[TopologySpec]:
     """Recover the declarative spec of a compiled topology (None if the
-    topology is a custom class the spec schema can't express)."""
+    topology is a custom class the spec schema can't express).
+
+    Topologies built by ``TopologySpec.compile`` carry their originating
+    spec (``topo.spec``) and return it verbatim — this is what preserves
+    a :class:`HierarchicalSpec` through serialization instead of
+    degrading it to its flattened :class:`MeshSpec`. The structural
+    fallbacks below handle hand-constructed topologies."""
+    attached = getattr(topo, "spec", None)
+    if isinstance(attached, TopologySpec):
+        return attached
     if isinstance(topo, Mesh2D):          # Torus2D included
         return MeshSpec(rows=topo.rows, cols=topo.cols,
                         intra_bw=topo.intra_bw, inter_bw=topo.inter_bw,

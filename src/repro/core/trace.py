@@ -45,7 +45,7 @@ except ImportError:         # pragma: no cover - exercised by CI bench-smoke
 
 __all__ = [
     "KIND_FD", "KIND_BD", "KIND_GU", "KIND_NOC", "KIND_DRAM",
-    "KIND_PREFILL", "KIND_DECODE", "KIND_QUEUE",
+    "KIND_PREFILL", "KIND_DECODE", "KIND_QUEUE", "KIND_FABRIC",
     "KIND_NAMES", "KIND_CODES", "COMPUTE_KINDS", "RESOURCE_KINDS",
     "REQUEST_KINDS",
     "TraceRow", "Trace", "TraceRecorder", "TraceDiff", "chrome_trace",
@@ -59,12 +59,15 @@ KIND_NOC, KIND_DRAM = 3, 4                 # resource busy-interval lanes
 # carries the request id, `micro` the batching episode (bumped on each
 # eviction/resume), `stage` stays -1
 KIND_PREFILL, KIND_DECODE, KIND_QUEUE = 5, 6, 7
+# scale-out fabric link busy intervals (repro.fabric): the `resource`
+# column carries the fabric link id
+KIND_FABRIC = 8
 
 KIND_NAMES: Tuple[str, ...] = ("FD", "BD", "GU", "NOC", "DRAM",
-                               "PREFILL", "DECODE", "QUEUE")
+                               "PREFILL", "DECODE", "QUEUE", "FABRIC")
 KIND_CODES: Dict[str, int] = {name: code for code, name in enumerate(KIND_NAMES)}
 COMPUTE_KINDS: Tuple[int, ...] = (KIND_FD, KIND_BD, KIND_GU)
-RESOURCE_KINDS: Tuple[int, ...] = (KIND_NOC, KIND_DRAM)
+RESOURCE_KINDS: Tuple[int, ...] = (KIND_NOC, KIND_DRAM, KIND_FABRIC)
 REQUEST_KINDS: Tuple[int, ...] = (KIND_PREFILL, KIND_DECODE, KIND_QUEUE)
 
 _SCHEMA = 1
@@ -428,6 +431,8 @@ class Trace:
                               for k, v in self.resource_occupancy(KIND_NOC).items()},
             "dram_occupancy": {str(k): v
                                for k, v in self.resource_occupancy(KIND_DRAM).items()},
+            "fabric_occupancy": {str(k): v
+                                 for k, v in self.resource_occupancy(KIND_FABRIC).items()},
         }
 
     # -- serialization -------------------------------------------------------
@@ -638,7 +643,7 @@ class TraceRecorder:
 # Chrome / Perfetto export
 # ---------------------------------------------------------------------------
 
-_PID_STAGES, _PID_NOC, _PID_DRAM, _PID_REQUESTS = 0, 1, 2, 3
+_PID_STAGES, _PID_NOC, _PID_DRAM, _PID_REQUESTS, _PID_FABRIC = 0, 1, 2, 3, 4
 
 
 def chrome_trace(trace: Trace, label: str = "palm") -> Dict[str, Any]:
@@ -648,13 +653,15 @@ def chrome_trace(trace: Trace, label: str = "palm") -> Dict[str, Any]:
     Pipeline stages are threads of process 0 (one row per stage); NoC link
     and DRAM channel busy intervals are threads of processes 1 and 2;
     serving per-request lanes (PREFILL/DECODE/QUEUE spans, one thread per
-    request id) are threads of process 3. Timestamps are microseconds (the
+    request id) are threads of process 3; scale-out fabric link busy
+    intervals are threads of process 4. Timestamps are microseconds (the
     format's unit); durations are complete events (``ph: "X"``)."""
     events: List[Dict[str, Any]] = []
     for pid, name in ((_PID_STAGES, f"{label}: pipeline stages"),
                       (_PID_NOC, f"{label}: NoC links"),
                       (_PID_DRAM, f"{label}: DRAM channels"),
-                      (_PID_REQUESTS, f"{label}: requests")):
+                      (_PID_REQUESTS, f"{label}: requests"),
+                      (_PID_FABRIC, f"{label}: fabric links")):
         events.append({"ph": "M", "pid": pid, "name": "process_name",
                        "args": {"name": name}})
     seen_tids = set()
@@ -669,6 +676,11 @@ def chrome_trace(trace: Trace, label: str = "palm") -> Dict[str, Any]:
             name = f"{KIND_NAMES[r.kind]} ep{r.micro}"
             args = {"episode": r.micro}
             tname = f"req {r.resource}"
+        elif r.kind == KIND_FABRIC:
+            pid, tid = _PID_FABRIC, r.resource
+            name = "busy"
+            args = {}
+            tname = f"flink {r.resource}"
         else:
             pid = _PID_NOC if r.kind == KIND_NOC else _PID_DRAM
             tid = r.resource
@@ -716,6 +728,8 @@ class TraceDiff:
                                      b.resource_occupancy(KIND_NOC))
         self.dram_occupancy = _paired(a.resource_occupancy(KIND_DRAM),
                                       b.resource_occupancy(KIND_DRAM))
+        self.fabric_occupancy = _paired(a.resource_occupancy(KIND_FABRIC),
+                                        b.resource_occupancy(KIND_FABRIC))
 
     # -- deltas (b - a) ------------------------------------------------------
     @property
@@ -738,6 +752,9 @@ class TraceDiff:
     def dram_occupancy_delta(self) -> Dict[int, float]:
         return {r: b - a for r, (a, b) in self.dram_occupancy.items()}
 
+    def fabric_occupancy_delta(self) -> Dict[int, float]:
+        return {r: b - a for r, (a, b) in self.fabric_occupancy.items()}
+
     # -- serialization -------------------------------------------------------
     def to_dict(self) -> Dict[str, Any]:
         def pairs(d: Dict[int, Tuple[float, float]]) -> Dict[str, Any]:
@@ -755,6 +772,7 @@ class TraceDiff:
             "stage_utilization": pairs(self.stage_utilization),
             "noc_occupancy": pairs(self.noc_occupancy),
             "dram_occupancy": pairs(self.dram_occupancy),
+            "fabric_occupancy": pairs(self.fabric_occupancy),
         }
 
     def to_json(self, **kw: Any) -> str:
@@ -780,7 +798,8 @@ class TraceDiff:
             lines.append(f"{s:5d} {a:12.6g} {b:12.6g} {b - a:+12.6g} "
                          f"{util_delta.get(s, 0.0):+10.1%}")
         for label, paired in (("NoC link", self.noc_occupancy),
-                              ("DRAM channel", self.dram_occupancy)):
+                              ("DRAM channel", self.dram_occupancy),
+                              ("Fabric link", self.fabric_occupancy)):
             if not paired:
                 continue
             ranked = sorted(paired.items(),

@@ -39,12 +39,15 @@ class Fidelity:
     name: str = "full"
     noc_mode: Optional[NoCMode] = None       # None = the experiment's mode
     max_microbatches: Optional[int] = None   # None = the plan's full count
+    max_requests: Optional[int] = None       # None = the workload's full count
 
     def __post_init__(self):
         if self.noc_mode is not None:
             object.__setattr__(self, "noc_mode", NoCMode(self.noc_mode))
         if self.max_microbatches is not None and self.max_microbatches < 1:
             raise ValueError("max_microbatches must be >= 1")
+        if self.max_requests is not None and self.max_requests < 1:
+            raise ValueError("max_requests must be >= 1")
         if self.name == "full" and not self.is_full:
             # a reduced rung must never masquerade as "full" in the
             # accounting — derive a descriptive name instead
@@ -55,7 +58,8 @@ class Fidelity:
 
     @property
     def is_full(self) -> bool:
-        return self.noc_mode is None and self.max_microbatches is None
+        return (self.noc_mode is None and self.max_microbatches is None
+                and self.max_requests is None)
 
     def apply(self, plan: ParallelPlan) -> ParallelPlan:
         """Truncate the plan's microbatch count (the per-iteration batch
@@ -68,6 +72,26 @@ class Fidelity:
         return dataclasses.replace(
             plan,
             global_batch=plan.microbatch * plan.dp * self.max_microbatches)
+
+    def apply_serving(self, serving):
+        """Truncate a :class:`~repro.serving.system.ServingSpec`'s request
+        count — the serving analogue of :meth:`apply`: a short prefix of
+        the arrival stream already prices steady-state batching, KV
+        pressure and SLO attainment, so reduced rungs stop simulating the
+        whole workload (the gap that previously made ``objective="slo"``
+        searches pay full price at every rung)."""
+        if self.max_requests is None or serving is None:
+            return serving
+        wl = serving.workload
+        reqs = getattr(wl, "requests", None)
+        count = len(reqs) if reqs else wl.num_requests
+        if count <= self.max_requests:
+            return serving
+        kw = {"num_requests": self.max_requests}
+        if reqs:
+            kw["requests"] = list(reqs)[: self.max_requests]
+        return dataclasses.replace(
+            serving, workload=dataclasses.replace(wl, **kw))
 
 
 FULL = Fidelity()
@@ -86,8 +110,8 @@ def default_ladder(noc_mode: NoCMode = NoCMode.MACRO,
     noc_mode = NoCMode(noc_mode)
     mid_noc = NoCMode.MACRO if noc_mode == NoCMode.DETAILED else noc_mode
     ladder = [
-        Fidelity("analytical-mb2", NoCMode.ANALYTICAL, 2),
-        Fidelity(f"{mid_noc}-mb4", mid_noc, 4),
+        Fidelity("analytical-mb2", NoCMode.ANALYTICAL, 2, 8),
+        Fidelity(f"{mid_noc}-mb4", mid_noc, 4, 32),
         FULL,
     ]
     return ladder[3 - num_rungs:]

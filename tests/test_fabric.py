@@ -1,0 +1,407 @@
+"""Scale-out fabric subsystem (``repro.fabric``): spec round-trips and
+routing arithmetic, simulated collective costs vs the closed-form
+alpha-beta lower bounds (per level), the FabricModel facade on the event
+core (single-chip transparency, fabric trace lanes, Chrome export),
+serial-vs-pool bit-identity for fabric-spanning sweeps, and the fabric
+axes in hardware co-design (exhaustive and guided paths)."""
+
+import dataclasses
+import json
+
+import pytest
+
+from repro.api import (
+    Experiment,
+    HardwareSearchSpace,
+    Layout,
+    PlannerCfg,
+    SearchSpace,
+    chrome_trace,
+    plan_codesign,
+)
+from repro.configs import get_config
+from repro.core import (
+    DRAMSpec,
+    Environment,
+    HardwareSpec,
+    HierarchicalSpec,
+    MeshSpec,
+    NoCMode,
+    ParallelPlan,
+    TileSpec,
+    simulate,
+    transformer_lm_graph,
+    wafer_scale,
+)
+from repro.core.hardware import tiled_cluster
+from repro.core.topology import spec_of
+from repro.core.trace import KIND_FABRIC
+from repro.fabric import (
+    FABRIC_PRESETS,
+    FabricLevel,
+    FabricSpec,
+    alpha_beta_lower_bound,
+    cluster_2x2,
+    rack_2x2x2,
+)
+from repro.fabric.model import FabricModel
+from repro.search import FULL, Fidelity
+from repro.serving import ServingSpec, WorkloadSpec
+
+GB = 1e9
+
+
+# ---------------------------------------------------------------------------
+# spec: validation, shape/routing arithmetic, serialization
+# ---------------------------------------------------------------------------
+
+def test_fabric_level_validation():
+    with pytest.raises(ValueError, match="degree"):
+        FabricLevel("board", degree=0, bandwidth=1 * GB)
+    with pytest.raises(ValueError, match="bandwidth"):
+        FabricLevel("board", degree=2, bandwidth=0)
+    with pytest.raises(ValueError, match="latency"):
+        FabricLevel("board", degree=2, bandwidth=1 * GB, latency=-1e-6)
+    with pytest.raises(ValueError, match="algorithm"):
+        FabricLevel("board", degree=2, bandwidth=1 * GB, algorithm="magic")
+
+
+def test_fabric_spec_validation():
+    with pytest.raises(ValueError, match="at least one level"):
+        FabricSpec(levels=())
+    with pytest.raises(ValueError, match="collective"):
+        FabricSpec(levels=(FabricLevel("b", 2, 1 * GB),), collective="nope")
+
+
+@pytest.mark.parametrize("preset", sorted(FABRIC_PRESETS))
+def test_fabric_spec_json_round_trip(preset):
+    fab = FABRIC_PRESETS[preset]()
+    back = FabricSpec.from_json(fab.to_json())
+    assert back == fab
+    # and a second trip is stable (no lossy normalization)
+    assert FabricSpec.from_json(back.to_json()) == back
+    assert json.loads(fab.to_json())["name"] == preset
+
+
+def test_cluster_2x2_shape_and_routing():
+    fab = cluster_2x2()
+    assert fab.num_chips == 4
+    assert fab.degrees == (2, 2)
+    # 4 board-level up/down pairs + 2 node-level pairs
+    assert fab.num_links() == 12
+    assert fab.chips_per_child(0) == 1 and fab.chips_per_child(1) == 2
+    assert fab.chips_per_group(0) == 2 and fab.chips_per_group(1) == 4
+    # same board: one hop through the board switch
+    assert fab.route(0, 1) == [fab.up_link(0, 0), fab.down_link(0, 1)]
+    # cross-board: climb board + node, descend node + board
+    assert fab.route(0, 3) == [
+        fab.up_link(0, 0), fab.up_link(1, 0),
+        fab.down_link(1, 3), fab.down_link(0, 3)]
+    assert fab.route(2, 2) == []
+    # link ids partition into levels with the right bandwidths
+    assert {fab.link_level(l) for l in range(8)} == {0}
+    assert {fab.link_level(l) for l in range(8, 12)} == {1}
+    assert fab.link_bandwidth(0) == 100 * GB
+    assert fab.link_bandwidth(8) == 25 * GB
+    with pytest.raises(ValueError, match="out of range"):
+        fab.link_level(12)
+
+
+def test_with_level_derivation():
+    fab = cluster_2x2()
+    derived = fab.with_level(1, bandwidth=50 * GB)
+    assert derived.levels[1].bandwidth == 50 * GB
+    assert derived.levels[0] == fab.levels[0]
+    assert fab.levels[1].bandwidth == 25 * GB      # original untouched
+
+
+def test_hardware_spec_carries_fabric_through_json():
+    hw = tiled_cluster()
+    assert hw.fabric is not None and hw.num_chips == 4
+    assert hw.num_devices == 4 * hw.chip_devices
+    back = HardwareSpec.from_json(hw.to_json())
+    assert back.fabric == hw.fabric
+    assert back.num_devices == hw.num_devices
+    # fabric-less specs stay fabric-less (no key in the dict at all)
+    ws = wafer_scale()
+    assert ws.fabric is None and ws.num_chips == 1
+    assert "fabric" not in ws.to_dict()
+
+
+# ---------------------------------------------------------------------------
+# satellite: HierarchicalSpec round-trips with full fidelity
+# ---------------------------------------------------------------------------
+
+def test_hierarchical_spec_round_trips_through_hardware_json():
+    ws = wafer_scale()
+    assert isinstance(spec_of(ws.topology), HierarchicalSpec)
+    once = HardwareSpec.from_json(ws.to_json())
+    assert spec_of(once.topology) == spec_of(ws.topology)
+    assert isinstance(spec_of(once.topology), HierarchicalSpec)
+    twice = HardwareSpec.from_json(once.to_json())
+    assert spec_of(twice.topology) == spec_of(ws.topology)
+
+
+# ---------------------------------------------------------------------------
+# collective costs vs closed-form alpha-beta bounds
+# ---------------------------------------------------------------------------
+
+def _one_device_chips(fabric: FabricSpec) -> HardwareSpec:
+    """One device per chip with an effectively-free intra-chip NoC, so
+    the simulated collective time is the pure fabric schedule cost."""
+    return HardwareSpec(
+        name=f"fab_{fabric.name}", topology=MeshSpec(1, 1, intra_bw=1e12),
+        tile=TileSpec(flops=1e12, sram_bytes=1e6),
+        dram=DRAMSpec(bandwidth=1e12), fabric=fabric)
+
+
+def _fabric_collective_time(fabric: FabricSpec, kind: str, nbytes: float,
+                            mode=NoCMode.DETAILED) -> float:
+    env = Environment()
+    fm = FabricModel(env, _one_device_chips(fabric), mode=mode)
+    proc = env.process(fm.collective(kind, list(range(fabric.num_chips)),
+                                     nbytes))
+    env.run(until_event=proc)
+    return env.now
+
+
+def per_level_allreduce_bound(fab: FabricSpec, nbytes: float) -> float:
+    """The payload entering level L is the level-(L-1) reduce-scatter
+    output ``n / chips_per_child(L)``; no schedule moves it across the
+    level's links in less than the ring term ``2(d-1)/d * payload/bw``."""
+    return sum(
+        alpha_beta_lower_bound("all_reduce", lvl.degree,
+                               nbytes / fab.chips_per_child(i), lvl.bandwidth)
+        for i, lvl in enumerate(fab.levels))
+
+
+def test_single_level_ring_allreduce_matches_closed_form():
+    """Flat ring on one switch tier: 2(p-1) rounds, each moving n/p over
+    disjoint up/down link pairs -> 2(p-1) * (n/p/bw + 2*lat) exactly."""
+    p, bw, lat, nbytes = 4, 10 * GB, 1e-6, 4e6
+    fab = FabricSpec(name="flat", collective="ring",
+                     levels=(FabricLevel("board", p, bw, latency=lat),))
+    expect = 2 * (p - 1) * (nbytes / p / bw + 2 * lat)
+    t_det = _fabric_collective_time(fab, "all_reduce", nbytes)
+    assert t_det == pytest.approx(expect, rel=1e-9)
+    # ring rounds use disjoint links, so macro (union-footprint hold)
+    # agrees with the per-round detailed schedule
+    t_mac = _fabric_collective_time(fab, "all_reduce", nbytes, NoCMode.MACRO)
+    assert t_mac == pytest.approx(t_det, rel=1e-9)
+    # and the cost respects (here: exceeds, due to latency) the bound
+    assert t_det >= alpha_beta_lower_bound("all_reduce", p, nbytes, bw)
+
+
+@pytest.mark.parametrize("fab", [cluster_2x2(), rack_2x2x2()],
+                         ids=["cluster_2x2", "rack_2x2x2"])
+@pytest.mark.parametrize("family", ["ring", "tree", "hd", "hierarchical"])
+def test_fabric_allreduce_respects_per_level_bound(fab, family):
+    for kb in (64, 1024):
+        nbytes = kb * 1e3
+        spec = dataclasses.replace(fab, collective=family)
+        t = _fabric_collective_time(spec, "all_reduce", nbytes)
+        assert t >= per_level_allreduce_bound(fab, nbytes) * (1 - 1e-9), \
+            f"{family} @ {kb}KB beats the per-level alpha-beta bound"
+
+
+def test_hierarchical_beats_flat_ring_at_scale():
+    """The latency regime hierarchical collectives exist for: at 8 chips
+    and a small payload, per-level RS/AG wins over the flat ring (fewer
+    rounds, upper-tier traffic shrunk by the level fan-in)."""
+    fab = rack_2x2x2()
+    nbytes = 64e3
+    t_hier = _fabric_collective_time(
+        dataclasses.replace(fab, collective="hierarchical"),
+        "all_reduce", nbytes)
+    t_ring = _fabric_collective_time(
+        dataclasses.replace(fab, collective="ring"), "all_reduce", nbytes)
+    assert t_hier <= t_ring
+
+
+def test_reduce_scatter_and_all_gather_bounds():
+    fab = cluster_2x2()
+    p, nbytes = fab.num_chips, 1e6
+    for kind in ("reduce_scatter", "all_gather"):
+        t = _fabric_collective_time(fab, kind, nbytes)
+        bound = sum(
+            alpha_beta_lower_bound(kind, lvl.degree,
+                                   nbytes / fab.chips_per_child(i),
+                                   lvl.bandwidth)
+            for i, lvl in enumerate(fab.levels))
+        assert t >= bound * (1 - 1e-9)
+        assert t > 0
+    # pairwise all-to-all (MoE dispatch): every chip exchanges n/p with
+    # every other chip; the top tier alone must carry the bisection half
+    t = _fabric_collective_time(fab, "all_to_all", nbytes)
+    top = fab.levels[-1]
+    cross = (p // 2) * (p // 2) * (nbytes / p)      # bytes crossing the top
+    assert t >= cross / (top.bandwidth * fab.instances(1)) * (1 - 1e-9)
+
+
+def test_fabric_counters_and_modes():
+    """bytes_moved/transfer_count tick; analytical <= macro/detailed."""
+    fab = cluster_2x2()
+    env = Environment()
+    fm = FabricModel(env, _one_device_chips(fab), mode=NoCMode.DETAILED)
+    proc = env.process(fm.collective("all_reduce", [0, 1, 2, 3], 1e6))
+    env.run(until_event=proc)
+    assert fm.fabric_bytes > 0 and fm.fabric_transfers > 0
+    t_det = env.now
+    t_ana = _fabric_collective_time(fab, "all_reduce", 1e6,
+                                    NoCMode.ANALYTICAL)
+    assert 0 < t_ana <= t_det * (1 + 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# FabricModel facade on the event core
+# ---------------------------------------------------------------------------
+
+def _small_chip(fabric=None) -> HardwareSpec:
+    return HardwareSpec(
+        name="chip2x2", topology=MeshSpec(2, 2, intra_bw=512 * GB),
+        tile=TileSpec(flops=16e12, sram_bytes=4e6),
+        dram=DRAMSpec(bandwidth=1e11, channels=2), fabric=fabric)
+
+
+def test_degenerate_fabric_is_transparent():
+    """A one-chip fabric must be a bit-identical no-op: every collective,
+    transfer, and DRAM access localizes to chip 0 with resource base 0,
+    so the trace matches the plain NoCModel/DRAMModel path exactly."""
+    solo = FabricSpec(name="solo",
+                      levels=(FabricLevel("board", 1, 1 * GB),))
+    plan = ParallelPlan(pp=2, dp=1, tp=2, microbatch=1, global_batch=4)
+    graph = transformer_lm_graph("t", 2, 256, 8, 128, plan.microbatch,
+                                 vocab=2048)
+    runs = {}
+    for key, fabric in (("plain", None), ("fabric", solo)):
+        runs[key] = simulate(graph, _small_chip(fabric), plan,
+                             noc_mode=NoCMode.DETAILED,
+                             collect_timeline=True)
+    assert runs["fabric"].total_time == runs["plain"].total_time
+    assert runs["fabric"].trace == runs["plain"].trace
+    assert not any(int(k) == KIND_FABRIC for k in runs["fabric"].trace.kind)
+
+
+def test_cluster_sim_emits_fabric_lanes_and_chrome_export():
+    """Acceptance: the 4-chip (2 boards x 2 chips) cluster preset
+    simulates end-to-end with the dp gradient all-reduce spanning chips,
+    and the shared fabric links appear as first-class COMM lanes in the
+    trace and the Chrome export."""
+    exp = Experiment(arch="yi-6b", hardware=tiled_cluster(), seq_len=128,
+                     global_batch=8, collect_timeline=True,
+                     search=SearchSpace(degrees=((2, 8, 4),),
+                                        microbatch_sizes=(1,),
+                                        layouts=(Layout.S_SHAPE,)))
+    rep = exp.sweep(workers=0, return_timelines=True)
+    assert len(rep.runs) == 1
+    run = rep.runs[0]
+    assert run.total_time > 0
+    fabric_lanes = {int(r) for k, r in zip(run.trace.kind, run.trace.resource)
+                    if int(k) == KIND_FABRIC}
+    assert fabric_lanes, "chip-spanning plan produced no fabric intervals"
+    # occupancy rolls the lanes up too
+    occ = run.trace.resource_occupancy(KIND_FABRIC)
+    assert occ and all(v > 0 for v in occ.values())
+    # Chrome export: fabric links get their own process with flink threads
+    chrome = chrome_trace(run.trace)
+    names = [e["args"]["name"] for e in chrome["traceEvents"]
+             if e.get("name") == "process_name"]
+    assert any(n.endswith("fabric links") for n in names)
+    threads = [e["args"]["name"] for e in chrome["traceEvents"]
+               if e.get("name") == "thread_name"]
+    assert any(t.startswith("flink") for t in threads)
+
+
+def test_serial_and_pool_fabric_sweeps_ship_identical_traces():
+    """Satellite gate: a fabric-spanning sweep is bit-identical between
+    the serial executor and the process pool."""
+    exp = Experiment(arch="yi-6b", hardware=tiled_cluster(), seq_len=128,
+                     global_batch=8, collect_timeline=True,
+                     search=SearchSpace(degrees=((2, 8, 4), (4, 4, 4)),
+                                        microbatch_sizes=(1,),
+                                        layouts=(Layout.S_SHAPE,)))
+    serial = exp.sweep(workers=0, return_timelines=True)
+    pooled = exp.sweep(workers=2, return_timelines=True)
+    assert pooled.executor.startswith("process")
+    assert len(serial.runs) == len(pooled.runs) == 2
+    for a, b in zip(serial.runs, pooled.runs):
+        assert a.plan == b.plan
+        assert a.total_time == b.total_time
+        assert a.trace == b.trace
+
+
+# ---------------------------------------------------------------------------
+# co-design over fabric axes
+# ---------------------------------------------------------------------------
+
+def test_fabric_axes_validate_and_require_a_fabric():
+    with pytest.raises(ValueError, match="collective"):
+        HardwareSearchSpace(fabric_collectives=("warp",))
+    space = HardwareSearchSpace(fabric_bw=(12.5 * GB, 25 * GB))
+    with pytest.raises(ValueError, match="fabric"):
+        space.enumerate_specs(wafer_scale())      # base has no fabric
+
+
+def test_fabric_axes_enumerate_derived_specs():
+    space = HardwareSearchSpace(fabric_bw=(12.5 * GB, 25 * GB),
+                                fabric_collectives=("hierarchical", "ring"))
+    variants = space.enumerate_specs(tiled_cluster())
+    assert len(variants) == 4
+    top = tiled_cluster().fabric.num_levels - 1
+    bws = {v.fabric.levels[top].bandwidth for v in variants}
+    assert bws == {12.5 * GB, 25 * GB}
+    assert {v.fabric.collective for v in variants} == {"hierarchical", "ring"}
+    assert len({v.name for v in variants}) == 4   # distinct derived names
+    for v in variants:
+        assert HardwareSpec.from_json(v.to_json()).fabric == v.fabric
+
+
+@pytest.mark.parametrize("strategy", ["exhaustive", "sh"])
+def test_plan_codesign_over_fabric_axis_round_trips(strategy):
+    """Acceptance: co-design over a fabric axis returns a winner whose
+    FabricSpec survives the JSON round trip — through the exhaustive
+    product and the guided (successive-halving) path alike."""
+    guided = {} if strategy == "exhaustive" else dict(
+        search_strategy="sh", search_budget=2, search_seed=0)
+    cfg = PlannerCfg(
+        global_batch=8, seq_len=128, max_plans=2, microbatch_sizes=(1,),
+        layouts=(Layout.S_SHAPE,),
+        hardware_search=HardwareSearchSpace(fabric_bw=(12.5 * GB, 25 * GB)),
+        **guided)
+    res = plan_codesign(get_config("yi-6b"), tiled_cluster(), cfg)
+    winner = res.hardware
+    assert winner.fabric is not None
+    top = winner.fabric.num_levels - 1
+    assert winner.fabric.levels[top].bandwidth in (12.5 * GB, 25 * GB)
+    back = HardwareSpec.from_json(winner.to_json())
+    assert back.fabric == winner.fabric
+    if strategy == "sh":
+        assert res.report.search is not None
+        assert res.report.search.full_fidelity_sims <= 2
+
+
+# ---------------------------------------------------------------------------
+# satellite: serving-rung fidelity truncation (slo objective x guided search)
+# ---------------------------------------------------------------------------
+
+def test_fidelity_truncates_serving_workloads():
+    fid = Fidelity(name="rung", max_requests=4)
+    assert not fid.is_full
+    spec = ServingSpec(workload=WorkloadSpec(num_requests=64))
+    cut = fid.apply_serving(spec)
+    assert cut.workload.num_requests == 4
+    assert spec.workload.num_requests == 64       # original untouched
+    # replay workloads slice the explicit request list too
+    rows = [[0.1 * i, 8, 4] for i in range(6)]
+    replay = ServingSpec(workload=WorkloadSpec(kind="replay", requests=rows,
+                                               num_requests=6))
+    cut = fid.apply_serving(replay)
+    assert cut.workload.requests == rows[:4]
+    assert cut.workload.num_requests == 4
+    # already small enough / full fidelity: pass through unchanged
+    small = ServingSpec(workload=WorkloadSpec(num_requests=3))
+    assert fid.apply_serving(small) is small
+    assert FULL.apply_serving(spec) is spec
+    assert fid.apply_serving(None) is None
+    with pytest.raises(ValueError, match="max_requests"):
+        Fidelity(name="bad", max_requests=0)
