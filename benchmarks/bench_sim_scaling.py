@@ -13,12 +13,35 @@ lookup instead of re-walking X-Y routing and re-scanning per-link
 bandwidths. We time the detailed simulator with caching on vs off
 (``cache_routing=False`` recovers the per-call baseline) and report the
 speedup.
+
+Third section (two-tier core acceptance gate): on a contention-free
+16x16-mesh sweep the analytic fast tier (``engine="fast"``,
+:mod:`repro.core.fastpath`) must be bit-identical to the event tier on
+``total_time`` and throughput ranking while running >= 10x faster in
+aggregate wall-clock. A second pass under ``engine="auto"`` records the
+tier-selection counts (how many plans the contention classifier accepted
+for the fast tier vs sent to the event-kernel refinement tier).
+
+Standalone (CI perf-gate):
+
+    PYTHONPATH=src python benchmarks/bench_sim_scaling.py --tiny \
+        --json artifacts/bench_sim_scaling.json
 """
 
 from __future__ import annotations
 
-import dataclasses
+# allow `python benchmarks/bench_sim_scaling.py` (CI perf-gate) in
+# addition to `python -m benchmarks.run --only sim_scaling`
+if __package__ in (None, ""):
+    import sys
+    from pathlib import Path
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+    __package__ = "benchmarks"
+
+import argparse
+import sys
 import time
+from pathlib import Path
 
 from repro.core import (
     DRAMSpec,
@@ -27,14 +50,19 @@ from repro.core import (
     HardwareSpec,
     MeshSpec,
     ParallelPlan,
+    PipelineSimulator,
     TileSpec,
+    map_graph,
     simulate,
     transformer_lm_graph,
-    wafer_scale,
 )
-from .common import Report
+from .common import Report, write_bench_json
 
 GB = 1e9
+
+# gate threshold: aggregate event-tier / fast-tier wall-clock on the
+# contention-free sweep (the two-tier-core acceptance criterion)
+FASTPATH_GATE_SPEEDUP = 10.0
 
 
 def _mesh_hw(n: int, cache_routing: bool = True) -> HardwareSpec:
@@ -57,12 +85,96 @@ def _workload():
     return graph, plan
 
 
-def run(report: Report):
+def _gate_plan(pp: int, dp: int, tp: int, global_batch: int) -> ParallelPlan:
+    # recompute="never" + generous per-stage DRAM channels keeps every
+    # stream uncontended, so the whole sweep is fast-tier eligible
+    return ParallelPlan(pp=pp, dp=dp, tp=tp, microbatch=2,
+                        global_batch=global_batch * dp,
+                        schedule=Schedule.ONE_F_ONE_B, recompute="never")
+
+
+def _fastpath_gate(report: Report, tiny: bool) -> None:
+    graph = transformer_lm_graph("T", 24, 4096, 32, 2048, 2, vocab=51200)
+    hw = _mesh_hw(16)
+    if tiny:
+        cases = [(NoCMode.MACRO, pp, dp, tp, 32)
+                 for pp, dp, tp in ((4, 1, 1), (4, 2, 1), (2, 1, 2))]
+    else:
+        cases = ([(NoCMode.MACRO, pp, dp, tp, 64) for pp, dp, tp in
+                  ((4, 1, 1), (2, 1, 8), (4, 1, 4), (4, 2, 1), (2, 1, 2))]
+                 + [(NoCMode.DETAILED, pp, dp, tp, 32)
+                    for pp, dp, tp in ((4, 1, 1), (2, 1, 2))])
+
+    report.log("== two-tier core gate: fast tier vs event tier, 16x16 mesh ==")
+    report.log(f"{'mode':>9s} {'plan':>12s} {'M':>3s} {'event_ms':>9s} "
+               f"{'fast_ms':>8s} {'speedup':>8s} {'identical':>9s}")
+    tot_event = tot_fast = 0.0
+    identical = True
+    ev_rank = []
+    fp_rank = []
+    for mode, pp, dp, tp, gb in cases:
+        plan = _gate_plan(pp, dp, tp, gb)
+        mapped = map_graph(graph, hw, plan)
+        t0 = time.perf_counter()
+        ev = PipelineSimulator(mapped, noc_mode=mode, engine="event").run()
+        t_event = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        fp = PipelineSimulator(mapped, noc_mode=mode, engine="fast").run()
+        t_fast = time.perf_counter() - t0
+        same = (ev.total_time == fp.total_time
+                and ev.throughput == fp.throughput
+                and ev.noc_bytes == fp.noc_bytes
+                and ev.dram_bytes == fp.dram_bytes)
+        identical = identical and same
+        name = f"pp{pp}dp{dp}tp{tp}"
+        ev_rank.append((ev.throughput, name))
+        fp_rank.append((fp.throughput, name))
+        tot_event += t_event
+        tot_fast += t_fast
+        speedup = t_event / t_fast if t_fast > 0 else float("inf")
+        report.log(f"{str(mode):>9s} {name:>12s} {plan.num_microbatches:3d} "
+                   f"{t_event * 1e3:9.1f} {t_fast * 1e3:8.1f} "
+                   f"{speedup:7.1f}x {str(same):>9s}")
+        report.add(f"fastpath_n16_{mode}_{name}", t_fast * 1e6,
+                   f"event_ms={t_event * 1e3:.1f};speedup={speedup:.1f}")
+
+    ranking_ok = (sorted(ev_rank, reverse=True)
+                  == sorted(fp_rank, reverse=True))
+    aggregate = tot_event / tot_fast if tot_fast > 0 else float("inf")
+    gate_ok = (identical and ranking_ok
+               and aggregate >= FASTPATH_GATE_SPEEDUP)
+    report.log(f"aggregate {tot_event * 1e3:.0f} ms event vs "
+               f"{tot_fast * 1e3:.0f} ms fast = {aggregate:.1f}x "
+               f"(gate >= {FASTPATH_GATE_SPEEDUP:.0f}x); bit-identical: "
+               f"{identical}; ranking identical: {ranking_ok}")
+    report.add("fastpath_gate_speedup", tot_fast * 1e6,
+               f"{aggregate:.1f}x" + ("" if gate_ok else ";MISMATCH"))
+
+    # tier-selection accounting: engine="auto" over eligible + contended
+    # plans; the classifier must take the fast tier on the clean ones and
+    # fall back (bit-identically priced by the event kernel) on the rest
+    auto_cases = ([(4, 1, 1), (4, 2, 1), (2, 2, 2)] if tiny else
+                  [(4, 1, 1), (4, 2, 1), (2, 1, 2), (2, 2, 2), (4, 2, 2)])
+    n_fast = 0
+    for pp, dp, tp in auto_cases:
+        plan = _gate_plan(pp, dp, tp, 32)
+        mapped = map_graph(graph, hw, plan)
+        res = PipelineSimulator(mapped, noc_mode=NoCMode.MACRO,
+                                engine="auto").run()
+        n_fast += res.engine == "fast"
+    report.log(f"tier selection (engine=auto): fast={n_fast}/"
+               f"{len(auto_cases)} plans, event={len(auto_cases) - n_fast} "
+               f"(contended fall back to the refinement tier)")
+    report.add("fastpath_tier_counts", 0.0,
+               f"fast={n_fast}/{len(auto_cases)}")
+
+
+def run(report: Report, tiny: bool = False):
     report.log("== Virtual Tile Aggregation: simulation cost vs array size ==")
     report.log(f"{'N x N':>6s} {'tiles':>6s} {'mode':>9s} {'events':>9s} "
                f"{'wall_ms':>8s} {'thpt':>8s}")
     graph, plan = _workload()
-    for n in (8, 16, 24, 32):
+    for n in (8, 16) if tiny else (8, 16, 24, 32):
         hw = _mesh_hw(n)
         for mode in (NoCMode.MACRO, NoCMode.DETAILED):
             t0 = time.perf_counter()
@@ -79,8 +191,10 @@ def run(report: Report):
     report.log("== cached routing (compiled topology) vs per-call baseline ==")
     report.log(f"{'N x N':>6s} {'mode':>9s} {'cached_ms':>10s} "
                f"{'percall_ms':>11s} {'speedup':>8s}")
-    for n, mode in ((16, NoCMode.DETAILED), (32, NoCMode.DETAILED),
-                    (32, NoCMode.MACRO)):
+    cache_cases = (((16, NoCMode.DETAILED),) if tiny else
+                   ((16, NoCMode.DETAILED), (32, NoCMode.DETAILED),
+                    (32, NoCMode.MACRO)))
+    for n, mode in cache_cases:
         walls = {}
         thpts = {}
         for cached in (True, False):
@@ -97,3 +211,31 @@ def run(report: Report):
                    f"percall_ms={walls[False]:.1f};speedup={speedup:.2f}")
     report.log("identical throughputs; the speedup is pure routing overhead "
                "removed from the NoC hot path")
+
+    report.log("")
+    _fastpath_gate(report, tiny)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="seconds-scale config for CI perf-gate runs")
+    ap.add_argument("--json", type=Path, default=None, metavar="FILE",
+                    help="write the {rows, lines} JSON report here")
+    args = ap.parse_args(argv)
+
+    report = Report()
+    t0 = time.time()
+    run(report, tiny=args.tiny)
+    elapsed = time.time() - t0
+    report.log(f"[sim_scaling: {elapsed:.1f}s]")
+
+    if args.json is not None:
+        write_bench_json(report, "sim_scaling", args.tiny, elapsed, args.json)
+
+    # the fast-tier gate rows double as the CI acceptance check
+    return 1 if any(row.endswith("MISMATCH") for row in report.rows) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

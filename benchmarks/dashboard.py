@@ -164,6 +164,9 @@ def main(argv=None) -> int:
     ap.add_argument("--regression-pct", type=float, default=25.0,
                     help="flag metrics whose newest value regressed by "
                          "more than this vs the previous run")
+    ap.add_argument("--fail-on-regression", action="store_true",
+                    help="exit 2 when any metric row carries a REGRESSED "
+                         "flag (CI perf-gate mode)")
     args = ap.parse_args(argv)
 
     table, columns = load_artifacts(args.artifacts)
@@ -182,6 +185,16 @@ def main(argv=None) -> int:
         args.html.parent.mkdir(parents=True, exist_ok=True)
         args.html.write_text(render_html(md))
         print(f"[dashboard written to {args.html}]")
+    if args.fail_on_regression:
+        regressed = []
+        for (suite, metric), cells in sorted(table.items()):
+            vals = [cells.get(c, (None, ""))[0] for c in columns]
+            if "REGRESSED" in _trend(vals, args.regression_pct):
+                regressed.append(f"{suite}/{metric}")
+        if regressed:
+            print("error: perf regressions detected: "
+                  + ", ".join(regressed), file=sys.stderr)
+            return 2
     return 0
 
 

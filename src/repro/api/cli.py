@@ -143,6 +143,12 @@ def _add_plan_flags(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--trace-npz", type=Path, default=None, metavar="FILE",
                     help="write the columnar trace as a compressed .npz "
                          "archive (needs numpy)")
+    ap.add_argument("--engine", choices=["auto", "event", "fast"],
+                    default="event",
+                    help="simulator tier: 'event' = generator/heap kernel, "
+                         "'auto' = bit-identical closed-form fast path with "
+                         "fallback on contention, 'fast' = fast path or fail "
+                         "(see docs/simulator.md)")
 
 
 def _add_sweep_flags(ap: argparse.ArgumentParser) -> None:
@@ -259,7 +265,8 @@ def _cmd_simulate(args) -> int:
                      global_batch=args.global_batch,
                      training=not args.inference, noc_mode=args.noc_mode,
                      boundary_mode=args.boundary_mode,
-                     collect_timeline=want_trace)
+                     collect_timeline=want_trace,
+                     engine=args.engine)
     report = exp.run()
     print(f"{report.arch} on {report.hardware}: {report.summary()}")
     if want_trace:

@@ -459,6 +459,11 @@ class Experiment:
     # of one pipeline iteration: RunReport.throughput becomes SLO goodput
     # and the full ServingReport rides in RunReport.extra["serving"]
     serving: Optional[ServingSpec] = None
+    # simulator tier (repro.core.fastpath): "event" always runs the heap
+    # kernel, "auto" takes the bit-identical closed-form fast tier when
+    # the run is contention-free, "fast" demands it (raises otherwise).
+    # A multi-fidelity rung's own ``engine`` overrides this per rung.
+    engine: str = "event"
 
     def __post_init__(self):
         self.noc_mode = NoCMode(self.noc_mode)
@@ -516,6 +521,9 @@ class Experiment:
                     f"microbatch*dp = {p.microbatch * p.dp}")
         if self.seq_len < 1 or self.global_batch < 1:
             raise ValueError("seq_len and global_batch must be >= 1")
+        if self.engine not in ("event", "auto", "fast"):
+            raise ValueError(f"unknown engine {self.engine!r} "
+                             "(expected 'event', 'auto' or 'fast')")
         if self.serving is not None:
             if self.training:
                 raise ValueError("serving experiments score decode traffic; "

@@ -86,6 +86,10 @@ class RunReport:
     def from_sim(cls, arch: str, hardware: str, plan: ParallelPlan,
                  result: SimResult, keep_sim: bool = False,
                  **extra: Any) -> "RunReport":
+        # surface which simulator tier produced the numbers (fast tier is
+        # bit-identical, so this is attribution, not a result qualifier)
+        if getattr(result, "engine", "event") != "event":
+            extra.setdefault("engine", result.engine)
         return cls(
             arch=arch,
             hardware=hardware,

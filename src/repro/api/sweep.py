@@ -164,10 +164,13 @@ def _evaluate(exp, plan: ParallelPlan, graph_cache: Dict,
     pre-simulation memory pruning is unchanged."""
     try:
         noc_mode = exp.noc_mode
+        engine = getattr(exp, "engine", "event")
         if fidelity is not None:
             plan = fidelity.apply(plan)
             if fidelity.noc_mode is not None:
                 noc_mode = NoCMode(fidelity.noc_mode)
+            if getattr(fidelity, "engine", None) is not None:
+                engine = fidelity.engine
         if exp.graph_builder is None:
             # arch_to_graph depends only on (arch, seq_len, batch, mode) —
             # never on the hardware — so the memo is shared across variants
@@ -218,7 +221,8 @@ def _evaluate(exp, plan: ParallelPlan, graph_cache: Dict,
         sim = PipelineSimulator(mapped, noc_mode=noc_mode,
                                 boundary_mode=exp.boundary_mode,
                                 memory_plan=mem_plan,
-                                collect_timeline=trace_resources)
+                                collect_timeline=trace_resources,
+                                engine=engine)
         result = sim.run()
         # the scalar occupancy digest is an in-process convenience; drop
         # it so serial and pooled sweeps return identical, lean results
@@ -239,7 +243,8 @@ def run_one(exp, plan: ParallelPlan) -> RunReport:
     mapped = map_graph(graph, hw, plan)
     sim = PipelineSimulator(mapped, noc_mode=exp.noc_mode,
                             boundary_mode=exp.boundary_mode,
-                            collect_timeline=exp.collect_timeline)
+                            collect_timeline=exp.collect_timeline,
+                            engine=getattr(exp, "engine", "event"))
     return RunReport.from_sim(exp.arch_name, hw.name, plan, sim.run(),
                               keep_sim=exp.collect_timeline)
 

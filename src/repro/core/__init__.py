@@ -74,5 +74,6 @@ from .parallelism import (
     split_op,
 )
 from .scheduler import PipelineSimulator, SimResult, ideal_pipeline_time
+from .fastpath import FastPathIneligible, try_fast_run
 from .simulator import PlanResult, simulate, sweep_plans
 from .sram import OpAccess, StageMemory, allocate_stage, optimizer_state_bytes_per_param, stage_memory

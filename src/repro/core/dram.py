@@ -18,7 +18,7 @@ from typing import Dict, Generator, Optional
 from .events import Environment, Resource
 from .hardware import HardwareSpec
 from .noc import NoCModel
-from .trace import KIND_DRAM, TraceRecorder
+from .trace import KIND_DRAM, TraceRecorder, pack_lane
 
 __all__ = ["DRAMModel"]
 
@@ -87,6 +87,46 @@ class DRAMModel:
         yield req
         yield self.env.timeout(spec.response_time + nbytes / spec.bandwidth)  # Eq. (4)
         chan.release(req)
+
+    # -- fast-path pricing (repro.core.fastpath) -------------------------------
+    def access_chain(self, device: int, nbytes: float,
+                     write: bool = False) -> list:
+        """Uncontended price of :meth:`access` as a fast-path chain."""
+        if nbytes <= 0:
+            return [("dt", 0.0)]
+        spec = self.hw.dram
+        port = self.hw.nearest_dram_port(device)
+        chain: list = [("bytes", "dram", nbytes)]
+        if port is not None and port != device:
+            src, dst = (device, port) if write else (port, device)
+            chain.extend(self.noc.transfer_chain(src, dst, nbytes))
+        key = port if port is not None else device % max(1, spec.channels)
+        chain.append(("hold", (pack_lane(KIND_DRAM, self.resource_base + key),),
+                      spec.response_time + nbytes / spec.bandwidth))
+        return chain
+
+    def group_access_chain(self, devices, nbytes_per_device: float,
+                           write: bool = False, shared_bytes: float = 0.0,
+                           num_shards: int = 1) -> list:
+        """Uncontended price of :meth:`group_access` as a fast-path chain."""
+        if not self.hw.dram_ports:
+            rep = next(iter(devices))
+            return self.access_chain(rep, nbytes_per_device + shared_bytes,
+                                     write)
+        n_dev = len(list(devices))
+        per_port: Dict[Optional[int], list] = {}
+        for d in devices:
+            per_port.setdefault(self.hw.nearest_dram_port(d), []).append(d)
+        total_shared = shared_bytes * num_shards
+        branches = []
+        for port, devs in per_port.items():
+            rep = devs[0]
+            total = (nbytes_per_device * len(devs)
+                     + total_shared * len(devs) / n_dev)
+            branches.append(self.access_chain(rep, total, write))
+        if not branches:
+            return [("dt", 0.0)]
+        return [("par", tuple(branches))]
 
     def group_access(self, devices, nbytes_per_device: float, priority: int = 0,
                      write: bool = False, shared_bytes: float = 0.0,

@@ -274,13 +274,21 @@ class Environment:
             cb(event)
 
     def run(self, until: Optional[float] = None, until_event: Optional[Event] = None) -> Any:
-        """Run until the heap drains, ``until`` time passes, or event fires."""
+        """Run until the heap drains, ``until`` time passes, or event fires.
+
+        The ``until`` horizon only *peeks* at the heap head — the first
+        event past the horizon is never popped, so a resumed
+        ``run(until=later)`` (or a final ``run()``) replays it exactly
+        once at its own timestamp. The clock never rewinds: a horizon
+        earlier than ``now`` is a no-op, and a fired ``until_event`` is
+        reported even when the next head already lies past ``until``.
+        """
         while self._heap:
-            if until is not None and self._heap[0][0] > until:
-                self.now = until
-                return None
             if until_event is not None and until_event._processed:
                 return until_event.value
+            if until is not None and self._heap[0][0] > until:
+                self.now = max(self.now, until)
+                return None
             self.step()
         if until_event is not None and until_event._processed:
             return until_event.value

@@ -33,7 +33,7 @@ from typing import Dict, Generator, Iterable, List, Optional, Sequence, Tuple
 from .enums import NoCMode
 from .events import Environment, Resource
 from .hardware import HardwareSpec, Topology
-from .trace import KIND_NOC, TraceRecorder
+from .trace import KIND_NOC, TraceRecorder, pack_lane
 
 __all__ = ["NoCModel", "collective_steps", "ring_time"]
 
@@ -280,6 +280,60 @@ class NoCModel:
             procs = [env.process(self.transfer(group[i], group[(i + 1) % p], chunk, priority))
                      for i in range(p)]
             yield env.all_of(procs)
+
+    # -- fast-path pricing (repro.core.fastpath) -------------------------------
+    # Chains are the analytic mirror of the generator bodies above: a flat
+    # list of ("dt", x) advances, ("hold", keys, x) resource holds,
+    # ("par", branches) concurrent sections and ("bytes", acc, n) counter
+    # bumps, composed exactly as the event kernel would accumulate time
+    # (sequential yields = additive chain, all_of = max), so evaluating a
+    # chain at start time t reproduces the uncontended event timing
+    # bit-for-bit. See repro/core/fastpath.py for the evaluator.
+
+    def _link_keys(self, link_ids: Iterable[int]) -> Tuple:
+        return tuple(pack_lane(KIND_NOC, self.resource_base + lid)
+                     for lid in link_ids)
+
+    def transfer_chain(self, src: int, dst: int, nbytes: float) -> List:
+        """Uncontended price of :meth:`transfer` as a fast-path chain."""
+        hops, lat, bw = self.topo.path_metrics(src, dst)
+        t = lat + nbytes / bw if hops else 0.0
+        if self.mode == NoCMode.ANALYTICAL or not hops:
+            return [("bytes", "noc", nbytes), ("dt", t)]
+        return [("bytes", "noc", nbytes),
+                ("hold", self._link_keys(self.topo.route_links(src, dst)), t)]
+
+    def collective_chain(self, kind: str, group: Sequence[int], nbytes: float,
+                         root: Optional[int] = None) -> List:
+        """Uncontended price of :meth:`collective` as a fast-path chain."""
+        p = len(group)
+        if p <= 1 or nbytes <= 0:
+            return [("dt", 0.0)]
+        group = list(group)
+        if self.mode == NoCMode.ANALYTICAL:
+            return [("dt", self._collective_closed_form(kind, group, nbytes,
+                                                        root))]
+        if self.mode == NoCMode.MACRO:
+            t = self._collective_closed_form(kind, group, nbytes, root)
+            return [("bytes", "noc", nbytes * p),
+                    ("hold", self._link_keys(self._ring_footprint(group)), t)]
+        # detailed: per-step transfer barriers, mirroring _collective_detailed
+        if kind == "broadcast":
+            links = self._chain_links(group, root)
+            t = self._path_time(links, nbytes)
+            return [("bytes", "noc", nbytes * (p - 1)),
+                    ("hold", self._link_keys(sorted(set(links))), t)]
+        if kind == "reduce":
+            r = group[0] if root is None else root
+            branches = tuple(self.transfer_chain(d, r, nbytes)
+                             for d in group if d != r)
+            return [("par", branches)] if branches else [("dt", 0.0)]
+        steps = collective_steps(kind, p)
+        chunk = _chunk_bytes(kind, nbytes, p)
+        step = ("par", tuple(self.transfer_chain(group[i], group[(i + 1) % p],
+                                                 chunk)
+                             for i in range(p)))
+        return [step] * steps
 
     # -- inter-tile-group strategies (paper §V-C, Fig. 11) ----------------------
 

@@ -53,6 +53,12 @@ class SimResult:
     event_count: int
     noc_bytes: float
     dram_bytes: float
+    # which tier produced the result: "event" (generator/heap kernel) or
+    # "fast" (closed-form analytic tier, repro.core.fastpath). Timing is
+    # bit-identical between tiers whenever the fast tier runs, so the
+    # provenance tag is excluded from equality. Note ``event_count`` is
+    # tier-dependent (heap pops vs chain-node evaluations).
+    engine: str = field(default="event", compare=False)
     # columnar event timeline: compute lanes (FD/BD/GU) are always
     # recorded; NoC/DRAM busy-interval lanes when the simulator ran with
     # ``collect_timeline=True``
@@ -157,7 +163,12 @@ class PipelineSimulator:
         collect_timeline: bool = False,
         boundary_mode: BoundaryMode = BoundaryMode.PAIRWISE,
         memory_plan: Optional[Tuple[List[StageMemory], bool]] = None,
+        engine: str = "event",
     ):
+        if engine not in ("event", "auto", "fast"):
+            raise ValueError(f"unknown engine {engine!r} "
+                             "(expected 'event', 'auto' or 'fast')")
+        self.engine = engine
         self.mapped = mapped
         self.plan: ParallelPlan = mapped.plan
         self.hw: HardwareSpec = mapped.hardware
@@ -204,6 +215,12 @@ class PipelineSimulator:
             for st in mapped.stages]
 
         self._fd_done_t: Dict[Tuple[int, int], float] = {}
+        # event causality: trace row index per compute event, last row per
+        # stage proc, and last releaser row per shared compute resource —
+        # what makes ``Trace.critical_path()`` exact under contention
+        self._row_idx: Dict[Tuple[int, int, int], int] = {}
+        self._prev_row: List[int] = [-1] * S
+        self._last_res_row: Dict[Tuple[int, ...], int] = {}
         self._gu_done: List[Event] = [self.env.event(f"gu[{s}]") for s in range(S)]
         # interleaved 1F1B: virtual stages sharing a tile group serialize
         # on the group's compute resource (BD pre-empts queued FD — the
@@ -280,11 +297,21 @@ class PipelineSimulator:
     def _run_fd(self, sid: int, mb: int) -> Generator:
         stage = self.mapped.stages[sid]
         env = self.env
+        t_enter = env.now
         yield self.act_ready[sid][mb]
+        t_ready = env.now
         res, req = self._acquire_compute(sid, priority=1)   # FD after BD
         if req is not None:
             yield req
         start = env.now
+        # causality: what bound this event's start? (priority order:
+        # contended compute resource > upstream Act Pass > stage order)
+        if res is not None and start > t_ready:
+            pred = self._last_res_row.get(tuple(stage.devices), -1)
+        elif t_ready > t_enter and sid > 0:
+            pred = self._row_idx.get((sid - 1, KIND_FD, mb), -1)
+        else:
+            pred = self._prev_row[sid]
         if sid == 0 and stage.split_ops:
             # Data Fetch: input micro-batch from DRAM
             first = stage.split_ops[0]
@@ -296,8 +323,11 @@ class PipelineSimulator:
                 self._compute_time(split.fwd_flops_tile, split.matmul_fraction))
             yield from self._stage_collectives(stage, split.comms, FD, priority=1)
         self._fd_done_t[(sid, mb)] = env.now
-        self.recorder.compute(sid, KIND_FD, mb, start, env.now)
+        row = self.recorder.compute(sid, KIND_FD, mb, start, env.now, pred)
+        self._row_idx[(sid, KIND_FD, mb)] = row
+        self._prev_row[sid] = row
         if res is not None:
+            self._last_res_row[tuple(stage.devices)] = row
             res.release(req)
         # Act Pass -> next stage (start signal)
         if sid + 1 < self.mapped.num_stages:
@@ -309,11 +339,21 @@ class PipelineSimulator:
     def _run_bd(self, sid: int, mb: int, pending_dp: List) -> Generator:
         stage = self.mapped.stages[sid]
         env = self.env
+        t_enter = env.now
         yield self.grad_ready[sid][mb]
+        t_ready = env.now
         res, req = self._acquire_compute(sid, priority=0)   # BD first (1F1B)
         if req is not None:
             yield req
         start = env.now
+        if res is not None and start > t_ready:
+            pred = self._last_res_row.get(tuple(stage.devices), -1)
+        elif t_ready > t_enter:
+            pred = (self._row_idx.get((sid, KIND_FD, mb), -1)
+                    if sid == self.mapped.num_stages - 1
+                    else self._row_idx.get((sid + 1, KIND_BD, mb), -1))
+        else:
+            pred = self._prev_row[sid]
         for split, acc in zip(reversed(stage.split_ops), reversed(self.access[sid])):
             compute = self._compute_time(split.bwd_flops_tile, split.matmul_fraction)
             if self.recompute:  # Fig. 5 Recompute sub-process
@@ -326,8 +366,11 @@ class PipelineSimulator:
                 # DP gradient sync: async, overlaps later compute (Fig. 5)
                 pending_dp.append(env.process(
                     self._stage_collectives(stage, split.comms, GU, priority=2)))
-        self.recorder.compute(sid, KIND_BD, mb, start, env.now)
+        row = self.recorder.compute(sid, KIND_BD, mb, start, env.now, pred)
+        self._row_idx[(sid, KIND_BD, mb)] = row
+        self._prev_row[sid] = row
         if res is not None:
+            self._last_res_row[tuple(stage.devices)] = row
             res.release(req)
         if sid > 0:
             yield from self._boundary_pass(sid, sid - 1, mb, kind="grad")
@@ -336,9 +379,13 @@ class PipelineSimulator:
     def _run_gu(self, sid: int, pending_dp: List) -> Generator:
         stage = self.mapped.stages[sid]
         env = self.env
+        t_enter = env.now
         if pending_dp:
             yield env.all_of(pending_dp)
         start = env.now
+        pred = (self._row_idx.get(
+                    (sid, KIND_BD, self.plan.num_microbatches - 1), -1)
+                if start > t_enter else self._prev_row[sid])
         gu_bytes = sum(a.gu_bytes for a in self.access[sid])
         if gu_bytes > 0:
             # full-precision weight load from DRAM and store back (§IV-A);
@@ -349,7 +396,9 @@ class PipelineSimulator:
             yield env.process(self.dram.group_access(
                 stage.devices, 0.0, write=True, shared_bytes=gu_bytes / 2,
                 num_shards=stage.weight_shards))
-        self.recorder.compute(sid, KIND_GU, 0, start, env.now)
+        row = self.recorder.compute(sid, KIND_GU, 0, start, env.now, pred)
+        self._row_idx[(sid, KIND_GU, 0)] = row
+        self._prev_row[sid] = row
         self._gu_done[sid].succeed()
 
     def _boundary_pass(self, src: int, dst: int, mb: int, kind: str) -> Generator:
@@ -401,6 +450,22 @@ class PipelineSimulator:
 
     # -- entry ----------------------------------------------------------------
     def run(self) -> SimResult:
+        """Simulate per the configured engine.
+
+        ``event`` always runs the generator/heap kernel; ``auto`` tries the
+        closed-form fast tier first (bit-identical when it applies) and
+        silently falls back on static ineligibility or detected resource
+        contention; ``fast`` demands the fast tier and raises
+        :class:`~repro.core.fastpath.FastPathIneligible` otherwise."""
+        if self.engine != "event":
+            from .fastpath import try_fast_run
+
+            result = try_fast_run(self, strict=(self.engine == "fast"))
+            if result is not None:
+                return result
+        return self._run_event()
+
+    def _run_event(self) -> SimResult:
         env = self.env
         procs = [env.process(self._stage_proc(s), name=f"stage{s}")
                  for s in range(self.mapped.num_stages)]

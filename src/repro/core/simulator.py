@@ -38,19 +38,26 @@ def simulate(
     noc_mode: NoCMode = NoCMode.MACRO,
     collect_timeline: bool = False,
     boundary_mode: BoundaryMode = BoundaryMode.PAIRWISE,
+    engine: str = "event",
 ) -> SimResult:
     """Run PALM once. ``graph`` must be built with per-iteration batch
     ``plan.microbatch * plan.dp`` (the DP group's micro-batch).
 
     The result's columnar ``trace`` always carries the FD/BD/GU compute
     lanes; ``collect_timeline=True`` additionally records NoC-link and
-    DRAM-channel busy intervals (resource lanes)."""
+    DRAM-channel busy intervals (resource lanes).
+
+    ``engine`` selects the simulator tier: ``"event"`` (the generator/
+    heap kernel), ``"auto"`` (try the bit-identical closed-form fast
+    tier, fall back on contention) or ``"fast"`` (fast tier or raise) —
+    see :mod:`repro.core.fastpath`."""
     noc_mode = NoCMode(noc_mode)
     boundary_mode = BoundaryMode(boundary_mode)
     mapped = map_graph(graph, hardware, plan)
     sim = PipelineSimulator(mapped, noc_mode=noc_mode,
                             collect_timeline=collect_timeline,
-                            boundary_mode=boundary_mode)
+                            boundary_mode=boundary_mode,
+                            engine=engine)
     return sim.run()
 
 
@@ -70,6 +77,7 @@ def sweep_plans(
     plans: Iterable[ParallelPlan],
     noc_mode: NoCMode = NoCMode.MACRO,
     memory_cap: Optional[float] = None,
+    engine: str = "event",
 ) -> List[PlanResult]:
     """Evaluate many parallelism strategies; returns results sorted by
     throughput (best first). Plans whose per-tile footprint exceeds
@@ -86,7 +94,8 @@ def sweep_plans(
             mem_plan = plan_memory(mapped)
             if max(m.total for m in mem_plan[0]) > memory_cap:
                 continue
-        sim = PipelineSimulator(mapped, noc_mode=noc_mode, memory_plan=mem_plan)
+        sim = PipelineSimulator(mapped, noc_mode=noc_mode, memory_plan=mem_plan,
+                                engine=engine)
         out.append(PlanResult(plan=plan, result=sim.run()))
     out.sort(key=lambda r: -r.throughput)
     return out

@@ -47,7 +47,7 @@ __all__ = [
     "KIND_FD", "KIND_BD", "KIND_GU", "KIND_NOC", "KIND_DRAM",
     "KIND_PREFILL", "KIND_DECODE", "KIND_QUEUE", "KIND_FABRIC",
     "KIND_NAMES", "KIND_CODES", "COMPUTE_KINDS", "RESOURCE_KINDS",
-    "REQUEST_KINDS",
+    "REQUEST_KINDS", "pack_lane",
     "TraceRow", "Trace", "TraceRecorder", "TraceDiff", "chrome_trace",
     "diff",
 ]
@@ -63,6 +63,18 @@ KIND_PREFILL, KIND_DECODE, KIND_QUEUE = 5, 6, 7
 # column carries the fabric link id
 KIND_FABRIC = 8
 
+
+def pack_lane(kind: int, lane: int) -> int:
+    """Pack a ``(kind, lane)`` resource identity into one int.
+
+    The fast tier (:mod:`repro.core.fastpath`) records busy intervals on
+    packed lanes so validation can lexsort a flat int column; the packing
+    is order-preserving (kind major, lane minor — both non-negative and
+    lane < 2**32), so sorting packed ints equals sorting the tuples.
+    """
+    return (kind << 32) | lane
+
+
 KIND_NAMES: Tuple[str, ...] = ("FD", "BD", "GU", "NOC", "DRAM",
                                "PREFILL", "DECODE", "QUEUE", "FABRIC")
 KIND_CODES: Dict[str, int] = {name: code for code, name in enumerate(KIND_NAMES)}
@@ -70,7 +82,7 @@ COMPUTE_KINDS: Tuple[int, ...] = (KIND_FD, KIND_BD, KIND_GU)
 RESOURCE_KINDS: Tuple[int, ...] = (KIND_NOC, KIND_DRAM, KIND_FABRIC)
 REQUEST_KINDS: Tuple[int, ...] = (KIND_PREFILL, KIND_DECODE, KIND_QUEUE)
 
-_SCHEMA = 1
+_SCHEMA = 2          # v2 adds the per-row `pred` causality column
 _MAGIC = b"PTRC"
 
 # array.array typecodes with guaranteed widths (int is 4 bytes on every
@@ -206,15 +218,20 @@ class Trace:
     """
 
     __slots__ = ("stage", "kind", "micro", "resource", "start", "end",
-                 "total_time", "num_stages")
+                 "pred", "total_time", "num_stages")
 
     def __init__(self, stage: Sequence[int] = (), kind: Sequence[int] = (),
                  micro: Sequence[int] = (), resource: Sequence[int] = (),
                  start: Sequence[float] = (), end: Sequence[float] = (),
+                 pred: Optional[Sequence[int]] = None,
                  total_time: float = 0.0, num_stages: int = 0):
         n = len(stage)
         if not (len(kind) == len(micro) == len(resource) == len(start)
                 == len(end) == n):
+            raise ValueError("trace columns must have equal length")
+        if pred is None:
+            pred = [-1] * n
+        elif len(pred) != n:
             raise ValueError("trace columns must have equal length")
         self.stage = _col(_I32, stage)
         self.kind = _col("b", kind)
@@ -222,6 +239,12 @@ class Trace:
         self.resource = _col(_I32, resource)
         self.start = _col("d", start)
         self.end = _col("d", end)
+        # `pred[i]` is the row index of the event whose completion bound
+        # row i's start (-1 = unknown / no predecessor): explicit event
+        # causality recorded by the scheduler, making critical_path()
+        # exact even when resource contention delays an event past its
+        # structural dependencies
+        self.pred = _col(_I32, pred)
         self.total_time = float(total_time)
         self.num_stages = int(num_stages)
 
@@ -240,7 +263,7 @@ class Trace:
                 and self.num_stages == other.num_stages
                 and all(_col_eq(getattr(self, c), getattr(other, c))
                         for c in ("stage", "kind", "micro", "resource",
-                                  "start", "end")))
+                                  "start", "end", "pred")))
 
     def __ne__(self, other: object) -> bool:
         eq = self.__eq__(other)
@@ -265,7 +288,7 @@ class Trace:
         """In-memory column payload size (bytes)."""
         return sum(len(getattr(self, c)) * _itemsize(getattr(self, c))
                    for c in ("stage", "kind", "micro", "resource", "start",
-                             "end"))
+                             "end", "pred"))
 
     # -- legacy view ---------------------------------------------------------
     def compute_tuples(self) -> List[Tuple[int, str, int, float, float]]:
@@ -296,21 +319,31 @@ class Trace:
         return self._take(idx)
 
     def _take(self, idx: List[int]) -> "Trace":
+        # pred indices are row positions: remap through the selection,
+        # dropping edges whose predecessor was filtered out
+        remap = {old: new for new, old in enumerate(idx)}
         return Trace(stage=[int(self.stage[i]) for i in idx],
                      kind=[int(self.kind[i]) for i in idx],
                      micro=[int(self.micro[i]) for i in idx],
                      resource=[int(self.resource[i]) for i in idx],
                      start=[float(self.start[i]) for i in idx],
                      end=[float(self.end[i]) for i in idx],
+                     pred=[remap.get(int(self.pred[i]), -1) for i in idx],
                      total_time=self.total_time, num_stages=self.num_stages)
 
     @classmethod
     def concat(cls, traces: Sequence["Trace"]) -> "Trace":
         """Row-wise concatenation; total_time is the max horizon and
-        num_stages the max stage count of the parts."""
+        num_stages the max stage count of the parts. pred indices are
+        offset so each part's causality edges stay internally valid."""
         traces = list(traces)
         if not traces:
             return cls()
+        pred: List[int] = []
+        base = 0
+        for t in traces:
+            pred.extend(int(p) + base if int(p) >= 0 else -1 for p in t.pred)
+            base += len(t)
         return cls(
             stage=[s for t in traces for s in t.stage],
             kind=[k for t in traces for k in t.kind],
@@ -318,8 +351,22 @@ class Trace:
             resource=[r for t in traces for r in t.resource],
             start=[x for t in traces for x in t.start],
             end=[x for t in traces for x in t.end],
+            pred=pred,
             total_time=max(t.total_time for t in traces),
             num_stages=max(t.num_stages for t in traces))
+
+    def canonical(self) -> "Trace":
+        """Deterministically ordered copy: rows sorted by
+        ``(end, start, kind, stage, micro, resource)`` with pred edges
+        remapped through the permutation. Event-tier and fast-tier runs
+        of the same workload record identical row *sets* but may differ
+        in append order (completion order vs. analytic replay order) —
+        compare their ``canonical()`` forms."""
+        idx = sorted(range(len(self)),
+                     key=lambda i: (float(self.end[i]), float(self.start[i]),
+                                    int(self.kind[i]), int(self.stage[i]),
+                                    int(self.micro[i]), int(self.resource[i])))
+        return self._take(idx)
 
     # -- analytics -----------------------------------------------------------
     def stage_busy(self, kinds: Sequence[int] = (KIND_FD, KIND_BD)) -> Dict[int, float]:
@@ -364,11 +411,32 @@ class Trace:
         """Binding-dependency chain through the compute lanes, in
         chronological order.
 
-        Walks back from the last-finishing compute event; at each step the
-        predecessor is the latest-ending candidate among the event's
-        structural dependencies (previous event on the same stage; the
-        upstream FD for an FD; the downstream BD — or the local loss FD —
-        for a BD; the stage's last BD for a GU)."""
+        When the trace carries recorded causality (``pred`` column, any
+        entry >= 0) the path is *exact*: it follows the scheduler's
+        per-event binding-predecessor edges, which account for resource
+        contention (a compute event delayed by a shared tile group points
+        at the event that released the resource, not at a structural
+        neighbour). Traces without recorded causality (schema-1 files,
+        serving timelines) fall back to the structural heuristic: walking
+        back from the last-finishing compute event, the predecessor is
+        the latest-ending candidate among the event's structural
+        dependencies (previous event on the same stage; the upstream FD
+        for an FD; the downstream BD — or the local loss FD — for a BD;
+        the stage's last BD for a GU)."""
+        if self._has_pred():
+            comp_idx = [i for i in range(len(self))
+                        if int(self.kind[i]) in COMPUTE_KINDS]
+            if not comp_idx:
+                return []
+            cur = max(comp_idx, key=lambda i: (float(self.end[i]), i))
+            path: List[TraceRow] = []
+            seen = set()
+            while 0 <= cur < len(self) and cur not in seen:
+                seen.add(cur)
+                path.append(self[cur])
+                cur = int(self.pred[cur])
+            path.reverse()
+            return path
         comp = [(i, TraceRow(int(self.stage[i]), int(self.kind[i]),
                              int(self.micro[i]), int(self.resource[i]),
                              float(self.start[i]), float(self.end[i])))
@@ -411,6 +479,12 @@ class Trace:
         path.reverse()
         return path
 
+    def _has_pred(self) -> bool:
+        """True when any row carries a recorded causality edge."""
+        if _np is not None and isinstance(self.pred, _np.ndarray):
+            return bool((self.pred >= 0).any())
+        return any(p >= 0 for p in self.pred)
+
     def summary(self) -> Dict[str, Any]:
         """JSON-safe analytics digest (what reports embed)."""
         path = self.critical_path()
@@ -426,6 +500,7 @@ class Trace:
             "critical_path": {
                 "length": len(path),
                 "busy_time": sum(r.duration for r in path),
+                "exact": self._has_pred(),
             },
             "noc_occupancy": {str(k): v
                               for k, v in self.resource_occupancy(KIND_NOC).items()},
@@ -448,14 +523,17 @@ class Trace:
             "resource": [int(v) for v in self.resource],
             "start": [float(v) for v in self.start],
             "end": [float(v) for v in self.end],
+            "pred": [int(v) for v in self.pred],
         }
 
     @classmethod
     def from_dict(cls, d: Dict[str, Any]) -> "Trace":
-        if d.get("schema", _SCHEMA) != _SCHEMA:
+        # schema 1 lacks the pred column; it reads back as all -1
+        if d.get("schema", _SCHEMA) not in (1, _SCHEMA):
             raise ValueError(f"unknown trace schema {d.get('schema')!r}")
         return cls(stage=d["stage"], kind=d["kind"], micro=d["micro"],
                    resource=d["resource"], start=d["start"], end=d["end"],
+                   pred=d.get("pred"),
                    total_time=d["total_time"], num_stages=d["num_stages"])
 
     def to_bytes(self) -> bytes:
@@ -469,8 +547,15 @@ class Trace:
         list for the (rare) rows where ``end - dur`` does not reproduce
         ``start`` bit-exactly. Float payloads are byte-shuffled, then the
         whole body is zlib-compressed."""
+        # pred is near-monotone (mostly "the previous row on this stage"),
+        # so it ships as the small, highly repetitive offset `i - pred[i]`;
+        # the no-predecessor rows (-1) ship as 0, which is unambiguous
+        # (a real pred is always an earlier row, so i - pred >= 1)
         start = [float(v) for v in self.start] if _np is None else None
         if _np is None:
+            pred_b = _col_bytes(_col(_I32, [0 if p < 0 else i - int(p)
+                                            for i, p
+                                            in enumerate(self.pred)]))
             end = [float(v) for v in self.end]
             dur = [e - s for s, e in zip(start, end)]
             fix_idx = [i for i in range(len(self))
@@ -479,6 +564,10 @@ class Trace:
             fix_idx_b = _col_bytes(_col(_I32, fix_idx))
             fix_val_b = _col_bytes(_col("d", [start[i] for i in fix_idx]))
         else:
+            rel = (_np.arange(len(self), dtype=_np.int64)
+                   - self.pred).astype(_np.int32)
+            rel[self.pred < 0] = 0
+            pred_b = _col_bytes(rel)
             dur = self.end - self.start
             bad = (self.end - dur) != self.start
             idx = _np.nonzero(bad)[0].astype(_np.int32)
@@ -488,6 +577,7 @@ class Trace:
             fix_idx = idx
         body = (_col_bytes(self.stage) + _col_bytes(self.kind)
                 + _col_bytes(self.micro) + _col_bytes(self.resource)
+                + pred_b
                 + _shuffle(_xor_delta(_col_bytes(self.end)), 8)
                 + _shuffle(dur_b, 8) + fix_idx_b + fix_val_b)
         header = json.dumps({"v": _SCHEMA, "n": len(self),
@@ -503,17 +593,22 @@ class Trace:
             raise ValueError("not a Trace byte stream")
         (hlen,) = struct.unpack("<I", blob[4:8])
         meta = json.loads(blob[8:8 + hlen].decode())
-        if meta["v"] != _SCHEMA:
+        if meta["v"] not in (1, _SCHEMA):
             raise ValueError(f"unknown trace schema {meta['v']!r}")
+        has_pred = meta["v"] >= 2       # schema-1 blobs lack the pred column
         n, nfix = meta["n"], meta["nfix"]
         body = zlib.decompress(blob[8 + hlen:])
-        sizes = [4 * n, n, 4 * n, 4 * n, 8 * n, 8 * n, 4 * nfix, 8 * nfix]
+        sizes = [4 * n, n, 4 * n, 4 * n]
+        if has_pred:
+            sizes.append(4 * n)
+        sizes += [8 * n, 8 * n, 4 * nfix, 8 * nfix]
         if len(body) != sum(sizes):
             raise ValueError("corrupt trace payload")
         parts, off = [], 0
         for sz in sizes:
             parts.append(body[off:off + sz])
             off += sz
+        pred_b = parts.pop(4) if has_pred else None
         end_b = _xor_undelta(_unshuffle(parts[4], 8))
         end = _col_from_bytes("d", end_b)
         dur = _col_from_bytes("d", _unshuffle(parts[5], 8))
@@ -531,6 +626,18 @@ class Trace:
         out.kind = _col_from_bytes("b", parts[1])
         out.micro = _col_from_bytes(_I32, parts[2])
         out.resource = _col_from_bytes(_I32, parts[3])
+        if pred_b is None:
+            out.pred = _col(_I32, [-1] * n)
+        else:
+            rel = _col_from_bytes(_I32, pred_b)
+            if _np is not None:
+                pred = (_np.arange(n, dtype=_np.int64)
+                        - rel).astype(_np.int32)
+                pred[_np.asarray(rel) == 0] = -1
+                out.pred = pred
+            else:
+                out.pred = _col(_I32, [-1 if r == 0 else i - int(r)
+                                       for i, r in enumerate(rel)])
         out.start = _col("d", start)
         out.end = end
         out.total_time = float(meta["total_time"])
@@ -554,6 +661,7 @@ class Trace:
             resource=_np.asarray(self.resource, dtype=_np.int32),
             start=_np.asarray(self.start, dtype=_np.float64),
             end=_np.asarray(self.end, dtype=_np.float64),
+            pred=_np.asarray(self.pred, dtype=_np.int32),
             meta=_np.array([self.total_time, float(self.num_stages),
                             float(_SCHEMA)]))
 
@@ -563,10 +671,11 @@ class Trace:
             raise RuntimeError("from_npz needs numpy")
         with _np.load(path) as z:
             meta = z["meta"]
-            if int(meta[2]) != _SCHEMA:
+            if int(meta[2]) not in (1, _SCHEMA):
                 raise ValueError(f"unknown trace schema {int(meta[2])}")
             return cls(stage=z["stage"], kind=z["kind"], micro=z["micro"],
                        resource=z["resource"], start=z["start"], end=z["end"],
+                       pred=z["pred"] if "pred" in z.files else None,
                        total_time=float(meta[0]), num_stages=int(meta[1]))
 
 
@@ -589,19 +698,25 @@ class TraceRecorder:
         self._resource: List[int] = []
         self._start: List[float] = []
         self._end: List[float] = []
+        self._pred: List[int] = []
 
     def __len__(self) -> int:
         return len(self._stage)
 
     def compute(self, stage: int, kind: int, micro: int,
-                start: float, end: float) -> None:
-        """One FD/BD/GU event on a pipeline stage."""
+                start: float, end: float, pred: int = -1) -> int:
+        """One FD/BD/GU event on a pipeline stage. ``pred`` is the row
+        index of the event whose completion bound this event's start
+        (-1 = none known). Returns this row's index so callers can wire
+        later events' causality to it."""
         self._stage.append(stage)
         self._kind.append(kind)
         self._micro.append(micro)
         self._resource.append(-1)
         self._start.append(start)
         self._end.append(end)
+        self._pred.append(pred)
+        return len(self._stage) - 1
 
     def resource(self, kind: int, resource_id: int,
                  start: float, end: float) -> None:
@@ -612,6 +727,7 @@ class TraceRecorder:
         self._resource.append(resource_id)
         self._start.append(start)
         self._end.append(end)
+        self._pred.append(-1)
 
     def request(self, kind: int, request_id: int, episode: int,
                 start: float, end: float) -> None:
@@ -624,6 +740,7 @@ class TraceRecorder:
         self._resource.append(request_id)
         self._start.append(start)
         self._end.append(end)
+        self._pred.append(-1)
 
     def interval_cb(self, kind: int, resource_id: int) -> Callable[[float, float], None]:
         """Busy-interval callback for one resource (what
@@ -635,7 +752,7 @@ class TraceRecorder:
     def freeze(self, total_time: float, num_stages: int) -> Trace:
         return Trace(stage=self._stage, kind=self._kind, micro=self._micro,
                      resource=self._resource, start=self._start,
-                     end=self._end, total_time=total_time,
+                     end=self._end, pred=self._pred, total_time=total_time,
                      num_stages=num_stages)
 
 

@@ -37,7 +37,7 @@ from ..core.enums import NoCMode
 from ..core.events import Environment, Resource
 from ..core.hardware import HardwareSpec
 from ..core.noc import NoCModel
-from ..core.trace import KIND_FABRIC, TraceRecorder
+from ..core.trace import KIND_FABRIC, TraceRecorder, pack_lane
 from .collectives import Rounds, rounds_for
 from .spec import FabricSpec
 
@@ -364,6 +364,117 @@ class FabricModel:
         else:
             raise ValueError(f"unknown collective kind {kind!r}")
 
+    # -- fast-path pricing (repro.core.fastpath) -------------------------------
+    def _fabric_leg_chain(self, src_chip: int, dst_chip: int,
+                          nbytes: float) -> List:
+        """Uncontended price of :meth:`_fabric_leg` as a fast-path chain."""
+        route = self.spec.route(src_chip, dst_chip)
+        t = self._path_time(route, nbytes)
+        if self.mode == NoCMode.ANALYTICAL or not route:
+            return [("bytes", "fabric", nbytes), ("dt", t)]
+        return [("bytes", "fabric", nbytes),
+                ("hold", tuple(pack_lane(KIND_FABRIC, fid)
+                               for fid in sorted(set(route))), t)]
+
+    def transfer_chain(self, src: int, dst: int, nbytes: float) -> List:
+        """Uncontended price of :meth:`transfer` as a fast-path chain."""
+        cs, cd = self.chip_of(src), self.chip_of(dst)
+        if cs == cd:
+            return self.nocs[cs].transfer_chain(self.local(src),
+                                                self.local(dst), nbytes)
+        chain: List = []
+        if self.local(src) != GATEWAY:
+            chain.extend(self.nocs[cs].transfer_chain(self.local(src),
+                                                      GATEWAY, nbytes))
+        chain.extend(self._fabric_leg_chain(cs, cd, nbytes))
+        if self.local(dst) != GATEWAY:
+            chain.extend(self.nocs[cd].transfer_chain(GATEWAY,
+                                                      self.local(dst), nbytes))
+        return chain
+
+    def _exec_rounds_chain(self, rounds: Rounds) -> List:
+        """Uncontended price of :meth:`_exec_rounds` as a fast-path chain."""
+        if not rounds:
+            return [("dt", 0.0)]
+        if self.mode == NoCMode.DETAILED:
+            return [("par", tuple(self._fabric_leg_chain(s, d, b)
+                                  for s, d, b in rnd))
+                    for rnd in rounds]
+        total_bytes = sum(b for rnd in rounds for _, _, b in rnd)
+        t = self._rounds_time(rounds)
+        if self.mode == NoCMode.ANALYTICAL:
+            return [("bytes", "fabric", total_bytes), ("dt", t)]
+        return [("bytes", "fabric", total_bytes),
+                ("hold", tuple(pack_lane(KIND_FABRIC, fid)
+                               for fid in self._rounds_footprint(rounds)), t)]
+
+    def _intra_chain(self, by_chip: Dict[int, List[int]], kind: str,
+                     nbytes: float,
+                     roots: Optional[Dict[int, int]] = None) -> List:
+        """Uncontended price of :meth:`_intra` as a fast-path chain."""
+        branches = []
+        for chip in sorted(by_chip):
+            locs = by_chip[chip]
+            if len(locs) > 1:
+                root = roots.get(chip) if roots is not None else None
+                branches.append(self.nocs[chip].collective_chain(
+                    kind, locs, nbytes, root=root))
+        return [("par", tuple(branches))] if branches else [("dt", 0.0)]
+
+    def collective_chain(self, kind: str, group: Sequence[int], nbytes: float,
+                         root: Optional[int] = None) -> List:
+        """Uncontended price of :meth:`collective` as a fast-path chain."""
+        if len(group) <= 1 or nbytes <= 0:
+            return [("dt", 0.0)]
+        by_chip: Dict[int, List[int]] = {}
+        for d in group:
+            by_chip.setdefault(self.chip_of(d), []).append(self.local(d))
+        if len(by_chip) == 1:
+            chip, locs = next(iter(by_chip.items()))
+            local_root = (self.local(root)
+                          if root is not None and self.chip_of(root) == chip
+                          else None)
+            return self.nocs[chip].collective_chain(kind, locs, nbytes,
+                                                    root=local_root)
+        chips = sorted(by_chip)
+        leaders = {chip: min(locs) for chip, locs in by_chip.items()}
+        root_chip = self.chip_of(root) if root is not None else chips[0]
+        chain: List = []
+        if kind == "all_reduce":
+            chain += self._intra_chain(by_chip, "reduce", nbytes,
+                                       roots=leaders)
+            chain += self._exec_rounds_chain(
+                self._cross_rounds("all_reduce", chips, nbytes))
+            chain += self._intra_chain(by_chip, "broadcast", nbytes,
+                                       roots=leaders)
+        elif kind in ("reduce_scatter", "all_gather"):
+            if kind == "reduce_scatter":
+                chain += self._intra_chain(by_chip, kind, nbytes)
+                chain += self._exec_rounds_chain(
+                    self._cross_rounds(kind, chips, nbytes))
+            else:
+                chain += self._exec_rounds_chain(
+                    self._cross_rounds(kind, chips, nbytes))
+                chain += self._intra_chain(by_chip, kind, nbytes)
+        elif kind == "all_to_all":
+            chain += self._intra_chain(by_chip, kind, nbytes)
+            chain += self._exec_rounds_chain(
+                self._cross_rounds(kind, chips, nbytes))
+        elif kind == "broadcast":
+            chain += self._exec_rounds_chain(
+                rounds_for("tree", "broadcast", chips, nbytes,
+                           root=root_chip))
+            chain += self._intra_chain(by_chip, "broadcast", nbytes,
+                                       roots=leaders)
+        elif kind == "reduce":
+            chain += self._intra_chain(by_chip, "reduce", nbytes,
+                                       roots=leaders)
+            chain += self._exec_rounds_chain(
+                rounds_for("tree", "reduce", chips, nbytes, root=root_chip))
+        else:
+            raise ValueError(f"unknown collective kind {kind!r}")
+        return chain
+
     def group_to_group(self, src_group: Sequence[int],
                        dst_group: Sequence[int], nbytes: float,
                        strategy: int = 1, num_adapters: int = 1,
@@ -439,6 +550,29 @@ class ClusterDRAM:
         chip = self.fabric.chip_of(device)
         yield self.env.process(self.drams[chip].access(
             self.fabric.local(device), nbytes, priority, write))
+
+    # -- fast-path pricing (repro.core.fastpath) -------------------------------
+    def access_chain(self, device: int, nbytes: float,
+                     write: bool = False) -> List:
+        chip = self.fabric.chip_of(device)
+        return self.drams[chip].access_chain(self.fabric.local(device),
+                                             nbytes, write)
+
+    def group_access_chain(self, devices, nbytes_per_device: float,
+                           write: bool = False, shared_bytes: float = 0.0,
+                           num_shards: int = 1) -> List:
+        devs = list(devices)
+        by_chip: Dict[int, List[int]] = {}
+        for d in devs:
+            by_chip.setdefault(self.fabric.chip_of(d), []).append(
+                self.fabric.local(d))
+        n_total = max(1, len(devs))
+        branches = [self.drams[chip].group_access_chain(
+                        by_chip[chip], nbytes_per_device, write,
+                        shared_bytes * len(by_chip[chip]) / n_total,
+                        num_shards)
+                    for chip in sorted(by_chip)]
+        return [("par", tuple(branches))] if branches else [("dt", 0.0)]
 
     def group_access(self, devices, nbytes_per_device: float,
                      priority: int = 0, write: bool = False,

@@ -40,10 +40,18 @@ class Fidelity:
     noc_mode: Optional[NoCMode] = None       # None = the experiment's mode
     max_microbatches: Optional[int] = None   # None = the plan's full count
     max_requests: Optional[int] = None       # None = the workload's full count
+    # simulator tier (repro.core.fastpath): None = the experiment's engine.
+    # "auto" is result-preserving (the fast tier is bit-identical when it
+    # fires), so it does NOT reduce fidelity — it's a pure cost knob and
+    # the natural floor of every ladder.
+    engine: Optional[str] = None
 
     def __post_init__(self):
         if self.noc_mode is not None:
             object.__setattr__(self, "noc_mode", NoCMode(self.noc_mode))
+        if self.engine is not None and self.engine not in ("event", "auto",
+                                                           "fast"):
+            raise ValueError(f"unknown engine {self.engine!r}")
         if self.max_microbatches is not None and self.max_microbatches < 1:
             raise ValueError("max_microbatches must be >= 1")
         if self.max_requests is not None and self.max_requests < 1:
@@ -110,8 +118,8 @@ def default_ladder(noc_mode: NoCMode = NoCMode.MACRO,
     noc_mode = NoCMode(noc_mode)
     mid_noc = NoCMode.MACRO if noc_mode == NoCMode.DETAILED else noc_mode
     ladder = [
-        Fidelity("analytical-mb2", NoCMode.ANALYTICAL, 2, 8),
-        Fidelity(f"{mid_noc}-mb4", mid_noc, 4, 32),
+        Fidelity("analytical-mb2", NoCMode.ANALYTICAL, 2, 8, engine="auto"),
+        Fidelity(f"{mid_noc}-mb4", mid_noc, 4, 32, engine="auto"),
         FULL,
     ]
     return ladder[3 - num_rungs:]

@@ -1,0 +1,220 @@
+"""Two-tier simulator core: the analytic fast tier must be bit-identical
+to the event tier wherever the contention classifier accepts it, fall
+back (or raise under ``engine="fast"``) where it does not, and the
+recorded ``pred`` causality must make ``Trace.critical_path()`` exact on
+contended timelines."""
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.core import (
+    DRAMSpec,
+    Environment,
+    FastPathIneligible,
+    HardwareSpec,
+    KIND_BD,
+    KIND_FD,
+    MeshSpec,
+    NoCMode,
+    ParallelPlan,
+    PipelineSimulator,
+    Schedule,
+    TileSpec,
+    TraceRecorder,
+    map_graph,
+    simulate,
+    transformer_lm_graph,
+)
+from repro.core.hardware import tiled_cluster
+
+from proptools import given
+
+ROOT = Path(__file__).resolve().parents[1]
+GB = 1e9
+
+
+def _mesh_hw(n: int, tile_shape=(2, 2), ports=False) -> HardwareSpec:
+    spec = MeshSpec(rows=n, cols=n, intra_bw=64 * GB, inter_bw=16 * GB,
+                    link_latency=2e-8, tile_shape=tile_shape)
+    topo = spec.compile()
+    kw = {}
+    if ports:
+        kw["dram_ports"] = (topo.device(0, 0),)
+    return HardwareSpec(
+        name=f"mesh{n}", topology=topo,
+        tile=TileSpec(flops=4e12, sram_bytes=2e6),
+        dram=DRAMSpec(bandwidth=64 * GB, response_time=3e-7, channels=4),
+        **kw)
+
+
+def _identical(a, b):
+    return (a.total_time == b.total_time
+            and a.throughput == b.throughput
+            and a.bubble_ratio == b.bubble_ratio
+            and a.noc_bytes == b.noc_bytes
+            and a.dram_bytes == b.dram_bytes
+            and a.trace.canonical() == b.trace.canonical())
+
+
+_FAST_HITS = []          # fast-tier selections across the property cases
+
+
+@given(n_cases=20, seed=7)
+def test_prop_fast_tier_bit_identity(rng, case):
+    """engine="auto" must price every randomly drawn (hardware, plan,
+    NoC-mode) point bit-identically to the event kernel — byte-equal
+    canonical traces included — whether it takes the fast tier or falls
+    back; and across the draw the fast tier must actually fire."""
+    if rng.random() < 0.25:
+        hw = tiled_cluster()
+        pp, dp, tp = [(1, 2, 2), (2, 1, 2), (2, 2, 4),
+                      (2, 2, 2)][rng.integers(4)]
+    else:
+        n = int(rng.choice([4, 8]))
+        hw = _mesh_hw(n, tile_shape=(2, 2) if rng.random() < 0.5 else (4, 4),
+                      ports=bool(rng.random() < 0.5))
+        pp, dp, tp = [(1, 1, 1), (2, 1, 1), (2, 1, 2), (2, 2, 1),
+                      (4, 1, 1), (1, 2, 2)][rng.integers(6)]
+    layers = int(rng.integers(1, 3))
+    graph = transformer_lm_graph("t", layers, 256, 4, 64, 1, vocab=512,
+                                 include_embedding=bool(rng.random() < 0.5))
+    pp = min(pp, len(graph.ops))         # a stage needs at least one op
+    mb = int(rng.choice([1, 2]))
+    plan = ParallelPlan(
+        pp=pp, dp=dp, tp=tp, microbatch=mb,
+        global_batch=mb * dp * int(rng.choice([2, 4])),
+        schedule=Schedule.ONE_F_ONE_B if rng.random() < 0.7 else Schedule.GPIPE,
+        recompute=str(rng.choice(["never", "always"])),
+        training=bool(rng.random() < 0.8))
+    mode = [NoCMode.ANALYTICAL, NoCMode.MACRO,
+            NoCMode.DETAILED][rng.integers(3)]
+
+    mapped = map_graph(graph, hw, plan)
+    ev = PipelineSimulator(mapped, noc_mode=mode, engine="event",
+                           collect_timeline=True).run()
+    au = PipelineSimulator(mapped, noc_mode=mode, engine="auto",
+                           collect_timeline=True).run()
+    assert _identical(ev, au), (hw.name, plan, mode, au.engine)
+    _FAST_HITS.append(au.engine == "fast")
+    if case == 19:
+        assert sum(_FAST_HITS) >= 5, (
+            f"fast tier fired on only {sum(_FAST_HITS)}/20 cases — the "
+            "classifier rejects everything, so the property test is vacuous")
+
+
+def test_fast_strict_raises_where_classifier_rejects():
+    """engine="fast" surfaces ineligibility instead of silently falling
+    back; engine="auto" on the same point returns the event tier's exact
+    result."""
+    hw = _mesh_hw(4)
+    graph = transformer_lm_graph("t", 2, 256, 4, 64, 1, vocab=512)
+    plan = ParallelPlan(pp=2, dp=1, tp=1, microbatch=1, global_batch=4,
+                        schedule=Schedule.ONE_F_ONE_B, interleave=2)
+    mapped = map_graph(graph, hw, plan)
+    with pytest.raises(FastPathIneligible):
+        PipelineSimulator(mapped, noc_mode=NoCMode.ANALYTICAL,
+                          engine="fast").run()
+    ev = PipelineSimulator(mapped, noc_mode=NoCMode.ANALYTICAL,
+                           engine="event").run()
+    au = PipelineSimulator(mapped, noc_mode=NoCMode.ANALYTICAL,
+                           engine="auto").run()
+    assert au.engine == "event"
+    assert ev.total_time == au.total_time
+    assert ev.throughput == au.throughput
+
+
+def test_engine_argument_validated():
+    hw = _mesh_hw(4)
+    graph = transformer_lm_graph("t", 1, 256, 4, 64, 1, vocab=512)
+    mapped = map_graph(graph, hw,
+                       ParallelPlan(pp=1, dp=1, tp=1, microbatch=1,
+                                    global_batch=2))
+    with pytest.raises(ValueError):
+        PipelineSimulator(mapped, engine="warp")
+    res = simulate(graph, hw,
+                   ParallelPlan(pp=1, dp=1, tp=1, microbatch=1,
+                                global_batch=2), engine="auto")
+    assert res.engine in ("fast", "event")
+
+
+def test_critical_path_exact_on_rigged_contended_trace():
+    """With recorded causality the critical path follows the scheduler's
+    binding-predecessor edges — here rigged so that stage 1's FD was
+    bound by contention (stage 0's *second* FD) rather than by its
+    structural upstream, which the heuristic walk would have picked."""
+    rec = TraceRecorder()
+    r0 = rec.compute(0, KIND_FD, 0, 0.0, 1.0, pred=-1)
+    r1 = rec.compute(0, KIND_FD, 1, 1.0, 3.0, pred=r0)
+    r2 = rec.compute(1, KIND_FD, 0, 3.0, 5.0, pred=r1)   # contention edge
+    rec.compute(1, KIND_BD, 0, 5.0, 5.5, pred=r2)
+    trace = rec.freeze(5.5, 2)
+    path = [(r.stage, r.kind, r.micro) for r in trace.critical_path()]
+    assert path == [(0, KIND_FD, 0), (0, KIND_FD, 1),
+                    (1, KIND_FD, 0), (1, KIND_BD, 0)]
+
+
+def test_critical_path_heuristic_differs_on_rigged_trace():
+    """The same rigged timeline *without* pred causality resolves through
+    the structural heuristic — FD(s1, mb0) chains to its upstream
+    FD(s0, mb0), missing the contention edge. This is exactly the gap
+    the recorded pred column closes."""
+    rec = TraceRecorder()
+    rec.compute(0, KIND_FD, 0, 0.0, 1.0)
+    rec.compute(0, KIND_FD, 1, 1.0, 3.0)
+    rec.compute(1, KIND_FD, 0, 3.0, 5.0)
+    trace = rec.freeze(5.0, 2)
+    path = [(r.stage, r.kind, r.micro) for r in trace.critical_path()]
+    assert (1, KIND_FD, 0) in path
+    assert (0, KIND_FD, 1) not in path       # heuristic misses the edge
+
+
+def test_run_until_peeks_instead_of_popping():
+    """Environment.run(until=...) must not consume the first event past
+    the horizon: a paused-and-resumed run replays the identical event
+    sequence as an uninterrupted one (fast-tier windows hand back to the
+    event kernel mid-timeline, so this is load-bearing)."""
+    def trace_run(pauses):
+        env = Environment()
+        fired = []
+        for t in (1.0, 2.0, 3.0):
+            env.timeout(t).callbacks.append(
+                lambda ev, t=t: fired.append((t, env.now)))
+        for p in pauses:
+            env.run(until=p)
+        env.run()
+        return fired, env.now, env.event_count
+
+    plain = trace_run([])
+    paused = trace_run([0.5, 1.5, 2.5])
+    assert plain[0] == paused[0]
+    assert plain[2] == paused[2]
+    # the horizon advances the clock even when no event fires
+    env = Environment()
+    env.timeout(5.0)
+    env.run(until=2.0)
+    assert env.now == 2.0
+    env.run()
+    assert env.now == 5.0
+
+
+def test_cli_engine_flag_smoke():
+    env = {**os.environ,
+           "PYTHONPATH": str(ROOT / "src") + os.pathsep
+           + os.environ.get("PYTHONPATH", "")}
+    outs = {}
+    for engine in ("event", "auto"):
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro", "simulate", "--arch", "yi-6b",
+             "--hardware", "tpu_v5e_2x2", "--pp", "2", "--dp", "2",
+             "--global-batch", "8", "--seq-len", "128",
+             "--engine", engine, "--json", "-"],
+            capture_output=True, text=True, env=env, cwd=ROOT, timeout=300)
+        assert proc.returncode == 0, proc.stderr[-2000:]
+        outs[engine] = json.loads(proc.stdout[proc.stdout.index("{"):])
+    assert outs["event"]["total_time"] == outs["auto"]["total_time"]
+    assert outs["event"]["throughput"] == outs["auto"]["throughput"]

@@ -128,6 +128,7 @@ def test_trace_round_trips_without_numpy(monkeypatch):
     fallback = Trace(stage=list(t.stage), kind=list(t.kind),
                      micro=list(t.micro), resource=list(t.resource),
                      start=list(t.start), end=list(t.end),
+                     pred=list(t.pred),
                      total_time=t.total_time, num_stages=t.num_stages)
     assert fallback.to_bytes() == blob      # byte-identical encoding
     assert Trace.from_bytes(fallback.to_bytes()) == fallback
