@@ -5,7 +5,17 @@ mapping, not an event-driven run), and the merged hardware x plan sweep
 must beat the legacy pool-per-variant execution (one shared pool,
 workers initialized once, vs one pool spawned per hardware variant).
 
-Standalone (CI bench-smoke):
+Last section (batched-fast-tier acceptance gate): on a 16x16-mesh
+hardware x plan co-design sweep the batched analytic tier
+(:mod:`repro.core.fastbatch`, grouping fast-path-eligible jobs by chain
+shape signature and replaying whole groups as vectorized passes) must
+reproduce the per-job fast tier's ranking, ``total_time`` and
+``throughput`` bit-identically — and an event-tier cross-check — while
+running >= 5x faster in sweep wall-clock. Skipped without numpy (CI
+bench-smoke): ``run_fast_batch`` then degrades to the scalar tier,
+which the unit suite covers.
+
+Standalone (CI bench-smoke / perf-gate):
 
     PYTHONPATH=src python benchmarks/bench_sweep_engine.py --tiny \
         --json artifacts/bench_sweep_engine.json
@@ -30,8 +40,16 @@ import time
 from pathlib import Path
 
 from repro.api import Experiment, HardwareSearchSpace, SearchSpace
+from repro.api.report import run_rank_key
 
 from .common import Report, write_bench_json
+
+GB = 1e9
+
+# gate threshold: per-job fast-tier / batched fast-tier sweep wall-clock
+# on the 16x16-mesh co-design sweep (the batched-tier acceptance
+# criterion; measured ~6x)
+BATCHED_GATE_SPEEDUP = 5.0
 
 
 def _sweep_exp(memory_cap=None, tiny=False) -> Experiment:
@@ -151,8 +169,115 @@ def _pool_per_variant(exp: Experiment, workers: int):
     for spec in specs:
         sub = exp.with_(hardware=spec, hardware_search=None)
         runs.extend(sub.sweep(workers=workers).runs)
-    runs.sort(key=lambda r: -r.throughput)
+    runs.sort(key=run_rank_key)
     return runs
+
+
+# ---------------------------------------------------------------------------
+# batched fast tier: vectorized group replay vs per-job fast tier
+# ---------------------------------------------------------------------------
+
+def _batched_exp(tiny: bool, engine: str, flops, drams) -> Experiment:
+    """16x16-mesh hardware x plan co-design sweep: two pipeline plans
+    crossed with a wide (tile_flops x dram_bandwidth) grid. Every
+    variant shares each plan's chain *structure* and differs only in
+    the float leaves the hardware axes scale — the exact shape the
+    batched tier groups on, so the whole sweep collapses into one
+    vectorized replay per plan."""
+    from repro.core import transformer_lm_graph
+
+    from .bench_sim_scaling import _mesh_hw
+
+    return Experiment(
+        graph_builder=lambda p: transformer_lm_graph(
+            "T", 8, 1024, 16, seq_len=256, batch=p.microbatch * p.dp,
+            vocab=8192),
+        hardware=_mesh_hw(16),
+        hardware_search=HardwareSearchSpace(
+            tile_flops=flops, dram_bandwidth=drams, max_specs=128),
+        search=SearchSpace(degrees=((4, 1, 1), (2, 1, 2)),
+                           microbatch_sizes=(1,), layouts=("s_shape",),
+                           max_plans=2),
+        global_batch=256 if tiny else 320,
+        seq_len=256,
+        engine=engine,
+    )
+
+
+def _batched_gate(report: Report, tiny: bool) -> None:
+    """Batched-fast-tier acceptance gate: >= 5x sweep wall-clock vs the
+    per-job fast tier with bit-identical rankings, ``total_time`` and
+    ``throughput`` — cross-checked against the event tier."""
+    try:
+        from repro.core.fastbatch import available
+    except ImportError:                     # pragma: no cover
+        def available():
+            return False
+    if not available():
+        report.log("batched fast tier: numpy unavailable — gate skipped "
+                   "(run_fast_batch degrades to the scalar fast tier; "
+                   "covered by tests/test_fastbatch.py)")
+        return
+
+    from repro.api.sweep import SweepEngine
+
+    flops = tuple(f * 1e12 for f in (2, 2.5, 3, 3.5, 4, 5, 6, 7, 8,
+                                     10, 12, 14, 16, 20, 24, 32))
+    drams = tuple(d * GB for d in (16, 32, 48, 64, 96, 128, 192, 256))
+    exp = _batched_exp(tiny, "auto", flops, drams)
+
+    perjob_eng = SweepEngine(workers=0, batch_fastpath=False)
+    t0 = time.perf_counter()
+    perjob = exp.sweep(workers=0, engine=perjob_eng)
+    t_perjob = time.perf_counter() - t0
+
+    batched_eng = SweepEngine(workers=0, profile=True)
+    t0 = time.perf_counter()
+    batched = exp.sweep(workers=0, engine=batched_eng)
+    t_batched = time.perf_counter() - t0
+    prof = batched_eng.last_profile
+
+    key = lambda r: (r.hardware, r.plan, r.total_time, r.throughput)
+    scalar_parity = [key(r) for r in perjob.runs] == \
+                    [key(r) for r in batched.runs]
+    # every job must actually have taken the fast tier (otherwise the
+    # speedup measures event-kernel fallbacks, not the batched replay)
+    engines_ok = all(r.extra.get("engine") == "fast" for r in batched.runs)
+
+    # event-tier cross-check: the full sweep in full mode; --tiny prices
+    # a 2x2 corner sub-grid of the same axes (the scalar fast tier is
+    # itself gated bit-identical to the event tier per-plan in
+    # bench_sim_scaling's 10x gate)
+    ev_exp = (exp.with_(engine="event") if not tiny else
+              _batched_exp(tiny, "event", (4e12, 16e12),
+                           (64 * GB, 256 * GB)))
+    t0 = time.perf_counter()
+    event = ev_exp.sweep(workers=0)
+    t_event = time.perf_counter() - t0
+    ev_hw = {r.hardware for r in event.runs}
+    sub = [r for r in batched.runs if r.hardware in ev_hw]
+    event_parity = [key(r) for r in event.runs] == [key(r) for r in sub]
+
+    speedup = t_perjob / t_batched if t_batched > 0 else float("inf")
+    parity_ok = scalar_parity and engines_ok and event_parity
+    gate_ok = parity_ok and speedup >= BATCHED_GATE_SPEEDUP
+
+    report.log("== batched fast tier gate: vectorized group replay vs "
+               "per-job fast tier, 16x16 mesh ==")
+    report.log(f"{len(batched.runs)} jobs in {prof.get('groups', 0)} "
+               f"signature groups ({prof.get('batched_jobs', 0)} batched); "
+               f"per-job {t_perjob:.2f}s vs batched {t_batched:.2f}s "
+               f"({speedup:.2f}x, gate >= {BATCHED_GATE_SPEEDUP:.0f}x)")
+    report.log(f"bit-identical to per-job tier: {scalar_parity}; all fast: "
+               f"{engines_ok}; event cross-check ({len(event.runs)} jobs, "
+               f"{t_event:.2f}s): {event_parity}")
+    report.add("batched_perjob_us", t_perjob * 1e6,
+               f"{len(perjob.runs)}_jobs")
+    report.add("batched_sweep_us", t_batched * 1e6,
+               f"speedup_{speedup:.2f}x")
+    report.add("batched_parity", 0.0, "ok" if parity_ok else "MISMATCH")
+    report.add("batched_gate_speedup", t_batched * 1e6,
+               f"{speedup:.1f}x" + ("" if gate_ok else ";MISMATCH"))
 
 
 def run(report: Report, tiny: bool = False) -> None:
@@ -213,6 +338,10 @@ def run(report: Report, tiny: bool = False) -> None:
 
     # return_timelines IPC: legacy pickled-SimResult vs columnar Trace
     _timeline_ipc(report, tiny)
+
+    # batched fast tier vs per-job fast tier (skipped without numpy)
+    report.log("")
+    _batched_gate(report, tiny)
 
 
 def main(argv=None) -> int:

@@ -41,8 +41,14 @@ from .experiment import (
     SearchSpace,
     resolve_hardware,
 )
-from .report import RunReport, SweepReport, plan_from_dict, plan_to_dict
-from .sweep import SweepEngine
+from .report import (
+    RunReport,
+    SweepReport,
+    plan_from_dict,
+    plan_to_dict,
+    run_rank_key,
+)
+from .sweep import SweepEngine, close_shared_engines, shared_engine
 
 __all__ = [
     "BoundaryMode",
@@ -68,10 +74,13 @@ __all__ = [
     "TraceDiff",
     "TraceRecorder",
     "chrome_trace",
+    "close_shared_engines",
     "trace_diff",
     "plan_codesign",
     "plan_from_dict",
     "plan_parallelism",
     "plan_to_dict",
     "resolve_hardware",
+    "run_rank_key",
+    "shared_engine",
 ]

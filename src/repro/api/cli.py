@@ -173,6 +173,16 @@ def _add_sweep_flags(ap: argparse.ArgumentParser) -> None:
                          "'0 1')")
     ap.add_argument("--memory-cap", type=float, default=None,
                     help="bytes per tile; infeasible plans pruned pre-simulation")
+    ap.add_argument("--engine", choices=["auto", "event", "fast"],
+                    default="event",
+                    help="simulator tier per candidate: 'event' = generator/"
+                         "heap kernel, 'auto'/'fast' = bit-identical fast "
+                         "tier, evaluated in vectorized batches across the "
+                         "sweep (see docs/simulator.md)")
+    ap.add_argument("--profile", action="store_true",
+                    help="print (and embed in --json artifacts) the batched "
+                         "fast tier's per-phase timing table: compile / "
+                         "batch-eval / validate / fallback")
     ap.add_argument("--workers", type=int, default=0,
                     help="0 = serial, N = process pool of N, -1 = all cores")
     ap.add_argument("--top", type=int, default=10)
@@ -311,12 +321,15 @@ def _make_sweep_experiment(args) -> Experiment:
                       seq_len=args.seq_len, global_batch=args.global_batch,
                       training=not args.inference, noc_mode=args.noc_mode,
                       boundary_mode=args.boundary_mode,
-                      memory_cap=args.memory_cap)
+                      memory_cap=args.memory_cap,
+                      engine=getattr(args, "engine", "event"))
 
 
 def _sweep_call_kwargs(args) -> dict:
-    kw = {"workers": None if args.workers < 0 else args.workers}
+    kw = {"workers": None if args.workers < 0 else args.workers,
+          "profile": getattr(args, "profile", False)}
     if args.search != "exhaustive":
+        kw.pop("profile", None)     # per-phase accounting is exhaustive-only
         kw.update(strategy=args.search, search_budget=args.search_budget,
                   seed=args.seed or 0)
     elif args.search_budget is not None or args.seed is not None:
@@ -331,6 +344,32 @@ def _print_search_note(report) -> None:
         print(f"[search {report.search.summary()}]")
 
 
+# (phase label, microseconds key, jobs key) rows of the --profile table;
+# keys match repro.core.fastbatch.run_fast_batch's profile dict plus the
+# sweep layer's fallback accounting
+_PROFILE_PHASES = (
+    ("compile", "compile_us", "batched_jobs"),
+    ("batch-eval", "eval_us", "batched_jobs"),
+    ("validate", "validate_us", "contended_jobs"),
+    ("fallback", "fallback_us", "fallback_jobs"),
+)
+
+
+def _print_profile(report) -> None:
+    prof = getattr(report, "profile", None)
+    if prof is None:
+        return
+    print("[batched fast tier profile]")
+    print(f"  {'phase':>10s} {'time (ms)':>10s} {'jobs':>6s}")
+    for label, tkey, jkey in _PROFILE_PHASES:
+        print(f"  {label:>10s} {prof.get(tkey, 0) / 1e3:>10.2f} "
+              f"{prof.get(jkey, 0):>6d}")
+    print(f"  {prof.get('groups', 0)} chain-shape group(s) over "
+          f"{prof.get('batched_jobs', 0)} batched job(s); "
+          f"{prof.get('scalar_jobs', 0)} scalar, "
+          f"{prof.get('ineligible_jobs', 0)} ineligible")
+
+
 def _cmd_sweep(args) -> int:
     exp = _make_sweep_experiment(args)
     report = exp.sweep(**_sweep_call_kwargs(args))
@@ -342,6 +381,7 @@ def _cmd_sweep(args) -> int:
           f"{report.num_failed} failed) ==")
     _print_search_note(report)
     print(report.table(top=args.top))
+    _print_profile(report)
     _emit(report, args.json)
     return 0 if report.runs else 1
 

@@ -545,7 +545,8 @@ class Experiment:
               strategy: Optional[str] = None,
               search_budget: Optional[int] = None,
               seed: Optional[int] = None,
-              engine: Optional["SweepEngine"] = None) -> SweepReport:
+              engine: Optional["SweepEngine"] = None,
+              profile: bool = False) -> SweepReport:
         """Evaluate the search space; ``workers=0`` is serial, ``workers=N``
         uses an N-process pool, ``workers=None`` uses all cores. With a
         ``hardware_search``, the full (hardware variant x plan) product is
@@ -567,7 +568,17 @@ class Experiment:
         :class:`SweepEngine` whose warm process pool is reused instead of
         constructing one per call; it is used as-is and never closed, and
         its ``workers``/``return_timelines`` settings win over the
-        same-named arguments here."""
+        same-named arguments here (see also
+        :func:`repro.api.sweep.shared_engine` for the module-level
+        registry the planners use).
+
+        Fast-path-eligible jobs (experiment/fidelity ``engine`` of
+        ``"auto"`` or ``"fast"``) are priced through the vectorized
+        batched fast tier (:mod:`repro.core.fastbatch`) — bit-identical
+        results, whole chain-shape groups per numpy pass.
+        ``profile=True`` attaches its per-phase accounting
+        (compile/batch-eval/validate/fallback) to
+        ``SweepReport.profile`` for exhaustive sweeps."""
         return_timelines = return_timelines or self.collect_timeline
         if strategy not in (None, "exhaustive"):
             from ..search import run_search     # search builds on api
@@ -580,7 +591,8 @@ class Experiment:
             raise ValueError("search_budget/seed only apply to guided "
                              "search; pass strategy='random'/'sh'/'evolve'")
         if self.hardware_search is not None:
-            return self._sweep_hardware(workers, return_timelines, engine)
+            return self._sweep_hardware(workers, return_timelines, engine,
+                                        profile=profile)
         if self.search is None:
             if self.plan is not None:   # degenerate single-point sweep
                 plans = [self.plan]
@@ -593,7 +605,7 @@ class Experiment:
         from .sweep import SweepEngine
         eng = engine if engine is not None else SweepEngine(
             workers=workers, return_timelines=return_timelines,
-            trace_resources=self.collect_timeline)
+            trace_resources=self.collect_timeline, profile=profile)
         return eng.sweep(self, plans)
 
     def _hardware_label(self, num_hardware: int) -> str:
@@ -628,7 +640,8 @@ class Experiment:
 
     def _sweep_hardware(self, workers: int,
                         return_timelines: bool = False,
-                        engine: Optional["SweepEngine"] = None) -> SweepReport:
+                        engine: Optional["SweepEngine"] = None,
+                        profile: bool = False) -> SweepReport:
         """Merged hardware x plan sweep: flatten every variant's plan list
         into one (variant, plan) job stream and evaluate it through one
         shared process pool (workers are initialized once with all variant
@@ -652,7 +665,8 @@ class Experiment:
         if engine is None:
             engine = SweepEngine(workers=workers,
                                  return_timelines=return_timelines,
-                                 trace_resources=self.collect_timeline)
+                                 trace_resources=self.collect_timeline,
+                                 profile=profile)
         report = engine.sweep_jobs(
             self, kept, jobs,
             hardware_name=self._hardware_label(len(specs)),

@@ -31,11 +31,12 @@ if TYPE_CHECKING:                       # search builds on api; keep it lazy
     from ..search.report import SearchReport
 
 from ..core.enums import Layout, Schedule
-from ..core.parallelism import ParallelPlan
+from ..core.parallelism import ParallelPlan, plan_sort_key
 from ..core.scheduler import SimResult
 from ..core.trace import Trace
 
-__all__ = ["RunReport", "SweepReport", "plan_to_dict", "plan_from_dict"]
+__all__ = ["RunReport", "SweepReport", "plan_to_dict", "plan_from_dict",
+           "run_rank_key"]
 
 # ParallelPlan fields that are not JSON-scalar and rarely swept; they are
 # serialized only when set so reports stay compact.
@@ -57,6 +58,20 @@ def plan_from_dict(d: Dict[str, Any]) -> ParallelPlan:
     kw["schedule"] = Schedule(kw.get("schedule", "1f1b"))
     kw["layout"] = Layout(kw.get("layout", "s_shape"))
     return ParallelPlan(**kw)
+
+
+def run_rank_key(run: "RunReport"):
+    """Total ranking order for sweep runs: throughput (best first) with a
+    deterministic tie-break on the run's canonical (hardware, plan)
+    identity. Ties on throughput are common — hardware axes that don't
+    touch a bottleneck produce bit-equal results — and a plain
+    ``-throughput`` sort would leave their order to job arrival, which
+    differs between executors and between the batched and per-job fast
+    tiers. Every ranking in the tree (sweep, search assembly, legacy
+    ``sweep_plans``, benches) tie-breaks on the same
+    :func:`~repro.core.parallelism.plan_sort_key` so rankings compare
+    exactly."""
+    return (-run.throughput, run.hardware, plan_sort_key(run.plan))
 
 
 @dataclass
@@ -176,6 +191,11 @@ class SweepReport:
     # guided-search accounting (repro.search): per-rung history, sims per
     # fidelity, best-so-far curve. None for exhaustive sweeps.
     search: Optional["SearchReport"] = None
+    # per-phase timing/count accounting of the batched fast tier
+    # (compile/batch-eval/validate/fallback microseconds plus job
+    # counters) when the sweep ran with profiling on; timings vary run to
+    # run, so the field is excluded from equality
+    profile: Optional[Dict[str, Any]] = field(default=None, compare=False)
 
     @property
     def best(self) -> Optional[RunReport]:
@@ -197,6 +217,8 @@ class SweepReport:
             d["search"] = self.search.to_dict()
         else:
             d.pop("search", None)
+        if self.profile is None:
+            d.pop("profile", None)
         return d
 
     def to_json(self, **kw: Any) -> str:

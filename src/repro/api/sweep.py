@@ -1,7 +1,7 @@
 """Parallel sweep engine for Experiment plan and hardware x plan searches.
 
 Executes sweeps through a ``concurrent.futures`` process pool (or
-serially with ``workers=0``) with three structural optimizations over the
+serially with ``workers=0``) with four structural optimizations over the
 legacy ``sweep_plans`` loop:
 
 * **Graph-construction memoization** — the workload graph depends only on
@@ -17,6 +17,15 @@ legacy ``sweep_plans`` loop:
   experiment and every variant spec, instead of spawning a fresh pool per
   hardware variant (see ``benchmarks/bench_sweep_engine.py`` for the
   speedup over the pool-per-variant baseline).
+* **Batched fast tier** — fast-path-eligible jobs (``engine`` ``"auto"``
+  or ``"fast"``) are collected and priced through
+  :func:`repro.core.fastbatch.run_fast_batch`, which groups
+  configurations by chain *shape signature* and replays whole groups in
+  vectorized numpy passes instead of one Python chain walk per job.
+  Results are bit-identical to the per-job tiers; jobs the batch rejects
+  (contention, ineligibility) fall back to the per-job path one at a
+  time. Workers receive contiguous job *shards* so each worker batches
+  its share instead of evaluating job-at-a-time streams.
 
 ``return_timelines=True`` ships each run's event timeline back attached
 to ``RunReport.trace`` (and the full :class:`SimResult` to ``.sim``).
@@ -28,20 +37,31 @@ tuple-list ``SimResult`` payload (measured in
 stays compact) by default.
 
 Results are deterministic: the engine evaluates jobs in enumeration
-order and ranks by simulated throughput, so serial and process-pool
-sweeps produce identical SweepReports.
+order and ranks by :func:`~repro.api.report.run_rank_key` (throughput,
+then canonical hardware/plan identity), so serial, process-pool and
+batched sweeps produce identical SweepReports.
+
+:func:`shared_engine` hands out module-level *persistent* engines (one
+per flag combination) whose process pools and memos stay warm across
+planner calls — ``plan_parallelism`` / ``plan_codesign`` /
+``plan_serving`` and the CLI all reuse them, so back-to-back planning
+questions about the same experiment stop re-pickling and re-classifying
+from scratch.
 """
 
 from __future__ import annotations
 
+import atexit
 import dataclasses
 import os
 import pickle
 import warnings
 from concurrent.futures import ProcessPoolExecutor
+from time import perf_counter
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from ..core.enums import NoCMode
+from ..core.fastbatch import run_fast_batch
 from ..core.hardware import HardwareSpec
 from ..core.parallelism import ParallelPlan, map_graph
 from ..core.scheduler import PipelineSimulator, plan_memory
@@ -55,9 +75,9 @@ from ..core.trace import (
     KIND_NAMES,
     KIND_NOC,
 )
-from .report import RunReport, SweepReport
+from .report import RunReport, SweepReport, run_rank_key
 
-__all__ = ["SweepEngine", "run_one"]
+__all__ = ["SweepEngine", "run_one", "shared_engine", "close_shared_engines"]
 
 # outcome tags for one plan evaluation
 _OK, _PRUNED, _FAILED = "ok", "pruned", "failed"
@@ -135,20 +155,28 @@ def _apply_trace_policy(report: RunReport,
     return report
 
 
-def _evaluate(exp, plan: ParallelPlan, graph_cache: Dict,
-              hw: HardwareSpec,
-              return_timelines: bool = False,
-              trace_resources: bool = False,
-              fidelity=None,
-              trace_lanes: Optional[Tuple[int, ...]] = None,
-              trace_budget_bytes: Optional[int] = None) -> Tuple[str, object]:
-    """Evaluate one (hardware, plan) job: build (memoized) graph, map,
-    prune on memory, simulate. Returns (tag, RunReport | reason).
+def _prepare(exp, plan: ParallelPlan, graph_cache: Dict, hw: HardwareSpec,
+             return_timelines: bool = False,
+             trace_resources: bool = False,
+             fidelity=None,
+             trace_lanes: Optional[Tuple[int, ...]] = None,
+             trace_budget_bytes: Optional[int] = None):
+    """First half of one (hardware, plan) evaluation: resolve fidelity,
+    build the (memoized) graph, map, prune on memory — and either settle
+    the outcome without a pipeline run or hand back a constructed, unrun
+    simulator.
 
-    ``fidelity`` optionally cheapens the simulation (coarser NoC model
-    and/or fewer microbatches) for multi-fidelity search rungs; the graph
-    memo is unaffected because the per-iteration batch
-    (``microbatch * dp``) does not change.
+    Returns ``("done", (tag, payload))`` when the job is decided here
+    (serving jobs, memory-pruned jobs, mapping failures) or
+    ``("sim", (sim, plan, engine))`` when a pipeline simulation remains.
+    The split exists so :func:`_evaluate_many` can collect the
+    simulators of a whole job stream and price them through the batched
+    fast tier (:mod:`repro.core.fastbatch`) instead of one at a time.
+
+    ``fidelity`` optionally cheapens the simulation (coarser NoC model,
+    fewer microbatches and/or a cheaper simulator tier) for
+    multi-fidelity search rungs; the graph memo is unaffected because
+    the per-iteration batch (``microbatch * dp``) does not change.
 
     Memory-pruned jobs carry a diagnostic payload (peak/cap/deficit
     bytes) so planners can explain *why* nothing was feasible instead of
@@ -166,11 +194,15 @@ def _evaluate(exp, plan: ParallelPlan, graph_cache: Dict,
         noc_mode = exp.noc_mode
         engine = getattr(exp, "engine", "event")
         if fidelity is not None:
-            plan = fidelity.apply(plan)
-            if fidelity.noc_mode is not None:
-                noc_mode = NoCMode(fidelity.noc_mode)
-            if getattr(fidelity, "engine", None) is not None:
-                engine = fidelity.engine
+            resolve = getattr(fidelity, "resolve", None)
+            if resolve is not None:
+                plan, noc_mode, engine = resolve(plan, noc_mode, engine)
+            else:   # duck-typed fidelity: apply() + optional knobs
+                plan = fidelity.apply(plan)
+                if fidelity.noc_mode is not None:
+                    noc_mode = NoCMode(fidelity.noc_mode)
+                if getattr(fidelity, "engine", None) is not None:
+                    engine = fidelity.engine
         if exp.graph_builder is None:
             # arch_to_graph depends only on (arch, seq_len, batch, mode) —
             # never on the hardware — so the memo is shared across variants
@@ -187,9 +219,10 @@ def _evaluate(exp, plan: ParallelPlan, graph_cache: Dict,
             mem_plan = plan_memory(mapped)
             peak = max(m.total for m in mem_plan[0])
             if peak > exp.memory_cap:
-                return (_PRUNED, {"peak_bytes": peak,
-                                  "cap_bytes": exp.memory_cap,
-                                  "deficit_bytes": peak - exp.memory_cap})
+                return ("done", (_PRUNED, {"peak_bytes": peak,
+                                           "cap_bytes": exp.memory_cap,
+                                           "deficit_bytes":
+                                               peak - exp.memory_cap}))
         serving = getattr(exp, "serving", None)
         if serving is not None:
             from ..serving.system import ServingSimulator  # lazy: no cycle
@@ -214,7 +247,7 @@ def _evaluate(exp, plan: ParallelPlan, graph_cache: Dict,
             if return_timelines:
                 report = _apply_trace_policy(report, trace_lanes,
                                              trace_budget_bytes)
-            return (_OK, report)
+            return ("done", (_OK, report))
         # compute lanes are always recorded; resource busy lanes stay off
         # unless the experiment asked for them (collect_timeline=True) so
         # default timeline sweeps keep pool payloads lean
@@ -223,17 +256,132 @@ def _evaluate(exp, plan: ParallelPlan, graph_cache: Dict,
                                 memory_plan=mem_plan,
                                 collect_timeline=trace_resources,
                                 engine=engine)
+    except (ValueError, KeyError, TypeError) as e:
+        return ("done", (_FAILED, f"{type(e).__name__}: {e}"))
+    return ("sim", (sim, plan, engine))
+
+
+def _finish(exp, plan: ParallelPlan, hw: HardwareSpec, result,
+            return_timelines: bool,
+            trace_lanes: Optional[Tuple[int, ...]],
+            trace_budget_bytes: Optional[int]) -> Tuple[str, object]:
+    """Second half of one evaluation: wrap a SimResult into the ranked
+    RunReport (and apply the trace shipping policy)."""
+    report = RunReport.from_sim(exp.arch_name, hw.name, plan, result,
+                                keep_sim=return_timelines)
+    if return_timelines:
+        report = _apply_trace_policy(report, trace_lanes, trace_budget_bytes)
+    return (_OK, report)
+
+
+def _run_and_finish(exp, plan: ParallelPlan, hw: HardwareSpec, sim,
+                    return_timelines: bool,
+                    trace_lanes: Optional[Tuple[int, ...]],
+                    trace_budget_bytes: Optional[int]) -> Tuple[str, object]:
+    """Per-job simulation path (also the fallback for jobs the batched
+    fast tier rejects): run the simulator's own tier dispatch and report.
+    ``FastPathIneligible`` (engine="fast" strict mode) propagates."""
+    try:
         result = sim.run()
         # the scalar occupancy digest is an in-process convenience; drop
         # it so serial and pooled sweeps return identical, lean results
         result.noc_occupancy_fallback.clear()
     except (ValueError, KeyError, TypeError) as e:
         return (_FAILED, f"{type(e).__name__}: {e}")
-    report = RunReport.from_sim(exp.arch_name, hw.name, plan, result,
-                                keep_sim=return_timelines)
-    if return_timelines:
-        report = _apply_trace_policy(report, trace_lanes, trace_budget_bytes)
-    return (_OK, report)
+    return _finish(exp, plan, hw, result, return_timelines, trace_lanes,
+                   trace_budget_bytes)
+
+
+def _evaluate(exp, plan: ParallelPlan, graph_cache: Dict,
+              hw: HardwareSpec,
+              return_timelines: bool = False,
+              trace_resources: bool = False,
+              fidelity=None,
+              trace_lanes: Optional[Tuple[int, ...]] = None,
+              trace_budget_bytes: Optional[int] = None) -> Tuple[str, object]:
+    """Evaluate one (hardware, plan) job: build (memoized) graph, map,
+    prune on memory, simulate. Returns (tag, RunReport | reason).
+    Composition of :func:`_prepare` and :func:`_run_and_finish`."""
+    kind, payload = _prepare(exp, plan, graph_cache, hw,
+                             return_timelines=return_timelines,
+                             trace_resources=trace_resources,
+                             fidelity=fidelity,
+                             trace_lanes=trace_lanes,
+                             trace_budget_bytes=trace_budget_bytes)
+    if kind == "done":
+        return payload
+    sim, plan, _engine = payload
+    return _run_and_finish(exp, plan, hw, sim, return_timelines,
+                           trace_lanes, trace_budget_bytes)
+
+
+def _evaluate_many(exp, specs: Sequence[HardwareSpec], jobs: Sequence,
+                   graph_cache: Dict, *,
+                   return_timelines: bool = False,
+                   trace_resources: bool = False,
+                   trace_lanes: Optional[Tuple[int, ...]] = None,
+                   trace_budget_bytes: Optional[int] = None,
+                   batch_fastpath: bool = True,
+                   classify_memo: Optional[Dict] = None,
+                   profile: Optional[Dict] = None) -> List[Tuple[str, object]]:
+    """Evaluate a job stream with the batched fast tier.
+
+    Every job is prepared (graph/map/prune) in enumeration order; jobs
+    whose engine admits the fast tier (``"auto"``/``"fast"``) are
+    collected and priced together through
+    :func:`repro.core.fastbatch.run_fast_batch`, the rest run the
+    per-job path inline. Batch-rejected jobs (contended, ineligible)
+    fall back to the per-job path one at a time — for ``engine="auto"``
+    that lands in the event kernel, for strict ``engine="fast"`` it
+    re-raises ``FastPathIneligible`` exactly like the scalar tier.
+    Outcomes come back in job order and are bitwise what the per-job
+    loop would have produced."""
+    outcomes: List = [None] * len(jobs)
+    batch: List[Tuple[int, object, ParallelPlan, HardwareSpec]] = []
+    for i, job in enumerate(jobs):
+        variant, plan, fidelity = job if len(job) == 3 else (*job, None)
+        hw = specs[variant]
+        kind, payload = _prepare(exp, plan, graph_cache, hw,
+                                 return_timelines=return_timelines,
+                                 trace_resources=trace_resources,
+                                 fidelity=fidelity,
+                                 trace_lanes=trace_lanes,
+                                 trace_budget_bytes=trace_budget_bytes)
+        if kind == "done":
+            outcomes[i] = payload
+            continue
+        sim, plan, engine = payload
+        if batch_fastpath and engine in ("auto", "fast"):
+            batch.append((i, sim, plan, hw))
+        else:
+            outcomes[i] = _run_and_finish(exp, plan, hw, sim,
+                                          return_timelines, trace_lanes,
+                                          trace_budget_bytes)
+    if batch:
+        try:
+            results = run_fast_batch([sim for _, sim, _, _ in batch],
+                                     classify_memo=classify_memo,
+                                     profile=profile)
+        except (ValueError, KeyError, TypeError):
+            # batch compilation tripped on one config; re-run every job
+            # through the per-job path, which scopes the error to the
+            # config that raised it (exact scalar semantics)
+            results = [(None, "batch compilation failed")] * len(batch)
+        for (i, sim, plan, hw), (result, _reason) in zip(batch, results):
+            if result is not None:
+                outcomes[i] = _finish(exp, plan, hw, result,
+                                      return_timelines, trace_lanes,
+                                      trace_budget_bytes)
+                continue
+            t0 = perf_counter()
+            outcomes[i] = _run_and_finish(exp, plan, hw, sim,
+                                          return_timelines, trace_lanes,
+                                          trace_budget_bytes)
+            if profile is not None:
+                profile["fallback_us"] = (profile.get("fallback_us", 0)
+                                          + int((perf_counter() - t0) * 1e6))
+                profile["fallback_jobs"] = profile.get("fallback_jobs", 0) + 1
+    return outcomes
 
 
 def run_one(exp, plan: ParallelPlan) -> RunReport:
@@ -249,35 +397,63 @@ def run_one(exp, plan: ParallelPlan) -> RunReport:
                               keep_sim=exp.collect_timeline)
 
 
+def _merge_profile(dst: Dict, src: Dict) -> None:
+    for k, v in src.items():
+        dst[k] = dst.get(k, 0) + v
+
+
+def _shards(jobs: List, n: int) -> List[List]:
+    """Split a job stream into <= n contiguous, near-equal shards (in
+    order, no empties) so pooled workers batch their share of the stream
+    instead of receiving it job-at-a-time."""
+    n = max(1, min(n, len(jobs)))
+    size, extra = divmod(len(jobs), n)
+    out, i = [], 0
+    for j in range(n):
+        step = size + (1 if j < extra else 0)
+        if step:
+            out.append(jobs[i:i + step])
+        i += step
+    return out
+
+
 # -- process-pool plumbing ---------------------------------------------------
 # The Experiment and every hardware-variant spec are shipped once per
 # worker (initializer) instead of once per task; each worker keeps its own
-# per-variant graph memo across tasks.
+# per-variant graph memo and classifier memo across tasks.
 _WORKER: Dict = {}
 
 
 def _init_worker(exp_bytes: bytes, specs_bytes: bytes,
                  return_timelines: bool, trace_resources: bool,
                  trace_lanes: Optional[Tuple[int, ...]] = None,
-                 trace_budget_bytes: Optional[int] = None) -> None:
+                 trace_budget_bytes: Optional[int] = None,
+                 batch_fastpath: bool = True) -> None:
     _WORKER["exp"] = pickle.loads(exp_bytes)
     _WORKER["specs"] = pickle.loads(specs_bytes)
     _WORKER["graphs"] = {}
+    _WORKER["classify"] = {}
     _WORKER["return_timelines"] = return_timelines
     _WORKER["trace_resources"] = trace_resources
     _WORKER["trace_lanes"] = trace_lanes
     _WORKER["trace_budget_bytes"] = trace_budget_bytes
+    _WORKER["batch_fastpath"] = batch_fastpath
 
 
-def _eval_in_worker(job) -> Tuple[str, object]:
-    variant, plan, fidelity = job if len(job) == 3 else (*job, None)
-    return _evaluate(_WORKER["exp"], plan, _WORKER["graphs"],
-                     hw=_WORKER["specs"][variant],
-                     return_timelines=_WORKER["return_timelines"],
-                     trace_resources=_WORKER["trace_resources"],
-                     fidelity=fidelity,
-                     trace_lanes=_WORKER["trace_lanes"],
-                     trace_budget_bytes=_WORKER["trace_budget_bytes"])
+def _eval_shard_in_worker(shard) -> Tuple[List[Tuple[str, object]], Dict]:
+    """Evaluate one contiguous job shard in a pool worker; returns the
+    shard's outcomes plus its fast-tier profile delta for merging."""
+    profile: Dict = {}
+    outcomes = _evaluate_many(
+        _WORKER["exp"], _WORKER["specs"], shard, _WORKER["graphs"],
+        return_timelines=_WORKER["return_timelines"],
+        trace_resources=_WORKER["trace_resources"],
+        trace_lanes=_WORKER["trace_lanes"],
+        trace_budget_bytes=_WORKER["trace_budget_bytes"],
+        batch_fastpath=_WORKER["batch_fastpath"],
+        classify_memo=_WORKER["classify"],
+        profile=profile)
+    return outcomes, profile
 
 
 class SweepEngine:
@@ -301,30 +477,51 @@ class SweepEngine:
     (bubble ratio, occupancies) are computed *before* filtering, so they
     are exact regardless of what ships.
 
+    ``batch_fastpath`` (default on) routes fast-tier-eligible jobs
+    through the vectorized batched evaluator
+    (:mod:`repro.core.fastbatch`) — bit-identical results, one numpy
+    pass per chain-shape group instead of one Python replay per job.
+    ``profile=True`` attaches the per-phase accounting
+    (compile/batch-eval/validate/fallback microseconds and job counters)
+    of each call to its ``SweepReport.profile``; the cumulative totals
+    are always kept on ``engine.profile_totals``.
+
     Used as a context manager the engine keeps one process pool alive
     across ``sweep``/``sweep_jobs``/``evaluate_jobs`` calls (workers stay
     warm across search generations); otherwise each call owns its pool.
+    :func:`shared_engine` maintains module-level persistent engines for
+    reuse across planner calls.
     """
 
     def __init__(self, workers: Optional[int] = 0,
                  return_timelines: bool = False,
                  trace_resources: bool = False,
                  trace_lanes: Optional[Sequence] = None,
-                 trace_budget_bytes: Optional[int] = None):
+                 trace_budget_bytes: Optional[int] = None,
+                 batch_fastpath: bool = True,
+                 profile: bool = False):
         self.workers = os.cpu_count() if workers is None else workers
         self.return_timelines = return_timelines
         self.trace_resources = trace_resources
         self.trace_lanes = _lane_codes(trace_lanes)
         self.trace_budget_bytes = trace_budget_bytes
+        self.batch_fastpath = batch_fastpath
+        self.profile = profile
+        # cumulative per-phase fast-tier accounting across calls; the
+        # per-call delta lands on each SweepReport when profile=True
+        self.profile_totals: Dict[str, int] = {}
+        self.last_profile: Dict[str, int] = {}
         self._persist = False
         self._pool: Optional[ProcessPoolExecutor] = None
         self._pool_key: Optional[Tuple[bytes, bytes]] = None
         # how many process pools this engine has created (tests assert a
         # persistent engine initializes exactly once across planner calls)
         self.pool_inits = 0
-        # serial-path graph memo kept warm across calls in persistent mode
+        # serial-path graph + classifier memos kept warm across calls in
+        # persistent mode
         self._memo_exp = None
         self._memo_graphs: Dict = {}
+        self._memo_classify: Dict = {}
 
     # -- persistent-pool lifecycle ------------------------------------------
     def __enter__(self) -> "SweepEngine":
@@ -340,15 +537,20 @@ class SweepEngine:
         self._persist = False
         self._memo_exp = None
         self._memo_graphs = {}
+        self._memo_classify = {}
 
-    def _serial_memo(self, exp) -> Dict:
-        """Graph memo for the serial path: per-call normally, kept warm
-        across calls (per experiment) in persistent mode."""
+    def _serial_memo(self, exp) -> Tuple[Dict, Dict]:
+        """(graph memo, classifier memo) for the serial path: per-call
+        normally, kept warm across calls (per experiment) in persistent
+        mode. Both are scoped to one experiment — classifier keys are
+        (hardware name, plan summary), unique within an experiment's
+        variants but not across experiments."""
         if not self._persist:
-            return {}
+            return {}, {}
         if self._memo_exp is not exp:
-            self._memo_exp, self._memo_graphs = exp, {}
-        return self._memo_graphs
+            self._memo_exp = exp
+            self._memo_graphs, self._memo_classify = {}, {}
+        return self._memo_graphs, self._memo_classify
 
     def _shutdown_pool(self) -> None:
         if self._pool is not None:
@@ -395,7 +597,7 @@ class SweepEngine:
                 record["reason"] = payload
                 if len(failed_records) < _MAX_RECORDS:
                     failed_records.append(record)
-        runs.sort(key=lambda r: -r.throughput)
+        runs.sort(key=run_rank_key)
         return SweepReport(
             arch=exp.arch_name,
             hardware=hardware_name,
@@ -407,6 +609,7 @@ class SweepEngine:
             num_hardware=num_hardware,
             pruned_records=pruned_records,
             failed_records=failed_records,
+            profile=dict(self.last_profile) if self.profile else None,
         )
 
     def evaluate_jobs(self, exp, specs: Sequence[HardwareSpec],
@@ -415,47 +618,110 @@ class SweepEngine:
         job order plus the executor label. Jobs may carry a per-job
         fidelity as a third element (multi-fidelity search rungs)."""
         jobs = list(jobs)
-        # a 1-job batch is cheaper in-process — unless a persistent pool
-        # exists (or will): search generations can shrink to one candidate
-        # and must keep hitting the warm workers
-        if self.workers >= 2 and (len(jobs) > 1 or self._persist):
-            try:
-                exp_bytes = pickle.dumps(exp)
-                specs_bytes = pickle.dumps(list(specs))
-            except Exception as e:   # e.g. lambda graph_builder
-                warnings.warn(
-                    f"experiment not picklable ({e}); sweeping serially",
-                    RuntimeWarning, stacklevel=3)
-            else:
-                initargs = (exp_bytes, specs_bytes, self.return_timelines,
-                            self.trace_resources, self.trace_lanes,
-                            self.trace_budget_bytes)
-                if self._persist:
-                    key = (exp_bytes, specs_bytes)
-                    if self._pool is None or self._pool_key != key:
-                        self._shutdown_pool()
-                        self._pool = ProcessPoolExecutor(
-                            max_workers=self.workers,
-                            initializer=_init_worker, initargs=initargs)
-                        self._pool_key = key
-                        self.pool_inits += 1
-                    return (list(self._pool.map(_eval_in_worker, jobs)),
-                            f"process[{self.workers}]")
-                n = min(self.workers, len(jobs))
-                self.pool_inits += 1
-                with ProcessPoolExecutor(
-                        max_workers=n,
-                        initializer=_init_worker,
-                        initargs=initargs) as pool:
-                    return list(pool.map(_eval_in_worker, jobs)), f"process[{n}]"
-        graphs = self._serial_memo(exp)
-        out = []
-        for job in jobs:
-            variant, plan, fidelity = job if len(job) == 3 else (*job, None)
-            out.append(_evaluate(exp, plan, graphs, hw=specs[variant],
-                                 return_timelines=self.return_timelines,
-                                 trace_resources=self.trace_resources,
-                                 fidelity=fidelity,
-                                 trace_lanes=self.trace_lanes,
-                                 trace_budget_bytes=self.trace_budget_bytes))
-        return out, "serial"
+        call_profile: Dict[str, int] = {}
+        try:
+            # a 1-job batch is cheaper in-process — unless a persistent pool
+            # exists (or will): search generations can shrink to one candidate
+            # and must keep hitting the warm workers
+            if self.workers >= 2 and (len(jobs) > 1 or self._persist):
+                try:
+                    exp_bytes = pickle.dumps(exp)
+                    specs_bytes = pickle.dumps(list(specs))
+                except Exception as e:   # e.g. lambda graph_builder
+                    warnings.warn(
+                        f"experiment not picklable ({e}); sweeping serially",
+                        RuntimeWarning, stacklevel=3)
+                else:
+                    initargs = (exp_bytes, specs_bytes, self.return_timelines,
+                                self.trace_resources, self.trace_lanes,
+                                self.trace_budget_bytes, self.batch_fastpath)
+                    if self._persist:
+                        key = (exp_bytes, specs_bytes)
+                        if self._pool is None or self._pool_key != key:
+                            self._shutdown_pool()
+                            self._pool = ProcessPoolExecutor(
+                                max_workers=self.workers,
+                                initializer=_init_worker, initargs=initargs)
+                            self._pool_key = key
+                            self.pool_inits += 1
+                        parts = list(self._pool.map(
+                            _eval_shard_in_worker,
+                            _shards(jobs, self.workers)))
+                        for _, prof in parts:
+                            _merge_profile(call_profile, prof)
+                        return ([o for out, _ in parts for o in out],
+                                f"process[{self.workers}]")
+                    n = min(self.workers, len(jobs))
+                    self.pool_inits += 1
+                    with ProcessPoolExecutor(
+                            max_workers=n,
+                            initializer=_init_worker,
+                            initargs=initargs) as pool:
+                        parts = list(pool.map(_eval_shard_in_worker,
+                                              _shards(jobs, n)))
+                    for _, prof in parts:
+                        _merge_profile(call_profile, prof)
+                    return ([o for out, _ in parts for o in out],
+                            f"process[{n}]")
+            graphs, classify = self._serial_memo(exp)
+            outcomes = _evaluate_many(
+                exp, list(specs), jobs, graphs,
+                return_timelines=self.return_timelines,
+                trace_resources=self.trace_resources,
+                trace_lanes=self.trace_lanes,
+                trace_budget_bytes=self.trace_budget_bytes,
+                batch_fastpath=self.batch_fastpath,
+                classify_memo=classify,
+                profile=call_profile)
+            return outcomes, "serial"
+        finally:
+            self.last_profile = call_profile
+            _merge_profile(self.profile_totals, call_profile)
+
+
+# -- module-level engine reuse ----------------------------------------------
+# One persistent engine per flag combination: planner entry points
+# (plan_parallelism / plan_codesign / plan_serving, and the CLI) call
+# shared_engine() instead of constructing throwaway engines, so the
+# process pool and serial memos stay warm across *calls* — back-to-back
+# co-design questions about the same experiment re-pickle nothing.
+_SHARED: Dict[Tuple, SweepEngine] = {}
+
+
+def shared_engine(workers: Optional[int] = 0,
+                  return_timelines: bool = False,
+                  trace_resources: bool = False,
+                  trace_lanes: Optional[Sequence] = None,
+                  trace_budget_bytes: Optional[int] = None) -> SweepEngine:
+    """Return the module-level persistent :class:`SweepEngine` for a flag
+    combination, creating (and entering) it on first use.
+
+    The engine is already persistent (``__enter__`` has been called):
+    its process pool is keyed by the pickled (experiment, specs) pair
+    and survives across calls, and its serial-path graph/classifier
+    memos stay warm per experiment. Callers must NOT close it — it is
+    shared; :func:`close_shared_engines` (registered atexit) tears all
+    shared engines down."""
+    key = (os.cpu_count() if workers is None else workers,
+           bool(return_timelines), bool(trace_resources),
+           _lane_codes(trace_lanes), trace_budget_bytes)
+    eng = _SHARED.get(key)
+    if eng is None:
+        eng = SweepEngine(workers=workers,
+                          return_timelines=return_timelines,
+                          trace_resources=trace_resources,
+                          trace_lanes=trace_lanes,
+                          trace_budget_bytes=trace_budget_bytes)
+        eng.__enter__()
+        _SHARED[key] = eng
+    return eng
+
+
+def close_shared_engines() -> None:
+    """Shut down every :func:`shared_engine` pool (also runs atexit)."""
+    for eng in _SHARED.values():
+        eng.close()
+    _SHARED.clear()
+
+
+atexit.register(close_shared_engines)

@@ -74,6 +74,14 @@ from .parallelism import (
     split_op,
 )
 from .scheduler import PipelineSimulator, SimResult, ideal_pipeline_time
-from .fastpath import FastPathIneligible, try_fast_run
+from .fastpath import (
+    FastPathIneligible,
+    StageChains,
+    classify_cached,
+    compile_stage_chains,
+    replay_chains,
+    try_fast_run,
+)
+from .fastbatch import run_fast_batch
 from .simulator import PlanResult, simulate, sweep_plans
 from .sram import OpAccess, StageMemory, allocate_stage, optimizer_state_bytes_per_param, stage_memory

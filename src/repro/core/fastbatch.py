@@ -1,0 +1,684 @@
+"""Batched analytic tier: vectorize the fast path across configurations.
+
+PR 8's fast tier (:mod:`repro.core.fastpath`) made *one* run cheap; the
+binding cost in a sweep is now the per-job Python dispatch — every
+(hardware, plan) point walks its own chains node-by-node through
+``_ChainEval.run``. But a co-design sweep is dominated by configurations
+that share the *structure* of their chains (same mesh topology, same
+mapped graph shape, same schedule) and differ only in the float leaves
+(compute times, transfer times, byte counts) that the hardware axes
+scale. This module exploits that:
+
+1. every fast-path-eligible job's compiled :class:`~repro.core.fastpath.
+   StageChains` is *skeletonized* — float leaves stripped into a flat
+   per-job leaf vector, structure hashed into a chain **shape
+   signature** (stage count, microbatch count, work lists, hold lanes,
+   par/spawn nesting);
+2. jobs are grouped by signature and each group's leaf vectors are
+   packed into one ``(num_leaves, num_configs)`` float64 matrix;
+3. one structural replay evaluates the whole group: chain segments
+   become prefix sums (``np.add.accumulate``) over the config axis, par
+   joins become elementwise ``np.maximum`` folds, and the scheduler's
+   mailbox replay runs *once* with ``(num_configs,)`` time vectors
+   instead of once per job.
+
+Why grouping is sound: the optimistic replay's control flow is purely
+structural — which mailbox fills at which step, which chain body runs
+next, when the work lists drain — none of it depends on the float
+values, only on the (shared) structure. And why the numbers are
+bit-identical: ``np.add.accumulate`` is a strict sequential left fold
+(so a segment's prefix sums reproduce ``((t + x1) + x2)...`` exactly),
+elementwise float64 ops equal their scalar counterparts per element,
+and every fold (par joins, totals, byte counters) runs in the same
+fixed node order as the scalar tier, so IEEE-754 never reassociates.
+
+Per-job semantics are preserved: interval validation runs per config
+(one flat lexsort over the config-major interval matrix), contended or
+otherwise ineligible configs fall back individually, and groups too
+small to amortize the vector overhead take the scalar replay.
+
+Known divergence: batched results leave ``noc_occupancy_fallback``
+empty (its float accumulation order cannot be cheaply vectorized); the
+field is compare-excluded and the sweep layer clears it anyway.
+"""
+
+from __future__ import annotations
+
+from time import perf_counter
+from typing import Dict, List, Optional, Tuple
+
+try:
+    import numpy as _np
+except ImportError:         # pragma: no cover - exercised by CI bench-smoke
+    _np = None
+
+from .fastpath import (
+    StageChains,
+    classify_cached,
+    compile_stage_chains,
+    replay_chains,
+)
+from .parallelism import FD
+from .trace import KIND_BD, KIND_FD, KIND_GU, Trace
+
+__all__ = ["available", "run_fast_batch"]
+
+_CONTENDED = "resource contention detected by interval validation"
+_STALLED = "work-list replay stalled (mailbox never filled)"
+
+
+def available() -> bool:
+    """True when the vectorized group evaluator can run (numpy present).
+
+    Without numpy :func:`run_fast_batch` still works — it degrades to
+    the scalar fast tier per job — so callers never need to branch."""
+    return _np is not None
+
+
+def _padd(profile: Optional[Dict], key: str, val) -> None:
+    if profile is not None:
+        profile[key] = profile.get(key, 0) + val
+
+
+# ---------------------------------------------------------------------------
+# skeletonization: split a chain into structure (hashable) + float leaves
+# ---------------------------------------------------------------------------
+
+def _skeletonize(chain, leaves: List[float]) -> Tuple:
+    """Strip a chain's float leaves (appended to ``leaves`` in walk
+    order) and return its hashable structure. The walk order — node
+    order, par branches left-to-right, spawn bodies inline — is the
+    contract :class:`_Compiler` assigns leaf rows by."""
+    out = []
+    for node in chain:
+        tag = node[0]
+        if tag == "dt":
+            leaves.append(node[1])
+            out.append(("dt",))
+        elif tag == "hold":
+            leaves.append(node[2])
+            out.append(("hold", tuple(node[1])))
+        elif tag == "par":
+            out.append(("par", tuple(_skeletonize(b, leaves)
+                                     for b in node[1])))
+        elif tag == "bytes":
+            leaves.append(node[2])
+            out.append(("bytes", node[1]))
+        else:  # "spawn"
+            out.append(("spawn", _skeletonize(node[1], leaves)))
+    return tuple(out)
+
+
+def _signature(sim, chains: StageChains):
+    """Chain shape signature + this job's leaf vector.
+
+    Two jobs with equal signatures replay identically modulo leaf
+    values: same stages, same microbatch count and work lists, same
+    hold lanes, same par/spawn nesting — so one structural replay
+    serves the whole group."""
+    S = sim.mapped.num_stages
+    leaves: List[float] = []
+    skels = []
+    for slot in chains:         # NamedTuple order == _Compiler walk order
+        skels.append(tuple(None if ch is None else _skeletonize(ch, leaves)
+                           for ch in slot))
+    work = tuple(tuple(sim._work_list(s)) for s in range(S))
+    sig = (S, sim.plan.num_microbatches, bool(sim.plan.training),
+           bool(sim.collect_timeline), work, tuple(skels))
+    return sig, leaves
+
+
+# ---------------------------------------------------------------------------
+# program compilation: skeleton -> vector ops
+# ---------------------------------------------------------------------------
+
+class _Seg:
+    """A maximal run of time-advancing nodes (dt/hold) plus the byte
+    counters interleaved with them. Evaluated as one prefix sum over
+    the leaf matrix: ``P[0] = t``, ``P[i] = P[i-1] + V[adv[i-1]]`` —
+    the exact left-fold the scalar tier performs. Byte counters are
+    pre-grouped per accumulator (their walk order within one
+    accumulator preserved) so a segment's contribution is one more
+    ``np.add.accumulate`` seeded with the running total — the same
+    strict left fold, not a reassociating ``sum``."""
+
+    __slots__ = ("adv", "hold_pos", "hold_keys", "bytes_ops",
+                 "hold_idx", "v_adv", "v_bytes")
+
+    def __init__(self, adv, hold_pos, hold_keys, bytes_ops):
+        self.adv = adv              # (k,) leaf rows, walk order
+        self.hold_pos = hold_pos    # (h,) prefix positions, one per lane key
+        self.hold_keys = hold_keys  # (h,) packed lane ids
+        self.bytes_ops = bytes_ops  # ((acc_idx, (k,) leaf rows), ...)
+        # interval bounds in one gather: P[hold_idx][:h] are the starts,
+        # [h:] the ends
+        self.hold_idx = _np.concatenate((hold_pos, hold_pos + 1))
+        self.v_adv = None           # (k, G) leaf slice, bound per group
+        self.v_bytes = None         # ((acc_idx, (k, G)), ...), ditto
+
+
+class _Par:
+    __slots__ = ("branches",)
+
+    def __init__(self, branches):
+        self.branches = branches    # tuple of _Prog
+
+
+class _Spawn:
+    __slots__ = ("body",)
+
+    def __init__(self, body):
+        self.body = body            # _Prog
+
+
+class _Prog:
+    """One compiled chain. ``nodes`` is the total chain-node count this
+    program contributes per evaluation, *including* par branches and
+    spawn bodies — the scalar ``_ChainEval`` adds ``len(chain)`` on
+    every (recursive) ``run`` call, and it never skips a branch, so
+    the per-run total is static."""
+
+    __slots__ = ("ops", "nodes")
+
+    def __init__(self, ops, nodes):
+        self.ops = ops
+        self.nodes = nodes
+
+
+_ACC_IDX = {"noc": 0, "dram": 1}        # anything else is fabric (2)
+
+
+class _Compiler:
+    """Compiles a signature's skeletons into programs, assigning every
+    float leaf a row in the group's leaf matrix. One compiler walks all
+    chain slots in :class:`StageChains` order, so the row assignment
+    matches :func:`_skeletonize`'s leaf collection order exactly."""
+
+    def __init__(self):
+        self.row = 0
+
+    def prog(self, skel) -> _Prog:
+        ops: List = []
+        nodes = len(skel)
+        adv: List[int] = []
+        hold_pos: List[int] = []
+        hold_keys: List[int] = []
+        bytes_rows: Dict[int, List[int]] = {}
+
+        def flush():
+            nonlocal adv, hold_pos, hold_keys, bytes_rows
+            if adv or bytes_rows:
+                ops.append(_Seg(
+                    _np.asarray(adv, dtype=_np.intp),
+                    _np.asarray(hold_pos, dtype=_np.intp),
+                    _np.asarray(hold_keys, dtype=_np.int64),
+                    tuple((acc, _np.asarray(rows, dtype=_np.intp))
+                          for acc, rows in bytes_rows.items())))
+                adv, hold_pos, hold_keys, bytes_rows = [], [], [], {}
+
+        for node in skel:
+            tag = node[0]
+            if tag == "dt":
+                adv.append(self.row)
+                self.row += 1
+            elif tag == "hold":
+                j = len(adv)        # interval = [P[j], P[j+1]] per key
+                adv.append(self.row)
+                self.row += 1
+                for k in node[1]:
+                    hold_pos.append(j)
+                    hold_keys.append(k)
+            elif tag == "bytes":
+                bytes_rows.setdefault(_ACC_IDX.get(node[1], 2),
+                                      []).append(self.row)
+                self.row += 1
+            elif tag == "par":
+                flush()
+                branches = tuple(self.prog(b) for b in node[1])
+                nodes += sum(b.nodes for b in branches)
+                ops.append(_Par(branches))
+            else:  # "spawn"
+                flush()
+                body = self.prog(node[1])
+                nodes += body.nodes
+                ops.append(_Spawn(body))
+        flush()
+        return _Prog(tuple(ops), nodes)
+
+
+def _compile_group(skels) -> Tuple[StageChains, int]:
+    comp = _Compiler()
+    slots = [[None if sk is None else comp.prog(sk) for sk in slot]
+             for slot in skels]
+    return StageChains(*slots), comp.row
+
+
+def _bind_leaves(progs: StageChains, V) -> None:
+    """Materialize every segment's leaf-matrix slices once per group.
+    The segments are replayed M x S times; gathering ``V[adv]`` on
+    every call would dominate the vector replay, and the slices are
+    call-invariant (only the running time vector changes)."""
+    def walk(prog):
+        for op in prog.ops:
+            cls = op.__class__
+            if cls is _Seg:
+                op.v_adv = V[op.adv] if len(op.adv) else None
+                op.v_bytes = tuple((acc, V[rows])
+                                   for acc, rows in op.bytes_ops)
+            elif cls is _Par:
+                for b in op.branches:
+                    walk(b)
+            else:
+                walk(op.body)
+    for slot in progs:
+        for prog in slot:
+            if prog is not None:
+                walk(prog)
+
+
+# ---------------------------------------------------------------------------
+# vector chain evaluation
+# ---------------------------------------------------------------------------
+
+class _BatchEval:
+    """The vector counterpart of ``_ChainEval``: time is a
+    ``(num_configs,)`` float64 vector, intervals are recorded as
+    ``(keys, (n, G) start/end)`` chunks, byte counters are per-config
+    vectors accumulated in walk order."""
+
+    __slots__ = ("V", "G", "key_chunks", "start_chunks", "end_chunks",
+                 "accs", "nodes", "spawned")
+
+    def __init__(self, V, G: int):
+        self.V = V                      # (num_leaves, G) leaf matrix
+        self.G = G
+        self.key_chunks: List = []
+        self.start_chunks: List = []
+        self.end_chunks: List = []
+        self.accs = [_np.zeros(G), _np.zeros(G), _np.zeros(G)]
+        self.nodes = 0
+        self.spawned: List = []
+
+    def run(self, prog: _Prog, t):
+        self.nodes += prog.nodes
+        return self._eval(prog.ops, t)
+
+    def _eval(self, ops, t):
+        for op in ops:
+            cls = op.__class__
+            if cls is _Seg:
+                k = len(op.adv)
+                if k:
+                    # strict sequential left fold: P[i+1] = P[i] + x_i,
+                    # bit-identical to the scalar t += x chain
+                    stack = _np.empty((k + 1, self.G))
+                    stack[0] = t
+                    stack[1:] = op.v_adv
+                    P = _np.add.accumulate(stack, axis=0, out=stack)
+                    h = len(op.hold_pos)
+                    if h:
+                        self.key_chunks.append(op.hold_keys)
+                        bounds = P[op.hold_idx]
+                        self.start_chunks.append(bounds[:h])
+                        self.end_chunks.append(bounds[h:])
+                    t = P[k]
+                for acc, rows in op.v_bytes:
+                    if len(rows) == 1:
+                        self.accs[acc] = self.accs[acc] + rows[0]
+                    else:
+                        bstack = _np.empty((len(rows) + 1, self.G))
+                        bstack[0] = self.accs[acc]
+                        bstack[1:] = rows
+                        _np.add.accumulate(bstack, axis=0, out=bstack)
+                        self.accs[acc] = bstack[len(rows)]
+            elif cls is _Par:
+                branches = op.branches
+                if branches:
+                    best = self._eval(branches[0].ops, t)
+                    for b in branches[1:]:
+                        best = _np.maximum(best, self._eval(b.ops, t))
+                    t = best
+            else:  # _Spawn
+                self.spawned.append(self._eval(op.body.ops, t))
+        return t
+
+
+# ---------------------------------------------------------------------------
+# group replay (the vectorized mirror of fastpath.replay_chains)
+# ---------------------------------------------------------------------------
+
+def _replay_group(sims, progs: StageChains, V, profile: Optional[Dict]):
+    """Replay one signature group; returns the per-sim outcome list
+    (``(SimResult | None, reason | None)`` in ``sims`` order).
+
+    Structurally this is ``fastpath.replay_chains`` with every float
+    replaced by a ``(G,)`` vector; every branch the scalar replay takes
+    on float *presence* (mailbox filled or not) is structural, so one
+    pass serves the whole group."""
+    from .scheduler import SimResult
+
+    sim0 = sims[0]
+    G = len(sims)
+    S = sim0.mapped.num_stages
+    M = sim0.plan.num_microbatches
+    training = sim0.plan.training
+    collect_timeline = sim0.collect_timeline
+
+    fd_body, fd_post, bd_body, bd_last, bd_post, gu_body = progs
+
+    ev = _BatchEval(V, G)
+    work = [list(sim0._work_list(s)) for s in range(S)]
+    pos = [0] * S
+    zero = _np.zeros(G)
+    cursor = [zero] * S                 # entries replaced, never mutated
+    prev_row = [-1] * S                 # structural (same row for all configs)
+    row_idx: Dict[Tuple[int, int, int], int] = {}
+    act = {(0, i): zero for i in range(M)}
+    grad: Dict[Tuple[int, int], object] = {}
+    fd_done: Dict[Tuple[int, int], object] = {}
+    pending: List[List] = [[] for _ in range(S)]
+    gu_todo = [training] * S
+
+    # trace rows: structural columns + per-config float/pred columns
+    tr_stage: List[int] = []
+    tr_kind: List[int] = []
+    tr_micro: List[int] = []
+    tr_start: List = []
+    tr_end: List = []
+    tr_pred: List = []                  # scalar int or (G,) int vector
+
+    def rec(s, kind, mb, start, end, pred) -> int:
+        tr_stage.append(s)
+        tr_kind.append(kind)
+        tr_micro.append(mb)
+        tr_start.append(start)
+        tr_end.append(end)
+        tr_pred.append(pred)
+        return len(tr_stage) - 1
+
+    progress = True
+    while progress:
+        progress = False
+        for s in range(S):
+            while pos[s] < len(work[s]):
+                kind, mb = work[s][pos[s]]
+                if kind == FD:
+                    dep = act.get((s, mb))
+                    if dep is None:
+                        break
+                    t0 = cursor[s]
+                    start = _np.maximum(t0, dep)
+                    end = ev.run(fd_body[s], start)
+                    fd_done[(s, mb)] = end
+                    if s > 0:
+                        pred = _np.where(dep > t0,
+                                         row_idx.get((s - 1, KIND_FD, mb),
+                                                     -1),
+                                         prev_row[s])
+                    else:
+                        pred = prev_row[s]
+                    r = rec(s, KIND_FD, mb, start, end, pred)
+                    row_idx[(s, KIND_FD, mb)] = r
+                    prev_row[s] = r
+                    if fd_post[s] is not None:
+                        t_post = ev.run(fd_post[s], end)
+                        act[(s + 1, mb)] = t_post
+                        cursor[s] = t_post
+                    else:
+                        if training:
+                            grad[(s, mb)] = end
+                        cursor[s] = end
+                else:
+                    dep = grad.get((s, mb))
+                    if dep is None:
+                        break
+                    t0 = cursor[s]
+                    start = _np.maximum(t0, dep)
+                    n_sp = len(ev.spawned)
+                    body = bd_last[s] if mb == M - 1 else bd_body[s]
+                    end = ev.run(body, start)
+                    pending[s].extend(ev.spawned[n_sp:])
+                    row = (row_idx.get((s, KIND_FD, mb), -1) if s == S - 1
+                           else row_idx.get((s + 1, KIND_BD, mb), -1))
+                    pred = _np.where(dep > t0, row, prev_row[s])
+                    r = rec(s, KIND_BD, mb, start, end, pred)
+                    row_idx[(s, KIND_BD, mb)] = r
+                    prev_row[s] = r
+                    if bd_post[s] is not None:
+                        t_post = ev.run(bd_post[s], end)
+                        grad[(s - 1, mb)] = t_post
+                        cursor[s] = t_post
+                    else:
+                        cursor[s] = end
+                pos[s] += 1
+                progress = True
+            if pos[s] == len(work[s]) and gu_todo[s]:
+                t0 = cursor[s]
+                start = t0
+                for p in pending[s]:
+                    start = _np.maximum(start, p)
+                pred = _np.where(start > t0,
+                                 row_idx.get((s, KIND_BD, M - 1), -1),
+                                 prev_row[s])
+                end = ev.run(gu_body[s], start)
+                r = rec(s, KIND_GU, 0, start, end, pred)
+                row_idx[(s, KIND_GU, 0)] = r
+                prev_row[s] = r
+                cursor[s] = end
+                gu_todo[s] = False
+                progress = True
+
+    if any(pos[s] < len(work[s]) for s in range(S)) or any(gu_todo):
+        # deadlock is structural: the whole group stalls identically
+        return [(None, _STALLED)] * G
+
+    # -- per-config interval validation -------------------------------------
+    t_val = perf_counter()
+    contended = _np.zeros(G, dtype=bool)
+    N = 0
+    if ev.key_chunks:
+        keys = _np.concatenate(ev.key_chunks)           # (N,) packed lanes
+        starts = _np.vstack(ev.start_chunks)            # (N, G)
+        ends = _np.vstack(ev.end_chunks)
+        N = len(keys)
+        if collect_timeline:
+            # timeline runs need the full per-config resource rows anyway,
+            # so validate off the same flat config-major lexsort that will
+            # order the emission: primary key is the config, so rows
+            # g*N:(g+1)*N are config g's sorted slice
+            cfg = _np.repeat(_np.arange(G), N)
+            k_f = _np.tile(keys, G)
+            s_f = starts.T.ravel()
+            e_f = ends.T.ravel()
+            order = _np.lexsort((s_f - e_f, s_f, k_f, cfg))
+            cs, ks = cfg[order], k_f[order]
+            ss, es = s_f[order], e_f[order]
+            bad = ((cs[1:] == cs[:-1]) & (ks[1:] == ks[:-1])
+                   & (ss[1:] < es[:-1]))
+            contended[cs[1:][bad]] = True
+            order2 = _np.lexsort((k_f, s_f, e_f, cfg))
+        else:
+            # scalar-only runs: per-lane column-wise validation, no (N*G,)
+            # scratch arrays. Two stacked *stable* axis-0 argsorts — by
+            # (s - e), then by s — reproduce the lexsort's per-config
+            # (s, s-e, emission-order) ordering exactly, so the contended
+            # verdict is bit-identical to the flat path (and the scalar
+            # tier). Rows within a lane block keep emission order because
+            # the lane grouping itself is a stable structural sort.
+            lane_order = _np.argsort(keys, kind="stable")
+            ks = keys[lane_order]
+            bounds = _np.flatnonzero(ks[1:] != ks[:-1]) + 1
+            blocks = _np.split(lane_order, bounds)
+            for rows in blocks:
+                if len(rows) < 2:
+                    continue
+                A = starts[rows]
+                B = ends[rows]
+                o1 = _np.argsort(A - B, axis=0, kind="stable")
+                A1 = _np.take_along_axis(A, o1, axis=0)
+                B1 = _np.take_along_axis(B, o1, axis=0)
+                o2 = _np.argsort(A1, axis=0, kind="stable")
+                A2 = _np.take_along_axis(A1, o2, axis=0)
+                B2 = _np.take_along_axis(B1, o2, axis=0)
+                contended |= (A2[1:] < B2[:-1]).any(axis=0)
+    _padd(profile, "validate_us", (perf_counter() - t_val) * 1e6)
+
+    # -- totals & throughput -------------------------------------------------
+    total = cursor[0]
+    for s in range(1, S):
+        total = _np.maximum(total, cursor[s])
+    samples = _np.asarray([sim.plan.global_batch for sim in sims],
+                          dtype=_np.float64)
+    bad_thpt = _np.zeros(G, dtype=bool)
+    with _np.errstate(divide="ignore", invalid="ignore"):
+        if training or M <= 1:
+            throughput = _np.where(total > 0, samples / total, 0.0)
+        else:
+            first = fd_done[(S - 1, 0)]
+            last = first
+            for i in range(1, M):
+                v = fd_done[(S - 1, i)]
+                first = _np.minimum(first, v)
+                last = _np.maximum(last, v)
+            throughput = (M - 1) * (samples / M) / (last - first)
+            bad_thpt = ~_np.isfinite(throughput)
+
+    # -- per-config SimResults ----------------------------------------------
+    R = len(tr_stage)
+    stage_col = _np.asarray(tr_stage, dtype=_np.int32)
+    kind_col = _np.asarray(tr_kind, dtype=_np.int8)
+    micro_col = _np.asarray(tr_micro, dtype=_np.int32)
+    res_col = _np.full(R, -1, dtype=_np.int32)
+    start_mat = _np.vstack(tr_start) if R else _np.empty((0, G))
+    end_mat = _np.vstack(tr_end) if R else _np.empty((0, G))
+    pred_mat = (_np.vstack([_np.broadcast_to(
+                    _np.asarray(p, dtype=_np.int32), (G,))
+                for p in tr_pred])
+                if R else _np.empty((0, G), dtype=_np.int32))
+
+    out = []
+    for g, sim in enumerate(sims):
+        if contended[g]:
+            out.append((None, _CONTENDED))
+            _padd(profile, "contended_jobs", 1)
+            continue
+        if bad_thpt[g]:
+            out.append((None, "non-finite inference throughput"))
+            continue
+        st_g = _np.ascontiguousarray(start_mat[:, g])
+        en_g = _np.ascontiguousarray(end_mat[:, g])
+        pr_g = _np.ascontiguousarray(pred_mat[:, g])
+        if collect_timeline and N:
+            idx = order2[g * N:(g + 1) * N]
+            stv = s_f[idx]
+            env = e_f[idx]
+            keep = env > stv            # zero-length intervals suppressed
+            kk = k_f[idx][keep]
+            n_res = len(kk)
+            trace = Trace(
+                stage=_np.concatenate(
+                    [stage_col, _np.full(n_res, -1, dtype=_np.int32)]),
+                kind=_np.concatenate(
+                    [kind_col, (kk >> 32).astype(_np.int8)]),
+                micro=_np.concatenate(
+                    [micro_col, _np.full(n_res, -1, dtype=_np.int32)]),
+                resource=_np.concatenate(
+                    [res_col, (kk & 0xFFFFFFFF).astype(_np.int32)]),
+                start=_np.concatenate([st_g, stv[keep]]),
+                end=_np.concatenate([en_g, env[keep]]),
+                pred=_np.concatenate(
+                    [pr_g, _np.full(n_res, -1, dtype=_np.int32)]),
+                total_time=float(total[g]), num_stages=S)
+        else:
+            trace = Trace(stage=stage_col, kind=kind_col, micro=micro_col,
+                          resource=res_col, start=st_g, end=en_g,
+                          pred=pr_g, total_time=float(total[g]),
+                          num_stages=S)
+        out.append((SimResult(
+            total_time=float(total[g]),
+            throughput=float(throughput[g]),
+            stage_memory=sim.memory,
+            recompute=sim.recompute,
+            event_count=ev.nodes,
+            noc_bytes=float(ev.accs[0][g] + ev.accs[2][g]),
+            dram_bytes=float(ev.accs[1][g]),
+            engine="fast",
+            trace=trace,
+            noc_occupancy_fallback={},
+        ), None))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# entry point
+# ---------------------------------------------------------------------------
+
+def run_fast_batch(sims, *, min_group: int = 2,
+                   classify_memo: Optional[Dict] = None,
+                   profile: Optional[Dict] = None):
+    """Evaluate many simulators through the fast tier, vectorizing
+    across configurations that share a chain shape signature.
+
+    Returns one ``(SimResult | None, reason | None)`` pair per input
+    sim, in order — exactly the contract of a ``try_fast_run`` per job
+    (``None`` result means the caller should fall back to the event
+    tier for that job; the reason says why). Results are bit-identical
+    to the scalar fast tier. ``min_group`` is the smallest signature
+    group worth the vector overhead; smaller groups take the scalar
+    replay on their already-compiled chains. ``classify_memo`` and
+    ``profile`` are optional caller-owned dicts (classifier cache and
+    per-phase timing/count accumulator)."""
+    out: List = [None] * len(sims)
+    _padd(profile, "jobs", len(sims))
+
+    if _np is None:
+        # dependency-free degradation: scalar fast tier per job
+        for i, sim in enumerate(sims):
+            reason = classify_cached(sim, classify_memo)
+            if reason is None:
+                result, reason = replay_chains(sim,
+                                               compile_stage_chains(sim))
+                out[i] = (result, reason)
+            else:
+                out[i] = (None, reason)
+        return out
+
+    t0 = perf_counter()
+    groups: Dict[Tuple, List[int]] = {}
+    per: List = [None] * len(sims)      # (chains, leaves) for eligible jobs
+    for i, sim in enumerate(sims):
+        reason = classify_cached(sim, classify_memo)
+        if reason is not None:
+            out[i] = (None, reason)
+            _padd(profile, "ineligible_jobs", 1)
+            continue
+        chains = compile_stage_chains(sim)
+        sig, leaves = _signature(sim, chains)
+        per[i] = (chains, leaves)
+        groups.setdefault(sig, []).append(i)
+    _padd(profile, "compile_us", (perf_counter() - t0) * 1e6)
+
+    for sig, idxs in groups.items():
+        if len(idxs) < min_group:
+            _padd(profile, "scalar_jobs", len(idxs))
+            for i in idxs:
+                out[i] = replay_chains(sims[i], per[i][0])
+            continue
+        t1 = perf_counter()
+        v0 = profile.get("validate_us", 0) if profile is not None else 0
+        progs, n_rows = _compile_group(sig[5])
+        if n_rows != len(per[idxs[0]][1]):      # pragma: no cover - invariant
+            raise AssertionError("leaf row assignment out of sync with "
+                                 "skeleton walk")
+        V = _np.ascontiguousarray(_np.asarray(
+            [per[i][1] for i in idxs], dtype=_np.float64).T)
+        _bind_leaves(progs, V)
+        results = _replay_group([sims[i] for i in idxs], progs, V, profile)
+        for j, i in enumerate(idxs):
+            out[i] = results[j]
+        dv = ((profile.get("validate_us", 0) - v0)
+              if profile is not None else 0)
+        _padd(profile, "eval_us", (perf_counter() - t1) * 1e6 - dv)
+        _padd(profile, "groups", 1)
+        _padd(profile, "batched_jobs", len(idxs))
+    return out

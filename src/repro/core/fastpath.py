@@ -47,7 +47,7 @@ nothing.
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, NamedTuple, Optional, Tuple
 
 try:
     import numpy as _np
@@ -65,7 +65,9 @@ from .trace import (
     TraceRecorder,
 )
 
-__all__ = ["FastPathIneligible", "classify", "try_fast_run"]
+__all__ = ["FastPathIneligible", "classify", "classify_cached",
+           "compile_stage_chains", "replay_chains", "try_fast_run",
+           "StageChains"]
 
 
 class FastPathIneligible(Exception):
@@ -93,6 +95,37 @@ def classify(sim) -> Optional[str]:
             and any(len(st.devices) > 1 for st in sim.mapped.stages)):
         return "strategy-mode group-to-group boundary hand-off"
     return None
+
+
+def _classify_key(sim) -> Tuple:
+    """Memo key: hardware digest + plan structure summary. Deliberately
+    excludes ``global_batch`` (classification is invariant under
+    micro-batch truncation), so multi-fidelity search rungs of the same
+    (hardware, plan) candidate share one entry. Sound for memos scoped to
+    one experiment: within an experiment the mapping *structure* (stage
+    count, per-stage device groups) is a function of the hardware and the
+    plan's structural fields alone."""
+    p = sim.plan
+    return (sim.hw.name, str(sim.boundary_mode), p.interleave,
+            p.pp, p.dp, p.tp, bool(p.training), str(p.schedule),
+            str(p.layout), bool(p.tp_contiguous), p.microbatch)
+
+
+def classify_cached(sim, memo: Optional[Dict] = None) -> Optional[str]:
+    """:func:`classify` through an optional caller-owned memo dict.
+
+    The sweep path keys one memo per experiment (per worker), so the
+    static classifier runs once per (hardware digest, plan summary)
+    instead of once per job — microbatch-truncated fidelity rungs of the
+    same candidate hit the same entry."""
+    if memo is None:
+        return classify(sim)
+    key = _classify_key(sim)
+    try:
+        return memo[key]
+    except KeyError:
+        memo[key] = reason = classify(sim)
+        return reason
 
 
 # ---------------------------------------------------------------------------
@@ -297,6 +330,40 @@ def _gu_chain(sim, sid: int) -> List:
 # optimistic replay
 # ---------------------------------------------------------------------------
 
+class StageChains(NamedTuple):
+    """The compiled per-stage chain set one replay consumes — shared
+    between the scalar replay below and the batched evaluator
+    (:mod:`repro.core.fastbatch`), which groups jobs by the chains'
+    structural signature."""
+
+    fd_body: List[List]
+    fd_post: List[Optional[List]]
+    bd_body: List[Optional[List]]
+    bd_last: List[Optional[List]]
+    bd_post: List[Optional[List]]
+    gu_body: List[Optional[List]]
+
+
+def compile_stage_chains(sim) -> StageChains:
+    """Compile every FD/BD/GU body and boundary pass of a mapped graph
+    into chain form (one walk of the models' ``*_chain`` builders)."""
+    S = sim.mapped.num_stages
+    training = sim.plan.training
+    return StageChains(
+        fd_body=[_fd_body_chain(sim, s) for s in range(S)],
+        fd_post=[(_boundary_chain(sim, s, s + 1) if s + 1 < S else None)
+                 for s in range(S)],
+        bd_body=[(_bd_body_chain(sim, s, False) if training else None)
+                 for s in range(S)],
+        bd_last=[(_bd_body_chain(sim, s, True) if training else None)
+                 for s in range(S)],
+        bd_post=[(_boundary_chain(sim, s, s - 1) if training and s > 0
+                  else None) for s in range(S)],
+        gu_body=[(_gu_chain(sim, s) if training else None)
+                 for s in range(S)],
+    )
+
+
 def try_fast_run(sim, strict: bool = False):
     """Attempt the analytic tier on a freshly constructed
     :class:`~repro.core.scheduler.PipelineSimulator`.
@@ -318,22 +385,21 @@ def try_fast_run(sim, strict: bool = False):
 
 
 def _attempt(sim):
+    return replay_chains(sim, compile_stage_chains(sim))
+
+
+def replay_chains(sim, chains: StageChains):
+    """Optimistically replay pre-compiled stage chains; returns
+    ``(SimResult | None, reason | None)`` exactly like the fast tier —
+    the chain-compilation half lives in :func:`compile_stage_chains` so
+    the batched evaluator can reuse it."""
     from .scheduler import SimResult
 
     S = sim.mapped.num_stages
     M = sim.plan.num_microbatches
     training = sim.plan.training
 
-    fd_body = [_fd_body_chain(sim, s) for s in range(S)]
-    fd_post = [(_boundary_chain(sim, s, s + 1) if s + 1 < S else None)
-               for s in range(S)]
-    bd_body = [(_bd_body_chain(sim, s, False) if training else None)
-               for s in range(S)]
-    bd_last = [(_bd_body_chain(sim, s, True) if training else None)
-               for s in range(S)]
-    bd_post = [(_boundary_chain(sim, s, s - 1) if training and s > 0
-                else None) for s in range(S)]
-    gu_body = [(_gu_chain(sim, s) if training else None) for s in range(S)]
+    fd_body, fd_post, bd_body, bd_last, bd_post, gu_body = chains
 
     ev = _ChainEval()
     rec = TraceRecorder()

@@ -210,10 +210,16 @@ def plan_parallelism(
     spec in ``cfg.slo`` (the serving simulator) instead of training step
     throughput; each report's full :class:`ServingReport` dict rides in
     ``.extra["serving"]``. ``engine`` lends an open persistent
-    :class:`SweepEngine` whose warm pool is reused (never closed here).
+    :class:`SweepEngine` whose warm pool is reused (never closed here);
+    by default the module-level :func:`repro.api.sweep.shared_engine`
+    pool is used, so back-to-back planner calls about the same
+    experiment re-initialize nothing.
     """
     exp = _make_experiment(arch, hardware, cfg,
                            serving=_resolve_objective(cfg, objective))
+    if engine is None:
+        from ..api.sweep import shared_engine   # api builds on core
+        engine = shared_engine(workers=cfg.workers)
     return exp.sweep(engine=engine, **_sweep_kwargs(cfg, strategy)).runs
 
 
@@ -240,13 +246,17 @@ def plan_codesign(
     pair is scored by SLO goodput under ``cfg.slo`` traffic, so a machine
     that wins on training step time can lose to one with the bandwidth
     headroom decode traffic actually needs. ``engine`` lends an open
-    persistent :class:`SweepEngine` (reused, never closed here).
+    persistent :class:`SweepEngine` (reused, never closed here); defaults
+    to the module-level :func:`repro.api.sweep.shared_engine` pool.
     """
     if cfg.hardware_search is None:
         raise ValueError("plan_codesign needs cfg.hardware_search (use "
                          "plan_parallelism for a parallelism-only sweep)")
     exp = _make_experiment(arch, hardware, cfg,
                            serving=_resolve_objective(cfg, objective))
+    if engine is None:
+        from ..api.sweep import shared_engine   # api builds on core
+        engine = shared_engine(workers=cfg.workers)
     report = exp.sweep(engine=engine, **_sweep_kwargs(cfg, strategy))
     best = report.best
     if best is None:

@@ -196,14 +196,12 @@ class PipelineSimulator:
         self.boundary_mode = BoundaryMode(boundary_mode)
 
         S = mapped.num_stages
-        M = self.plan.num_microbatches
-        # Act/Grad Pass mailboxes (adjacent stages share a message queue)
-        self.act_ready: List[List[Event]] = [
-            [self.env.event(f"act[{s}][{i}]") for i in range(M)] for s in range(S)]
-        self.grad_ready: List[List[Event]] = [
-            [self.env.event(f"grad[{s}][{i}]") for i in range(M)] for s in range(S)]
-        for i in range(M):
-            self.act_ready[0][i].succeed()  # stage 0 fetches its own data
+        # Act/Grad Pass mailboxes are event-kernel state: their creation
+        # (O(stages x micro-batches) Event objects) is deferred to
+        # ``_run_event`` so fast-tier-only runs — the common case in
+        # batched sweeps — never pay for them
+        self.act_ready: List[List[Event]] = []
+        self.grad_ready: List[List[Event]] = []
 
         # memory + recompute decision (auto: recompute iff footprint exceeds
         # per-device DRAM capacity without it); callers that already sized
@@ -221,7 +219,7 @@ class PipelineSimulator:
         self._row_idx: Dict[Tuple[int, int, int], int] = {}
         self._prev_row: List[int] = [-1] * S
         self._last_res_row: Dict[Tuple[int, ...], int] = {}
-        self._gu_done: List[Event] = [self.env.event(f"gu[{s}]") for s in range(S)]
+        self._gu_done: List[Event] = []
         # interleaved 1F1B: virtual stages sharing a tile group serialize
         # on the group's compute resource (BD pre-empts queued FD — the
         # Prior Selector, Fig. 4)
@@ -465,8 +463,25 @@ class PipelineSimulator:
                 return result
         return self._run_event()
 
+    def _setup_events(self) -> None:
+        """Create the Act/Grad Pass mailboxes and GU-done latches the
+        event kernel synchronizes on (deferred from ``__init__`` so
+        fast-tier runs skip the O(S x M) Event construction)."""
+        S = self.mapped.num_stages
+        M = self.plan.num_microbatches
+        self.act_ready = [
+            [self.env.event(f"act[{s}][{i}]") for i in range(M)]
+            for s in range(S)]
+        self.grad_ready = [
+            [self.env.event(f"grad[{s}][{i}]") for i in range(M)]
+            for s in range(S)]
+        for i in range(M):
+            self.act_ready[0][i].succeed()  # stage 0 fetches its own data
+        self._gu_done = [self.env.event(f"gu[{s}]") for s in range(S)]
+
     def _run_event(self) -> SimResult:
         env = self.env
+        self._setup_events()
         procs = [env.process(self._stage_proc(s), name=f"stage{s}")
                  for s in range(self.mapped.num_stages)]
         env.run(until_event=env.all_of(procs))

@@ -20,7 +20,7 @@ from typing import Callable, Iterable, List, Optional
 from .enums import BoundaryMode, NoCMode
 from .graph import ComputationGraph
 from .hardware import HardwareSpec
-from .parallelism import MappedGraph, ParallelPlan, map_graph
+from .parallelism import MappedGraph, ParallelPlan, map_graph, plan_sort_key
 from .scheduler import (
     PipelineSimulator,
     SimResult,
@@ -97,5 +97,7 @@ def sweep_plans(
         sim = PipelineSimulator(mapped, noc_mode=noc_mode, memory_plan=mem_plan,
                                 engine=engine)
         out.append(PlanResult(plan=plan, result=sim.run()))
-    out.sort(key=lambda r: -r.throughput)
+    # tie-break equal-throughput plans canonically so this ranking and the
+    # SweepEngine's (run_rank_key) compare exactly on one hardware spec
+    out.sort(key=lambda r: (-r.throughput, plan_sort_key(r.plan)))
     return out

@@ -140,9 +140,9 @@ def _assemble(exp, space: EncodedSpace, strategy: str, seed: int,
     """Rank the full-fidelity runs into a SweepReport with the nested
     SearchReport, reusing the Experiment's report-assembly helpers so
     guided and exhaustive reports stay structurally identical."""
-    from ..api.report import SweepReport
+    from ..api.report import SweepReport, run_rank_key
 
-    runs = sorted(reports.values(), key=lambda r: -r.throughput)
+    runs = sorted(reports.values(), key=run_rank_key)
     report = SweepReport(
         arch=exp.arch_name,
         hardware=exp._hardware_label(space.num_enumerated),

@@ -69,6 +69,22 @@ class Fidelity:
         return (self.noc_mode is None and self.max_microbatches is None
                 and self.max_requests is None)
 
+    def resolve(self, plan: ParallelPlan, noc_mode: NoCMode,
+                engine: str) -> tuple:
+        """Apply every knob of this rung to a job's effective
+        ``(plan, noc_mode, engine)`` triple (the sweep engine's
+        :func:`~repro.api.sweep._prepare` calls this per job). The
+        returned engine also decides *batching*: ``"auto"``/``"fast"``
+        jobs are grouped by chain shape and priced through the vectorized
+        batched fast tier (:mod:`repro.core.fastbatch`), so cheap rungs
+        of a ladder evaluate whole generations in a few numpy passes."""
+        plan = self.apply(plan)
+        if self.noc_mode is not None:
+            noc_mode = NoCMode(self.noc_mode)
+        if self.engine is not None:
+            engine = self.engine
+        return plan, noc_mode, engine
+
     def apply(self, plan: ParallelPlan) -> ParallelPlan:
         """Truncate the plan's microbatch count (the per-iteration batch
         ``microbatch * dp`` — and thus the workload graph — is

@@ -81,11 +81,18 @@ def plan_serving(arch: "ArchConfig | str", hardware="tpu_v5e", batch: int = 8,
     can see *how far* over budget the model is on this machine.
 
     ``engine`` lends an open persistent :class:`SweepEngine` (its warm
-    process pool is reused and never closed here).
+    process pool is reused and never closed here); defaults to the
+    module-level :func:`repro.api.sweep.shared_engine` pool so repeated
+    planning calls reuse one warm engine.
     """
     from ..api import Experiment, Layout, SearchSpace, resolve_hardware
+    from ..api.sweep import shared_engine
     from ..configs import get_config
 
+    if engine is None:
+        engine = shared_engine(workers=workers,
+                               return_timelines=collect_timeline,
+                               trace_resources=collect_timeline)
     arch = get_config(arch) if isinstance(arch, str) else arch
     hw = resolve_hardware(hardware)
     n = hw.num_devices

@@ -1,0 +1,322 @@
+"""Batched analytic tier (repro.core.fastbatch) + sweep integration:
+grouped vectorized replay must be bit-identical to the scalar fast tier
+and the event kernel per job, fall back per job where validation
+rejects, rank deterministically across executors, and keep the shared
+persistent engine registry coherent."""
+
+import random
+
+import pytest
+
+from repro.api import (
+    Experiment,
+    RunReport,
+    SearchSpace,
+    SweepEngine,
+    SweepReport,
+    close_shared_engines,
+    run_rank_key,
+    shared_engine,
+)
+from repro.core import (
+    DRAMSpec,
+    HardwareSpec,
+    MeshSpec,
+    NoCMode,
+    ParallelPlan,
+    PipelineSimulator,
+    Schedule,
+    TileSpec,
+    classify_cached,
+    compile_stage_chains,
+    map_graph,
+    replay_chains,
+    run_fast_batch,
+    transformer_lm_graph,
+)
+from repro.core.fastbatch import available
+from repro.core.hardware import tiled_cluster
+
+from proptools import given
+
+GB = 1e9
+
+
+def _mesh_hw(n: int, flops: float = 4e12, dram_bw: float = 64 * GB,
+             tile_shape=(2, 2), ports=False) -> HardwareSpec:
+    spec = MeshSpec(rows=n, cols=n, intra_bw=64 * GB, inter_bw=16 * GB,
+                    link_latency=2e-8, tile_shape=tile_shape)
+    topo = spec.compile()
+    kw = {}
+    if ports:
+        kw["dram_ports"] = (topo.device(0, 0),)
+    return HardwareSpec(
+        name=f"mesh{n}-f{flops:.0e}-d{dram_bw:.0e}", topology=topo,
+        tile=TileSpec(flops=flops, sram_bytes=2e6),
+        dram=DRAMSpec(bandwidth=dram_bw, response_time=3e-7, channels=4),
+        **kw)
+
+
+def _graph(layers: int, rng=None):
+    return transformer_lm_graph("t", layers, 256, 4, 64, 1, vocab=512)
+
+
+def _sim(hw, graph, plan, mode, engine="auto"):
+    return PipelineSimulator(map_graph(graph, hw, plan), noc_mode=mode,
+                             engine=engine, collect_timeline=True)
+
+
+def _assert_identical(a, b, ctx, event_count=True):
+    assert a.total_time == b.total_time, ctx
+    assert a.throughput == b.throughput, ctx
+    assert a.bubble_ratio == b.bubble_ratio, ctx
+    assert a.noc_bytes == b.noc_bytes, ctx
+    assert a.dram_bytes == b.dram_bytes, ctx
+    if event_count:     # a per-tier diagnostic: chain nodes != heap events
+        assert a.event_count == b.event_count, ctx
+    assert a.trace.canonical() == b.trace.canonical(), ctx
+
+
+@given(n_cases=1, seed=13)
+def test_prop_batched_bit_identical_to_scalar_and_event(rng, case):
+    """One mixed batch of >= 20 random (hardware, plan, NoC-mode) combos:
+    every batched result must be bit-identical (scalars + canonical
+    trace) to the scalar fast tier AND the event kernel; every batched
+    fallback must agree with the scalar tier's fallback decision."""
+    combos = []
+    # hardware families sharing plan/graph structure — these land in the
+    # same chain-shape group (only the float leaves differ)
+    for pp, dp, tp, mb in ((1, 1, 1, 1), (2, 1, 1, 2), (4, 1, 1, 1),
+                           (2, 2, 1, 1)):
+        plan = ParallelPlan(pp=pp, dp=dp, tp=tp, microbatch=mb,
+                            global_batch=mb * dp * 4,
+                            recompute="never",
+                            training=bool(rng.random() < 0.7))
+        graph = _graph(2)
+        for flops in (2e12, 4e12, 8e12):
+            combos.append((_mesh_hw(4, flops=flops), graph, plan,
+                           NoCMode.ANALYTICAL))
+    # random singletons (mesh + tiled_cluster), mixed NoC modes
+    for _ in range(12):
+        if rng.random() < 0.25:
+            hw = tiled_cluster()
+            pp, dp, tp = [(1, 2, 2), (2, 1, 2), (2, 2, 2)][rng.integers(3)]
+        else:
+            n = int(rng.choice([4, 8]))
+            hw = _mesh_hw(n, tile_shape=(2, 2) if rng.random() < 0.5
+                          else (4, 4), ports=bool(rng.random() < 0.5))
+            pp, dp, tp = [(1, 1, 1), (2, 1, 1), (2, 1, 2), (2, 2, 1),
+                          (4, 1, 1), (1, 2, 2)][rng.integers(6)]
+        graph = _graph(int(rng.integers(1, 3)))
+        pp = min(pp, len(graph.ops))
+        mb = int(rng.choice([1, 2]))
+        plan = ParallelPlan(
+            pp=pp, dp=dp, tp=tp, microbatch=mb,
+            global_batch=mb * dp * int(rng.choice([2, 4])),
+            schedule=Schedule.ONE_F_ONE_B if rng.random() < 0.7
+            else Schedule.GPIPE,
+            recompute=str(rng.choice(["never", "always"])),
+            training=bool(rng.random() < 0.8))
+        mode = [NoCMode.ANALYTICAL, NoCMode.MACRO,
+                NoCMode.DETAILED][rng.integers(3)]
+        combos.append((hw, graph, plan, mode))
+    assert len(combos) >= 20
+
+    profile = {}
+    batched = run_fast_batch(
+        [_sim(hw, g, p, m) for hw, g, p, m in combos], profile=profile)
+
+    hits = 0
+    for (hw, graph, plan, mode), (res, reason) in zip(combos, batched):
+        ctx = (hw.name, plan.pp, plan.dp, plan.tp, str(mode))
+        scalar_sim = _sim(hw, graph, plan, mode)
+        if classify_cached(scalar_sim) is not None:
+            scalar, s_reason = None, "ineligible"
+        else:
+            scalar, s_reason = replay_chains(
+                scalar_sim, compile_stage_chains(scalar_sim))
+        assert (res is None) == (scalar is None), (ctx, reason, s_reason)
+        if res is None:
+            continue
+        hits += 1
+        _assert_identical(res, scalar, ctx)
+        assert res.trace == scalar.trace, ctx        # raw rows, pre-sort
+        event = _sim(hw, graph, plan, mode, engine="event").run()
+        _assert_identical(res, event, ctx, event_count=False)
+    assert hits >= 5, f"fast tier fired on only {hits} combos — vacuous"
+    if available():
+        # the hardware families must actually have been *grouped*
+        assert profile["batched_jobs"] >= 12
+        assert profile["groups"] < profile["batched_jobs"]
+        assert profile["jobs"] == len(combos)
+
+
+def _sweep_exp(engine="auto"):
+    return Experiment(
+        graph_builder=lambda p: transformer_lm_graph(
+            "t", 2, 128, 4, seq_len=64, batch=p.microbatch * p.dp,
+            vocab=256),
+        hardware=_mesh_hw(4),
+        search=SearchSpace(max_plans=2),
+        global_batch=8,
+        engine=engine)
+
+
+_MIXED_PLANS = [
+    ParallelPlan(pp=2, dp=1, tp=1, microbatch=2, global_batch=8),
+    ParallelPlan(pp=1, dp=1, tp=1, microbatch=1, global_batch=8),
+    # interleave=2 is classifier-ineligible: falls back to the event
+    # kernel mid-batch
+    ParallelPlan(pp=2, dp=1, tp=1, microbatch=1, global_batch=8,
+                 interleave=2),
+    ParallelPlan(pp=4, dp=1, tp=1, microbatch=1, global_batch=8),
+    ParallelPlan(pp=2, dp=2, tp=1, microbatch=1, global_batch=8),
+]
+
+
+def test_mixed_sweep_falls_back_mid_batch_and_matches():
+    """A sweep mixing fast-eligible and ineligible plans: the batched
+    engine's report equals the per-job engine's report exactly, and the
+    ranking + total_time match a pure event-tier sweep bit-for-bit."""
+    exp = _sweep_exp("auto")
+    batched = SweepEngine().sweep(exp, _MIXED_PLANS)
+    scalar = SweepEngine(batch_fastpath=False).sweep(exp, _MIXED_PLANS)
+    assert batched.runs == scalar.runs
+    assert [r.extra.get("engine") for r in batched.runs] == \
+           [r.extra.get("engine") for r in scalar.runs]
+    # the ineligible plan really took the event kernel, eligible ones the
+    # fast tier
+    by_plan = {(r.plan.pp, r.plan.interleave, r.plan.dp, r.plan.microbatch):
+               r.extra.get("engine") for r in batched.runs}
+    assert by_plan[(2, 2, 1, 1)] is None          # event (no attribution)
+    assert "fast" in by_plan.values()
+
+    event = SweepEngine().sweep(_sweep_exp("event"), _MIXED_PLANS)
+    key = lambda r: (r.hardware, r.plan)
+    assert [key(r) for r in batched.runs] == [key(r) for r in event.runs]
+    assert [r.total_time for r in batched.runs] == \
+           [r.total_time for r in event.runs]
+    assert [r.throughput for r in batched.runs] == \
+           [r.throughput for r in event.runs]
+
+
+def test_strict_fast_engine_still_raises_through_batch():
+    """engine="fast" on a classifier-ineligible plan must surface
+    FastPathIneligible from the batched path, exactly like the scalar
+    tier."""
+    from repro.core import FastPathIneligible
+    exp = _sweep_exp("fast")
+    bad = [ParallelPlan(pp=2, dp=1, tp=1, microbatch=1, global_batch=8,
+                        interleave=2)]
+    with pytest.raises(FastPathIneligible):
+        SweepEngine().sweep(exp, bad)
+
+
+def _run(throughput, plan, hw="hw"):
+    return RunReport(arch="a", hardware=hw, plan=plan,
+                     total_time=1.0, throughput=throughput,
+                     bubble_ratio=0.0, peak_memory_bytes=0.0,
+                     recompute=False, event_count=1, noc_bytes=0.0,
+                     dram_bytes=0.0)
+
+
+def test_rank_key_tie_break_is_arrival_order_independent():
+    """Equal-throughput runs sort by canonical (hardware, plan) identity,
+    not by arrival order — pinned so batched/scalar/pool rankings always
+    compare exactly."""
+    runs = [_run(2.0, ParallelPlan(pp=1, dp=1, tp=4, global_batch=4)),
+            _run(2.0, ParallelPlan(pp=1, dp=2, tp=2, global_batch=4)),
+            _run(2.0, ParallelPlan(pp=1, dp=1, tp=4, global_batch=4),
+                 hw="hw2"),
+            _run(3.0, ParallelPlan(pp=4, dp=1, tp=1, global_batch=4))]
+    expect = sorted(runs, key=run_rank_key)
+    assert expect[0].throughput == 3.0
+    for seed in range(5):
+        shuffled = list(runs)
+        random.Random(seed).shuffle(shuffled)
+        assert sorted(shuffled, key=run_rank_key) == expect
+    # tie block: hw before hw2; within hw, dp=1 before dp=2 (the JSON
+    # plan key sorts on "dp" before "tp")
+    tie = expect[1:]
+    assert [(r.hardware, r.plan.dp) for r in tie] == \
+           [("hw", 1), ("hw", 2), ("hw2", 1)]
+
+
+def test_classify_memo_is_hit_on_repeat_configs():
+    """classify_cached must key on (hardware, plan) identity and not
+    re-run the static classifier for repeats (fidelity rungs sharing a
+    truncated plan summary)."""
+    graph = _graph(1)
+    hw = _mesh_hw(4)
+    plan = ParallelPlan(pp=1, dp=1, tp=1, microbatch=1, global_batch=4)
+    memo = {}
+    assert classify_cached(_sim(hw, graph, plan, NoCMode.MACRO),
+                           memo) is None
+    assert len(memo) == 1
+    # poison the cached value: a second classify of the same config must
+    # return it untouched (i.e. the classifier did not run again)
+    memo[next(iter(memo))] = "sentinel"
+    assert classify_cached(_sim(hw, graph, plan, NoCMode.MACRO),
+                           memo) == "sentinel"
+    # a different plan misses
+    other = ParallelPlan(pp=2, dp=1, tp=1, microbatch=1, global_batch=4)
+    classify_cached(_sim(hw, graph, other, NoCMode.MACRO), memo)
+    assert len(memo) == 2
+
+
+def test_run_fast_batch_degrades_without_numpy(monkeypatch):
+    """With numpy absent run_fast_batch must degrade to the scalar fast
+    tier per job and return identical outcomes (CI bench-smoke runs the
+    whole sweep stack numpy-free)."""
+    import repro.core.fastbatch as fb
+    graph = _graph(2)
+    sims = [_sim(_mesh_hw(4, flops=f), graph,
+                 ParallelPlan(pp=2, dp=1, tp=1, microbatch=1,
+                              global_batch=4, recompute="never"),
+                 NoCMode.ANALYTICAL)
+            for f in (2e12, 4e12)]
+    with_np = fb.run_fast_batch(list(sims))
+    monkeypatch.setattr(fb, "_np", None)
+    assert not fb.available()
+    without_np = fb.run_fast_batch(list(sims))
+    for (a, ar), (b, br) in zip(with_np, without_np):
+        assert (a is None) == (b is None)
+        if a is not None:
+            _assert_identical(a, b, "numpy-free degradation")
+
+
+def test_sweep_profile_attached_and_round_trips():
+    exp = _sweep_exp("auto")
+    plans = _MIXED_PLANS[:3]
+    rep = SweepEngine(profile=True).sweep(exp, plans)
+    assert rep.profile is not None
+    assert rep.profile.get("jobs") == len(plans)
+    back = SweepReport.from_json(rep.to_json())
+    assert back.profile == rep.profile
+    # profiling off: no field, no JSON key — and reports compare equal to
+    # profiled ones (profile is excluded from equality)
+    plain = SweepEngine().sweep(exp, plans)
+    assert plain.profile is None
+    assert "profile" not in plain.to_dict()
+    assert plain.runs == rep.runs
+
+
+def test_shared_engine_registry_and_reuse():
+    close_shared_engines()
+    try:
+        a = shared_engine()
+        assert shared_engine() is a             # same flags -> same engine
+        assert a._persist                       # already entered
+        b = shared_engine(return_timelines=True)
+        assert b is not a
+        # planners route through the registry: a serial sweep on the
+        # shared engine keeps its memos warm without closing anything
+        exp = _sweep_exp("auto")
+        r1 = a.sweep(exp, _MIXED_PLANS[:2])
+        r2 = a.sweep(exp, _MIXED_PLANS[:2])
+        assert r1.runs == r2.runs
+        assert a._persist
+    finally:
+        close_shared_engines()
+    assert shared_engine() is not a             # registry was cleared
+    close_shared_engines()
