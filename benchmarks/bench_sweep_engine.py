@@ -51,6 +51,10 @@ GB = 1e9
 # criterion; measured ~6x)
 BATCHED_GATE_SPEEDUP = 5.0
 
+# gate threshold: metrics-on / metrics-off sweep wall-clock on the same
+# rig (the repro.obs acceptance criterion: bounded overhead when enabled)
+METRICS_OVERHEAD_GATE = 1.05
+
 
 def _sweep_exp(memory_cap=None, tiny=False) -> Experiment:
     return Experiment(
@@ -280,6 +284,51 @@ def _batched_gate(report: Report, tiny: bool) -> None:
                f"{speedup:.1f}x" + ("" if gate_ok else ";MISMATCH"))
 
 
+def _metrics_overhead_gate(report: Report, tiny: bool) -> None:
+    """repro.obs acceptance gate: ``metrics=True`` on the 16x16-mesh
+    co-design sweep costs <= 5% sweep wall-clock over metrics-off, while
+    leaving the ranking bit-identical and attaching the metrics document
+    to the report and every run. Interleaved min-of-two timing keeps the
+    tight ratio gate robust against scheduler noise."""
+    from repro.api.sweep import SweepEngine
+
+    flops = tuple(f * 1e12 for f in (2, 3, 4, 6, 8, 12, 16, 24))
+    drams = tuple(d * GB for d in (32, 64, 128, 256))
+    exp_off = _batched_exp(tiny, "auto", flops, drams)
+    exp_on = exp_off.with_(metrics=True)
+
+    t_off, t_on = float("inf"), float("inf")
+    off = on = None
+    for _ in range(2):
+        t0 = time.perf_counter()
+        off = exp_off.sweep(workers=0, engine=SweepEngine(workers=0))
+        t_off = min(t_off, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        on = exp_on.sweep(workers=0, engine=SweepEngine(workers=0))
+        t_on = min(t_on, time.perf_counter() - t0)
+
+    key = lambda r: (r.hardware, r.plan, r.total_time, r.throughput)
+    parity = [key(r) for r in off.runs] == [key(r) for r in on.runs]
+    # the no-op registry adds nothing; the live one lands on every report
+    clean_off = off.metrics is None and all(r.metrics is None
+                                           for r in off.runs)
+    attached = (on.metrics is not None
+                and all(r.metrics is not None for r in on.runs))
+    ratio = t_on / t_off if t_off > 0 else float("inf")
+    gate_ok = (parity and clean_off and attached
+               and ratio <= METRICS_OVERHEAD_GATE)
+
+    report.log("== repro.obs overhead gate: metrics-on vs metrics-off "
+               "sweep, 16x16 mesh ==")
+    report.log(f"{len(on.runs)} jobs; off {t_off:.2f}s vs on {t_on:.2f}s "
+               f"({ratio:.3f}x, gate <= {METRICS_OVERHEAD_GATE:.2f}x); "
+               f"ranking parity: {parity}; metrics attached: {attached}; "
+               f"off-run clean: {clean_off}")
+    report.add("metrics_off_sweep_us", t_off * 1e6, f"{len(off.runs)}_jobs")
+    report.add("metrics_sweep_us", t_on * 1e6,
+               f"overhead_{ratio:.3f}x" + ("" if gate_ok else ";MISMATCH"))
+
+
 def run(report: Report, tiny: bool = False) -> None:
     exp = _sweep_exp(tiny=tiny)
 
@@ -342,6 +391,10 @@ def run(report: Report, tiny: bool = False) -> None:
     # batched fast tier vs per-job fast tier (skipped without numpy)
     report.log("")
     _batched_gate(report, tiny)
+
+    # repro.obs: metrics-enabled sweep overhead must stay bounded
+    report.log("")
+    _metrics_overhead_gate(report, tiny)
 
 
 def main(argv=None) -> int:

@@ -122,9 +122,15 @@ def render_markdown(table: Table, columns: List[str],
                 if vals[i] is not None:
                     rendered[i] += f" ({newest[1]})"
                     break
+        trend = _trend(vals, regression_pct)
+        # self-gated rows (batched-tier parity, the repro.obs overhead
+        # gate, roofline cross-check) carry ";MISMATCH" in derived when
+        # the bench-side gate failed — surface that as loudly as a trend
+        # regression
+        if newest is not None and "MISMATCH" in newest[1]:
+            trend = (trend + " GATE-FAIL").strip()
         lines.append("| " + " | ".join(
-            [suite, metric, *rendered,
-             _trend(vals, regression_pct)]) + " |")
+            [suite, metric, *rendered, trend]) + " |")
     return "\n".join(lines) + "\n"
 
 
@@ -140,7 +146,8 @@ def render_html(markdown: str) -> str:
         tag = "th" if i == 0 else "td"
         tds = "".join(
             f"<{tag} class='r'>{html.escape(c)}</{tag}>"
-            if "REGRESSED" in c else f"<{tag}>{html.escape(c)}</{tag}>"
+            if ("REGRESSED" in c or "GATE-FAIL" in c)
+            else f"<{tag}>{html.escape(c)}</{tag}>"
             for c in cells)
         body.append(f"<tr>{tds}</tr>")
     return ("<!doctype html><meta charset='utf-8'>"

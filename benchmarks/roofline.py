@@ -1,5 +1,7 @@
 """Roofline analysis (deliverable g): read dry-run artifacts and emit the
-per-(arch x shape x mesh) three-term roofline table.
+per-(arch x shape x mesh) three-term roofline table, preceded by the
+sim-domain roofline the repro.obs registry records (one source of truth
+with ``python -m repro metrics`` and the dashboard).
 
 Terms (TPU v5e per chip): compute = FLOPs / 197 TF/s; memory =
 bytes / 819 GB/s; collective = collective-bytes / (3 links x 50 GB/s).
@@ -48,8 +50,44 @@ def terms(rec):
             "roofline_fraction": frac}
 
 
+def sim_roofline(report: Report):
+    """Sim-domain roofline from the repro.obs registry: the
+    ``stages.roofline_utilization`` series the scheduler records with
+    ``metrics=True`` — the same numbers ``python -m repro metrics``
+    prints and the dashboard rolls up, so the roofline table and the
+    simulator share one source of truth. Cross-checked in-place against
+    an independent recomputation from the same document (flops /
+    (total_time x tile peak)); tests/test_obs.py pins the identity."""
+    from repro.api import Experiment, ParallelPlan, resolve_hardware
+
+    hw = resolve_hardware("tpu_v5e_2x2")
+    run_rep = Experiment(
+        arch="yi-6b", hardware=hw, seq_len=128,
+        plan=ParallelPlan(pp=2, dp=1, tp=2, microbatch=1, global_batch=8),
+        global_batch=8, metrics=True).run()
+    sim = run_rep.metrics["sim"]
+    util = sim["stages"]["roofline_utilization"]
+    flops = sim["stages"]["flops"]
+    denom = sim["total_time"] * hw.tile.flops
+    ok = denom > 0 and all(
+        abs(u - f / denom) <= 1e-9 * max(1.0, abs(u))
+        for u, f in zip(util, flops))
+
+    report.log("")
+    report.log("== Sim-domain roofline (repro.obs, metrics=True) ==")
+    report.log(f"{'stage':>5s} {'flops':>16s} {'roofline%':>10s} "
+               f"{'busy%':>7s}")
+    busy = sim["stages"]["busy_fraction"]
+    for s, (f, u, b) in enumerate(zip(flops, util, busy)):
+        report.log(f"{s:>5d} {f:>16.4g} {100 * u:>9.2f}% {100 * b:>6.1f}%")
+    report.add("roofline_sim_utilization", 0.0,
+               f"max_{max(util):.4f}" + ("" if ok else ";MISMATCH"))
+
+
 def run(report: Report):
     cells = load_cells()
+    sim_roofline(report)
+    report.log("")
     report.log("== Roofline terms per (arch x shape x mesh) — seconds/step "
                "per chip ==")
     report.log(f"{'arch':22s} {'shape':12s} {'mesh':7s} {'compute':>9s} "

@@ -14,6 +14,8 @@
     python -m repro hardware --hardware wafer_scale > wafer.json
     python -m repro simulate --arch yi-6b --hardware-json wafer.json ...
     python -m repro trace-diff base.npz variant.npz
+    python -m repro sweep --arch yi-6b ... --metrics --json sweep.json
+    python -m repro metrics sweep.json
 
 Every enum-valued flag takes the typed values (``--schedule 1f1b``,
 ``--noc-mode macro``); hardware is a preset name, an ``a100x<N>`` /
@@ -257,6 +259,43 @@ def _emit(report, json_target: Optional[Path]) -> None:
         print(f"[report written to {json_target}]")
 
 
+def _add_metrics_flags(ap: argparse.ArgumentParser) -> None:
+    ap.add_argument("--metrics", action="store_true",
+                    help="record the repro.obs metrics registry (sim-domain "
+                         "roofline/bubble/traffic plus host-domain tier and "
+                         "timing counters) and print its summary; rides in "
+                         "--json reports under 'metrics' "
+                         "(see docs/observability.md)")
+    ap.add_argument("--metrics-out", type=Path, default=None, metavar="FILE",
+                    help="write the metrics document JSON here ('-' for "
+                         "stdout; implies --metrics)")
+
+
+def _want_metrics(args) -> bool:
+    return bool(getattr(args, "metrics", False)
+                or getattr(args, "metrics_out", None) is not None)
+
+
+def _emit_metrics(report, args) -> None:
+    if not _want_metrics(args):
+        return
+    metrics = getattr(report, "metrics", None)
+    if metrics is None:
+        return                          # e.g. a sweep with zero runs
+    out = getattr(args, "metrics_out", None)
+    if out is not None:
+        text = json.dumps(metrics, indent=2)
+        if str(out) == "-":
+            print(text)
+        else:
+            out.write_text(text + "\n")
+            print(f"[metrics written to {out}]")
+    else:
+        from ..obs.registry import summarize_metrics
+        print(summarize_metrics(
+            metrics, title=f"{report.arch} on {report.hardware}"))
+
+
 def _cmd_simulate(args) -> int:
     plan = ParallelPlan(pp=args.pp, dp=args.dp, tp=args.tp,
                         microbatch=args.microbatch,
@@ -276,11 +315,13 @@ def _cmd_simulate(args) -> int:
                      training=not args.inference, noc_mode=args.noc_mode,
                      boundary_mode=args.boundary_mode,
                      collect_timeline=want_trace,
-                     engine=args.engine)
+                     engine=args.engine,
+                     metrics=_want_metrics(args))
     report = exp.run()
     print(f"{report.arch} on {report.hardware}: {report.summary()}")
     if want_trace:
         _emit_trace(report, args)
+    _emit_metrics(report, args)
     _emit(report, args.json)
     return 0
 
@@ -291,7 +332,12 @@ def _emit_trace(report, args) -> None:
     if trace is None:       # defensive: collect_timeline was on
         raise ValueError("simulation produced no trace")
     if args.trace_out is not None:
-        doc = chrome_trace(trace, label=f"{report.arch}@{report.hardware}")
+        from ..obs.tracks import activity_counters, metrics_counters
+        counters = activity_counters(trace)
+        counters.update(metrics_counters(getattr(report, "metrics", None),
+                                         trace.total_time))
+        doc = chrome_trace(trace, label=f"{report.arch}@{report.hardware}",
+                           counters=counters)
         text = json.dumps(doc)
         if str(args.trace_out) == "-":
             print(text)
@@ -322,14 +368,14 @@ def _make_sweep_experiment(args) -> Experiment:
                       training=not args.inference, noc_mode=args.noc_mode,
                       boundary_mode=args.boundary_mode,
                       memory_cap=args.memory_cap,
-                      engine=getattr(args, "engine", "event"))
+                      engine=getattr(args, "engine", "event"),
+                      metrics=_want_metrics(args))
 
 
 def _sweep_call_kwargs(args) -> dict:
     kw = {"workers": None if args.workers < 0 else args.workers,
           "profile": getattr(args, "profile", False)}
     if args.search != "exhaustive":
-        kw.pop("profile", None)     # per-phase accounting is exhaustive-only
         kw.update(strategy=args.search, search_budget=args.search_budget,
                   seed=args.seed or 0)
     elif args.search_budget is not None or args.seed is not None:
@@ -368,6 +414,14 @@ def _print_profile(report) -> None:
           f"{prof.get('batched_jobs', 0)} batched job(s); "
           f"{prof.get('scalar_jobs', 0)} scalar, "
           f"{prof.get('ineligible_jobs', 0)} ineligible")
+    gens = prof.get("generations")
+    if gens:                            # guided search: one row per rung
+        print(f"  {'rung':>10s} {'jobs':>6s} {'batched':>8s} "
+              f"{'eval (ms)':>10s}")
+        for i, g in enumerate(gens):
+            print(f"  {i:>10d} {g.get('jobs', 0):>6d} "
+                  f"{g.get('batched_jobs', 0):>8d} "
+                  f"{g.get('eval_us', 0) / 1e3:>10.2f}")
 
 
 def _cmd_sweep(args) -> int:
@@ -382,6 +436,7 @@ def _cmd_sweep(args) -> int:
     _print_search_note(report)
     print(report.table(top=args.top))
     _print_profile(report)
+    _emit_metrics(report, args)
     _emit(report, args.json)
     return 0 if report.runs else 1
 
@@ -402,6 +457,8 @@ def _cmd_plan(args) -> int:
           f"schedule={p.schedule} layout={p.layout}")
     print(f"  -> {best.throughput:.3f} samples/s, bubble {best.bubble_ratio:.1%}, "
           f"peak memory {best.peak_memory_bytes / 1e9:.2f} GB/tile")
+    _print_profile(report)
+    _emit_metrics(report, args)
     if args.codesign_json is not None:
         spec_dict = report.best_hardware_dict()
         if spec_dict is None:
@@ -453,7 +510,8 @@ def _cmd_serve_sim(args) -> int:
     report = simulate_serving(args.arch, _resolve_hardware_args(args), plan,
                               spec, noc_mode=args.noc_mode,
                               boundary_mode=args.boundary_mode,
-                              collect_trace=want_trace)
+                              collect_trace=want_trace,
+                              metrics=_want_metrics(args))
     print(report.summary())
     if args.workload_out is not None:
         args.workload_out.write_text(
@@ -463,7 +521,9 @@ def _cmd_serve_sim(args) -> int:
         trace = report.trace
         if args.trace_out is not None:
             from ..core.trace import chrome_trace
-            doc = chrome_trace(trace, label=f"{report.arch}@{report.hardware}")
+            from ..obs.tracks import serving_counters
+            doc = chrome_trace(trace, label=f"{report.arch}@{report.hardware}",
+                               counters=serving_counters(report))
             text = json.dumps(doc)
             if str(args.trace_out) == "-":
                 print(text)
@@ -474,6 +534,7 @@ def _cmd_serve_sim(args) -> int:
         if args.trace_npz is not None:
             trace.to_npz(args.trace_npz)
             print(f"[columnar trace written to {args.trace_npz}]")
+    _emit_metrics(report, args)
     _emit(report, args.json)
     return 0
 
@@ -532,6 +593,53 @@ def _cmd_trace_diff(args) -> int:
     return 0
 
 
+def _cmd_metrics(args) -> int:
+    """Summarize the repro.obs metrics document embedded in a report JSON
+    (``simulate/sweep/plan/serve-sim --json`` run with ``--metrics``), a
+    bare metrics document (``--metrics-out``), or — with ``--runs`` — the
+    per-run metrics inside a SweepReport."""
+    from ..obs.registry import summarize_metrics
+    doc = json.loads(args.report.read_text())
+    if "metrics" in doc or "runs" in doc:       # a report document
+        metrics = doc.get("metrics")
+        title = f"{doc.get('arch', '?')} on {doc.get('hardware', '?')}"
+    elif "sim" in doc or "host" in doc:         # a bare metrics document
+        metrics, title = doc, str(args.report)
+    else:
+        metrics, title = None, None
+    if args.runs:
+        shown = 0
+        for run in doc.get("runs", []):
+            m = run.get("metrics")
+            if m is None:
+                continue
+            plan = run.get("plan", {})
+            label = (f"pp={plan.get('pp')} dp={plan.get('dp')} "
+                     f"tp={plan.get('tp')} mb={plan.get('microbatch')} "
+                     f"on {run.get('hardware', '?')}")
+            print(summarize_metrics(m, title=label))
+            shown += 1
+        if not shown:
+            print("error: no per-run metrics in this report; re-run the "
+                  "sweep with --metrics", file=sys.stderr)
+            return 1
+        return 0
+    if metrics is None:
+        print(f"error: {args.report} carries no metrics document; re-run "
+              "with --metrics (or --metrics-out)", file=sys.stderr)
+        return 1
+    if args.json is not None:
+        text = json.dumps(metrics, indent=2)
+        if str(args.json) == "-":
+            print(text)
+        else:
+            args.json.write_text(text + "\n")
+            print(f"[metrics written to {args.json}]")
+        return 0
+    print(summarize_metrics(metrics, title=title))
+    return 0
+
+
 def _cmd_hardware(args) -> int:
     """Dump a resolved HardwareSpec as JSON (the --hardware-json schema)."""
     hw = _resolve_hardware_args(args)
@@ -574,16 +682,19 @@ def main(argv: Optional[List[str]] = None) -> int:
     sim = sub.add_parser("simulate", help="simulate one fixed parallel plan")
     _add_common(sim)
     _add_plan_flags(sim)
+    _add_metrics_flags(sim)
     sim.set_defaults(fn=_cmd_simulate)
 
     swp = sub.add_parser("sweep", help="rank a (hardware x) parallelism search space")
     _add_common(swp)
     _add_sweep_flags(swp)
+    _add_metrics_flags(swp)
     swp.set_defaults(fn=_cmd_sweep)
 
     pln = sub.add_parser("plan", help="print the best plan for an arch/hardware")
     _add_common(pln)
     _add_sweep_flags(pln)
+    _add_metrics_flags(pln)
     pln.add_argument("--best-only", action="store_true",
                      help="with --json, write only the best RunReport")
     pln.add_argument("--codesign-json", type=Path, default=None, metavar="FILE",
@@ -651,6 +762,7 @@ def main(argv: Optional[List[str]] = None) -> int:
                      help="write the columnar trace as .npz (needs numpy)")
     ssv.add_argument("--json", type=Path, default=None, metavar="FILE",
                      help="write the ServingReport JSON here ('-' for stdout)")
+    _add_metrics_flags(ssv)
     ssv.set_defaults(fn=_cmd_serve_sim)
 
     spl = sub.add_parser(
@@ -684,6 +796,21 @@ def main(argv: Optional[List[str]] = None) -> int:
     tdf.add_argument("--json", type=Path, default=None, metavar="FILE",
                      help="write the full diff JSON here ('-' for stdout)")
     tdf.set_defaults(fn=_cmd_trace_diff)
+
+    mtr = sub.add_parser(
+        "metrics",
+        help="summarize the repro.obs metrics inside a report JSON "
+             "(produced by --metrics / --metrics-out)")
+    mtr.add_argument("report", type=Path,
+                     help="RunReport/SweepReport/ServingReport JSON, or a "
+                          "bare metrics document")
+    mtr.add_argument("--runs", action="store_true",
+                     help="summarize each run's metrics inside a "
+                          "SweepReport instead of the sweep roll-up")
+    mtr.add_argument("--json", type=Path, default=None, metavar="FILE",
+                     help="re-emit the metrics document as JSON ('-' for "
+                          "stdout) instead of the text summary")
+    mtr.set_defaults(fn=_cmd_metrics)
 
     hwc = sub.add_parser(
         "hardware",

@@ -464,6 +464,11 @@ class Experiment:
     # the run is contention-free, "fast" demands it (raises otherwise).
     # A multi-fidelity rung's own ``engine`` overrides this per rung.
     engine: str = "event"
+    # record repro.obs metrics: sim-domain documents attach to every
+    # RunReport (and a job-order aggregate + merged host registry to
+    # SweepReport.metrics). Off by default — the disabled path is the
+    # no-op registry and adds zero rows and zero overhead.
+    metrics: bool = False
 
     def __post_init__(self):
         self.noc_mode = NoCMode(self.noc_mode)
@@ -578,14 +583,16 @@ class Experiment:
         results, whole chain-shape groups per numpy pass.
         ``profile=True`` attaches its per-phase accounting
         (compile/batch-eval/validate/fallback) to
-        ``SweepReport.profile`` for exhaustive sweeps."""
+        ``SweepReport.profile`` — for guided search the totals span every
+        generation and a ``generations`` sub-list carries the per-rung
+        deltas."""
         return_timelines = return_timelines or self.collect_timeline
         if strategy not in (None, "exhaustive"):
             from ..search import run_search     # search builds on api
             return run_search(self, strategy=strategy, budget=search_budget,
                               seed=seed or 0, workers=workers,
                               return_timelines=return_timelines,
-                              engine=engine)
+                              engine=engine, profile=profile)
         if search_budget is not None or seed is not None:
             # never let a "capped" sweep silently run the whole product
             raise ValueError("search_budget/seed only apply to guided "

@@ -96,6 +96,12 @@ class RunReport:
     # the columnar event timeline (same object the sim holds); shipped
     # across the process pool in compressed columnar form
     trace: Optional[Trace] = field(default=None, compare=False, repr=False)
+    # repro.obs metrics document ({"sim": ..., "host": ...}) when the run
+    # recorded metrics; the sim half is deterministic, the host half is
+    # not, so the field stays out of equality (JSON keeps it — it is
+    # plain data and what `python -m repro metrics` reads back)
+    metrics: Optional[Dict[str, Any]] = field(default=None, compare=False,
+                                              repr=False)
 
     @classmethod
     def from_sim(cls, arch: str, hardware: str, plan: ParallelPlan,
@@ -121,6 +127,7 @@ class RunReport:
             extra=dict(extra),
             sim=result if keep_sim else None,
             trace=result.trace if keep_sim else None,
+            metrics=getattr(result, "metrics", None),
         )
 
     def trace_summary(self) -> Optional[Dict[str, Any]]:
@@ -139,6 +146,8 @@ class RunReport:
         d["plan"] = plan_to_dict(self.plan)
         d.pop("sim", None)
         d.pop("trace", None)
+        if d.get("metrics") is None:
+            d.pop("metrics", None)
         if include_trace and self.trace is not None:
             d["trace"] = self.trace.to_dict()
         return d
@@ -196,6 +205,11 @@ class SweepReport:
     # counters) when the sweep ran with profiling on; timings vary run to
     # run, so the field is excluded from equality
     profile: Optional[Dict[str, Any]] = field(default=None, compare=False)
+    # repro.obs metrics document ({"sim": ..., "host": ...}): the sim half
+    # aggregates compare=True run scalars in job order (bit-identical
+    # across engine tiers and executors); the host half is the merged
+    # registry of the parent process and every pool shard
+    metrics: Optional[Dict[str, Any]] = field(default=None, compare=False)
 
     @property
     def best(self) -> Optional[RunReport]:
@@ -219,6 +233,8 @@ class SweepReport:
             d.pop("search", None)
         if self.profile is None:
             d.pop("profile", None)
+        if self.metrics is None:
+            d.pop("metrics", None)
         return d
 
     def to_json(self, **kw: Any) -> str:

@@ -62,9 +62,11 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from ..core.enums import NoCMode
 from ..core.fastbatch import run_fast_batch
+from ..core.fastpath import reason_code
 from ..core.hardware import HardwareSpec
 from ..core.parallelism import ParallelPlan, map_graph
 from ..core.scheduler import PipelineSimulator, plan_memory
+from ..obs.registry import NULL_REGISTRY, make_registry
 from ..core.trace import (
     KIND_BD,
     KIND_CODES,
@@ -160,7 +162,8 @@ def _prepare(exp, plan: ParallelPlan, graph_cache: Dict, hw: HardwareSpec,
              trace_resources: bool = False,
              fidelity=None,
              trace_lanes: Optional[Tuple[int, ...]] = None,
-             trace_budget_bytes: Optional[int] = None):
+             trace_budget_bytes: Optional[int] = None,
+             registry=NULL_REGISTRY):
     """First half of one (hardware, plan) evaluation: resolve fidelity,
     build the (memoized) graph, map, prune on memory — and either settle
     the outcome without a pipeline run or hand back a constructed, unrun
@@ -209,8 +212,11 @@ def _prepare(exp, plan: ParallelPlan, graph_cache: Dict, hw: HardwareSpec,
             key = plan.microbatch * plan.dp
             graph = graph_cache.get(key)
             if graph is None:
+                registry.counter("host.sweep.graph_memo.misses").inc()
                 graph = exp.build_graph(plan)
                 graph_cache[key] = graph
+            else:
+                registry.counter("host.sweep.graph_memo.hits").inc()
         else:
             graph = exp.build_graph(plan)   # builder may depend on full plan
         mapped = map_graph(graph, hw, plan)
@@ -231,7 +237,8 @@ def _prepare(exp, plan: ParallelPlan, graph_cache: Dict, hw: HardwareSpec,
             ssim = ServingSimulator(
                 exp.arch_config, hw, plan, serving, noc_mode=noc_mode,
                 boundary_mode=exp.boundary_mode,
-                collect_trace=return_timelines or trace_resources)
+                collect_trace=return_timelines or trace_resources,
+                metrics=bool(getattr(exp, "metrics", False)))
             srep = ssim.run()
             report = RunReport(
                 arch=exp.arch_name, hardware=hw.name, plan=plan,
@@ -243,7 +250,8 @@ def _prepare(exp, plan: ParallelPlan, graph_cache: Dict, hw: HardwareSpec,
                 event_count=srep.steps.get("events", 0),
                 noc_bytes=0.0, dram_bytes=0.0,
                 extra={"serving": srep.to_dict()},
-                trace=srep.trace if return_timelines else None)
+                trace=srep.trace if return_timelines else None,
+                metrics=getattr(srep, "metrics", None))
             if return_timelines:
                 report = _apply_trace_policy(report, trace_lanes,
                                              trace_budget_bytes)
@@ -255,7 +263,8 @@ def _prepare(exp, plan: ParallelPlan, graph_cache: Dict, hw: HardwareSpec,
                                 boundary_mode=exp.boundary_mode,
                                 memory_plan=mem_plan,
                                 collect_timeline=trace_resources,
-                                engine=engine)
+                                engine=engine,
+                                metrics=bool(getattr(exp, "metrics", False)))
     except (ValueError, KeyError, TypeError) as e:
         return ("done", (_FAILED, f"{type(e).__name__}: {e}"))
     return ("sim", (sim, plan, engine))
@@ -323,7 +332,8 @@ def _evaluate_many(exp, specs: Sequence[HardwareSpec], jobs: Sequence,
                    trace_budget_bytes: Optional[int] = None,
                    batch_fastpath: bool = True,
                    classify_memo: Optional[Dict] = None,
-                   profile: Optional[Dict] = None) -> List[Tuple[str, object]]:
+                   profile: Optional[Dict] = None,
+                   registry=NULL_REGISTRY) -> List[Tuple[str, object]]:
     """Evaluate a job stream with the batched fast tier.
 
     Every job is prepared (graph/map/prune) in enumeration order; jobs
@@ -346,7 +356,8 @@ def _evaluate_many(exp, specs: Sequence[HardwareSpec], jobs: Sequence,
                                  trace_resources=trace_resources,
                                  fidelity=fidelity,
                                  trace_lanes=trace_lanes,
-                                 trace_budget_bytes=trace_budget_bytes)
+                                 trace_budget_bytes=trace_budget_bytes,
+                                 registry=registry)
         if kind == "done":
             outcomes[i] = payload
             continue
@@ -357,6 +368,10 @@ def _evaluate_many(exp, specs: Sequence[HardwareSpec], jobs: Sequence,
             outcomes[i] = _run_and_finish(exp, plan, hw, sim,
                                           return_timelines, trace_lanes,
                                           trace_budget_bytes)
+            reason = getattr(sim, "fastpath_reason", None)
+            if reason is not None:
+                registry.counter(
+                    "host.fastpath.reject." + reason_code(reason)).inc()
     if batch:
         try:
             results = run_fast_batch([sim for _, sim, _, _ in batch],
@@ -369,18 +384,41 @@ def _evaluate_many(exp, specs: Sequence[HardwareSpec], jobs: Sequence,
             results = [(None, "batch compilation failed")] * len(batch)
         for (i, sim, plan, hw), (result, _reason) in zip(batch, results):
             if result is not None:
+                if sim.metrics:
+                    # the batched tier bypasses sim.run(), so attach the
+                    # metrics document here (same derivation either way)
+                    from ..obs.simmetrics import run_metrics
+                    result.metrics = run_metrics(sim, result)
                 outcomes[i] = _finish(exp, plan, hw, result,
                                       return_timelines, trace_lanes,
                                       trace_budget_bytes)
                 continue
+            # per-job retry: its own fast attempt re-derives the rejection
+            # reason (or succeeds, e.g. after a batch compilation failure),
+            # so the machine-readable cause reflects the final outcome
             t0 = perf_counter()
             outcomes[i] = _run_and_finish(exp, plan, hw, sim,
                                           return_timelines, trace_lanes,
                                           trace_budget_bytes)
+            reason = getattr(sim, "fastpath_reason", None)
+            if reason is not None:
+                registry.counter(
+                    "host.fastpath.reject." + reason_code(reason)).inc()
             if profile is not None:
                 profile["fallback_us"] = (profile.get("fallback_us", 0)
                                           + int((perf_counter() - t0) * 1e6))
                 profile["fallback_jobs"] = profile.get("fallback_jobs", 0) + 1
+    if registry:
+        registry.counter("host.sweep.jobs").inc(len(jobs))
+        for outcome in outcomes:
+            tag, payload = outcome
+            if tag == _OK:
+                registry.counter("host.sweep.engine."
+                                 + payload.extra.get("engine", "event")).inc()
+            elif tag == _PRUNED:
+                registry.counter("host.sweep.pruned").inc()
+            else:
+                registry.counter("host.sweep.failed").inc()
     return outcomes
 
 
@@ -392,7 +430,8 @@ def run_one(exp, plan: ParallelPlan) -> RunReport:
     sim = PipelineSimulator(mapped, noc_mode=exp.noc_mode,
                             boundary_mode=exp.boundary_mode,
                             collect_timeline=exp.collect_timeline,
-                            engine=getattr(exp, "engine", "event"))
+                            engine=getattr(exp, "engine", "event"),
+                            metrics=bool(getattr(exp, "metrics", False)))
     return RunReport.from_sim(exp.arch_name, hw.name, plan, sim.run(),
                               keep_sim=exp.collect_timeline)
 
@@ -440,20 +479,25 @@ def _init_worker(exp_bytes: bytes, specs_bytes: bytes,
     _WORKER["batch_fastpath"] = batch_fastpath
 
 
-def _eval_shard_in_worker(shard) -> Tuple[List[Tuple[str, object]], Dict]:
+def _eval_shard_in_worker(shard) -> Tuple[List[Tuple[str, object]], Dict, Dict]:
     """Evaluate one contiguous job shard in a pool worker; returns the
-    shard's outcomes plus its fast-tier profile delta for merging."""
+    shard's outcomes plus its fast-tier profile delta and host-metrics
+    registry document for merging in the parent."""
+    exp = _WORKER["exp"]
     profile: Dict = {}
-    outcomes = _evaluate_many(
-        _WORKER["exp"], _WORKER["specs"], shard, _WORKER["graphs"],
-        return_timelines=_WORKER["return_timelines"],
-        trace_resources=_WORKER["trace_resources"],
-        trace_lanes=_WORKER["trace_lanes"],
-        trace_budget_bytes=_WORKER["trace_budget_bytes"],
-        batch_fastpath=_WORKER["batch_fastpath"],
-        classify_memo=_WORKER["classify"],
-        profile=profile)
-    return outcomes, profile
+    registry = make_registry(bool(getattr(exp, "metrics", False)))
+    with registry.span("host.pool.shard"):
+        outcomes = _evaluate_many(
+            exp, _WORKER["specs"], shard, _WORKER["graphs"],
+            return_timelines=_WORKER["return_timelines"],
+            trace_resources=_WORKER["trace_resources"],
+            trace_lanes=_WORKER["trace_lanes"],
+            trace_budget_bytes=_WORKER["trace_budget_bytes"],
+            batch_fastpath=_WORKER["batch_fastpath"],
+            classify_memo=_WORKER["classify"],
+            profile=profile,
+            registry=registry)
+    return outcomes, profile, registry.to_dict()
 
 
 class SweepEngine:
@@ -511,6 +555,10 @@ class SweepEngine:
         # per-call delta lands on each SweepReport when profile=True
         self.profile_totals: Dict[str, int] = {}
         self.last_profile: Dict[str, int] = {}
+        # merged host-domain registry document of the last evaluate_jobs
+        # call (parent + every pool shard); None when the experiment did
+        # not enable metrics
+        self.last_metrics: Optional[Dict] = None
         self._persist = False
         self._pool: Optional[ProcessPoolExecutor] = None
         self._pool_key: Optional[Tuple[bytes, bytes]] = None
@@ -610,7 +658,19 @@ class SweepEngine:
             pruned_records=pruned_records,
             failed_records=failed_records,
             profile=dict(self.last_profile) if self.profile else None,
+            metrics=self._report_metrics(exp, outcomes),
         )
+
+    def _report_metrics(self, exp, outcomes) -> Optional[Dict]:
+        """SweepReport.metrics document: job-order sim-domain aggregate
+        (bit-identical across tiers/executors) + the call's merged host
+        registry. None when the experiment did not enable metrics."""
+        if not getattr(exp, "metrics", False):
+            return None
+        from ..obs.simmetrics import aggregate_run_metrics
+
+        return {"sim": aggregate_run_metrics(outcomes),
+                "host": self.last_metrics or {}}
 
     def evaluate_jobs(self, exp, specs: Sequence[HardwareSpec],
                       jobs: Sequence[Job]) -> Tuple[List[Tuple[str, object]], str]:
@@ -619,6 +679,8 @@ class SweepEngine:
         fidelity as a third element (multi-fidelity search rungs)."""
         jobs = list(jobs)
         call_profile: Dict[str, int] = {}
+        call_registry = make_registry(bool(getattr(exp, "metrics", False)))
+        t_call = perf_counter()
         try:
             # a 1-job batch is cheaper in-process — unless a persistent pool
             # exists (or will): search generations can shrink to one candidate
@@ -647,9 +709,14 @@ class SweepEngine:
                         parts = list(self._pool.map(
                             _eval_shard_in_worker,
                             _shards(jobs, self.workers)))
-                        for _, prof in parts:
+                        for _, prof, mdoc in parts:
                             _merge_profile(call_profile, prof)
-                        return ([o for out, _ in parts for o in out],
+                            call_registry.merge_dict(mdoc)
+                        call_registry.counter("host.pool.shards").inc(
+                            len(parts))
+                        call_registry.gauge("host.pool.workers").set(
+                            self.workers)
+                        return ([o for out, _, _ in parts for o in out],
                                 f"process[{self.workers}]")
                     n = min(self.workers, len(jobs))
                     self.pool_inits += 1
@@ -659,9 +726,12 @@ class SweepEngine:
                             initargs=initargs) as pool:
                         parts = list(pool.map(_eval_shard_in_worker,
                                               _shards(jobs, n)))
-                    for _, prof in parts:
+                    for _, prof, mdoc in parts:
                         _merge_profile(call_profile, prof)
-                    return ([o for out, _ in parts for o in out],
+                        call_registry.merge_dict(mdoc)
+                    call_registry.counter("host.pool.shards").inc(len(parts))
+                    call_registry.gauge("host.pool.workers").set(n)
+                    return ([o for out, _, _ in parts for o in out],
                             f"process[{n}]")
             graphs, classify = self._serial_memo(exp)
             outcomes = _evaluate_many(
@@ -672,11 +742,23 @@ class SweepEngine:
                 trace_budget_bytes=self.trace_budget_bytes,
                 batch_fastpath=self.batch_fastpath,
                 classify_memo=classify,
-                profile=call_profile)
+                profile=call_profile,
+                registry=call_registry)
             return outcomes, "serial"
         finally:
             self.last_profile = call_profile
             _merge_profile(self.profile_totals, call_profile)
+            if call_registry:
+                # satellite of the obs layer: the fast-tier phase profile
+                # is itself a set of host counters
+                for k, v in call_profile.items():
+                    call_registry.counter("host.fastbatch." + k).inc(v)
+                call_registry.counter("host.sweep.evaluate.us").inc(
+                    (perf_counter() - t_call) * 1e6)
+                call_registry.counter("host.sweep.evaluate.calls").inc()
+                self.last_metrics = call_registry.to_dict()
+            else:
+                self.last_metrics = None
 
 
 # -- module-level engine reuse ----------------------------------------------

@@ -653,6 +653,14 @@ def run_fast_batch(sims, *, min_group: int = 2,
             _padd(profile, "ineligible_jobs", 1)
             continue
         chains = compile_stage_chains(sim)
+        if getattr(sim.noc, "metrics_levels", False):
+            # per-level payload metadata rides as extra chain-node fields
+            # the group skeletonizer does not model — the scalar replay
+            # preserves it, so fabric jobs with metrics enabled skip
+            # signature grouping
+            out[i] = replay_chains(sim, chains)
+            _padd(profile, "scalar_jobs", 1)
+            continue
         sig, leaves = _signature(sim, chains)
         per[i] = (chains, leaves)
         groups.setdefault(sig, []).append(i)

@@ -67,11 +67,35 @@ from .trace import (
 
 __all__ = ["FastPathIneligible", "classify", "classify_cached",
            "compile_stage_chains", "replay_chains", "try_fast_run",
-           "StageChains"]
+           "StageChains", "reason_code"]
 
 
 class FastPathIneligible(Exception):
     """The mapped graph (or its observed traffic) needs the event tier."""
+
+
+# machine-readable codes for the prose rejection reasons this module and
+# fastbatch produce (substring-matched so wording can carry detail);
+# surfaced in RunReport.metrics["host"]["fastpath_rejection"] and as
+# host.fastpath.reject.<code> sweep counters
+_REASON_CODES = (
+    ("interleaved virtual stages", "interleave"),
+    ("group-to-group boundary", "strategy_boundary"),
+    ("resource contention", "contention"),
+    ("replay stalled", "stalled"),
+    ("non-finite inference throughput", "nonfinite_throughput"),
+    ("batch compilation failed", "batch_compile"),
+)
+
+
+def reason_code(reason: Optional[str]) -> str:
+    """Map a prose fast-path rejection reason to its stable code."""
+    if not reason:
+        return "other"
+    for needle, code in _REASON_CODES:
+        if needle in reason:
+            return code
+    return "other"
 
 
 # ---------------------------------------------------------------------------
@@ -136,7 +160,7 @@ class _ChainEval:
     """Evaluates chains, recording busy intervals + byte counters."""
 
     __slots__ = ("keys", "starts", "ends", "noc_bytes", "dram_bytes",
-                 "fabric_bytes", "nodes", "spawned")
+                 "fabric_bytes", "level_bytes", "nodes", "spawned")
 
     def __init__(self):
         self.keys: List[int] = []       # pack_lane(kind, lane) ids
@@ -145,6 +169,7 @@ class _ChainEval:
         self.noc_bytes = 0.0
         self.dram_bytes = 0.0
         self.fabric_bytes = 0.0
+        self.level_bytes: Dict[int, float] = {}   # fabric level -> bytes
         self.nodes = 0          # chain-node evaluations (sim-cost metric)
         self.spawned: List[float] = []
 
@@ -190,6 +215,12 @@ class _ChainEval:
                     self.dram_bytes += node[2]
                 else:
                     self.fabric_bytes += node[2]
+                    if len(node) > 3:
+                        # per-level payload metadata, present only when
+                        # the fabric compiled with metrics_levels set
+                        lb = self.level_bytes
+                        for lvl, b in node[3]:
+                            lb[lvl] = lb.get(lvl, 0.0) + b
             else:  # "spawn"
                 self.spawned.append(run(node[1], t))
         return t
@@ -374,11 +405,15 @@ def try_fast_run(sim, strict: bool = False):
     The simulator instance is left untouched either way, so the caller
     can still run the event tier on it.
     """
+    sim.fastpath_reason = None      # clear any stale batch-tier rejection
     reason = classify(sim)
     if reason is None:
         result, reason = _attempt(sim)
         if result is not None:
             return result
+    # leave the rejection on the simulator so the metrics layer can
+    # attach a machine-readable reason to the event-tier run that follows
+    sim.fastpath_reason = reason
     if strict:
         raise FastPathIneligible(reason)
     return None
@@ -489,6 +524,11 @@ def replay_chains(sim, chains: StageChains):
     contended, ikinds, ilanes, istarts, iends = _validate_and_order(ev)
     if contended:
         return None, "resource contention detected by interval validation"
+
+    if ev.level_bytes:
+        # successful replay owns the run: publish per-level fabric payload
+        # where the event tier would have accumulated it
+        sim.noc.level_bytes.update(ev.level_bytes)
 
     total = max(cursor, default=0.0)
     samples = sim.plan.global_batch

@@ -69,6 +69,13 @@ class SimResult:
     # sweeps return identical, lean results
     noc_occupancy_fallback: Dict[int, float] = field(
         default_factory=dict, compare=False, repr=False)
+    # ``{"sim": ..., "host": ...}`` observability document (repro.obs),
+    # attached by ``PipelineSimulator.run`` when metrics are enabled. The
+    # "sim" half is derived only from compare=True data and is therefore
+    # itself bit-identical across tiers; the "host" half (engine
+    # provenance, rejection reasons) is not, so the whole field stays out
+    # of equality.
+    metrics: Optional[Dict] = field(default=None, compare=False, repr=False)
 
     @property
     def timeline(self) -> List[Tuple[int, str, int, float, float]]:
@@ -164,11 +171,13 @@ class PipelineSimulator:
         boundary_mode: BoundaryMode = BoundaryMode.PAIRWISE,
         memory_plan: Optional[Tuple[List[StageMemory], bool]] = None,
         engine: str = "event",
+        metrics: bool = False,
     ):
         if engine not in ("event", "auto", "fast"):
             raise ValueError(f"unknown engine {engine!r} "
                              "(expected 'event', 'auto' or 'fast')")
         self.engine = engine
+        self.metrics = bool(metrics)
         self.mapped = mapped
         self.plan: ParallelPlan = mapped.plan
         self.hw: HardwareSpec = mapped.hardware
@@ -193,6 +202,9 @@ class PipelineSimulator:
                                 recorder=res_rec)
             self.dram = DRAMModel(self.env, self.hw, self.noc,
                                   recorder=res_rec)
+        if self.metrics and hasattr(self.noc, "level_bytes"):
+            # ask the fabric (both tiers) to attribute payload per level
+            self.noc.metrics_levels = True
         self.boundary_mode = BoundaryMode(boundary_mode)
 
         S = mapped.num_stages
@@ -460,8 +472,17 @@ class PipelineSimulator:
 
             result = try_fast_run(self, strict=(self.engine == "fast"))
             if result is not None:
-                return result
-        return self._run_event()
+                return self._attach_metrics(result)
+        return self._attach_metrics(self._run_event())
+
+    def _attach_metrics(self, result: SimResult) -> SimResult:
+        """Attach the repro.obs metrics document when enabled (no-op —
+        and no import — otherwise, so disabled runs pay nothing)."""
+        if self.metrics:
+            from ..obs.simmetrics import run_metrics
+
+            result.metrics = run_metrics(self, result)
+        return result
 
     def _setup_events(self) -> None:
         """Create the Act/Grad Pass mailboxes and GU-done latches the

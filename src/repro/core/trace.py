@@ -761,9 +761,12 @@ class TraceRecorder:
 # ---------------------------------------------------------------------------
 
 _PID_STAGES, _PID_NOC, _PID_DRAM, _PID_REQUESTS, _PID_FABRIC = 0, 1, 2, 3, 4
+_PID_COUNTERS = 5
 
 
-def chrome_trace(trace: Trace, label: str = "palm") -> Dict[str, Any]:
+def chrome_trace(trace: Trace, label: str = "palm",
+                 counters: Optional[Dict[str, List[List[float]]]] = None,
+                 ) -> Dict[str, Any]:
     """Render a Trace as the Chrome/Perfetto ``traceEvents`` JSON dict
     (load via chrome://tracing or https://ui.perfetto.dev).
 
@@ -772,7 +775,11 @@ def chrome_trace(trace: Trace, label: str = "palm") -> Dict[str, Any]:
     serving per-request lanes (PREFILL/DECODE/QUEUE spans, one thread per
     request id) are threads of process 3; scale-out fabric link busy
     intervals are threads of process 4. Timestamps are microseconds (the
-    format's unit); durations are complete events (``ph: "X"``)."""
+    format's unit); durations are complete events (``ph: "X"``).
+
+    ``counters`` maps series names to ``[t_seconds, value]`` samples
+    (see :mod:`repro.obs.tracks`); each series becomes a Perfetto counter
+    track (``ph: "C"``) on process 5."""
     events: List[Dict[str, Any]] = []
     for pid, name in ((_PID_STAGES, f"{label}: pipeline stages"),
                       (_PID_NOC, f"{label}: NoC links"),
@@ -781,6 +788,15 @@ def chrome_trace(trace: Trace, label: str = "palm") -> Dict[str, Any]:
                       (_PID_FABRIC, f"{label}: fabric links")):
         events.append({"ph": "M", "pid": pid, "name": "process_name",
                        "args": {"name": name}})
+    if counters:
+        events.append({"ph": "M", "pid": _PID_COUNTERS,
+                       "name": "process_name",
+                       "args": {"name": f"{label}: counters"}})
+        for series_name in sorted(counters):
+            for t, v in counters[series_name]:
+                events.append({"ph": "C", "pid": _PID_COUNTERS, "tid": 0,
+                               "name": series_name, "ts": t * 1e6,
+                               "args": {"value": v}})
     seen_tids = set()
     for r in trace.rows():
         if r.kind in COMPUTE_KINDS:

@@ -73,6 +73,12 @@ class FabricModel:
         self._flinks: Dict[int, Resource] = {}
         self.fabric_bytes = 0.0
         self.fabric_transfers = 0
+        # per-hierarchy-level payload accounting (sim-domain metric):
+        # populated only when metrics_levels is set by the simulator.
+        # Byte counts are integral-valued floats, so sums are exact in
+        # any accumulation order — both tiers agree bit-for-bit.
+        self.level_bytes: Dict[int, float] = {}
+        self.metrics_levels = False
         self.dram = ClusterDRAM(self)
 
     # -- device arithmetic ---------------------------------------------------
@@ -122,12 +128,35 @@ class FabricModel:
         for link, req in reqs:
             link.release(req)
 
+    def _accum_levels(self, legs) -> None:
+        """Attribute ``(route, nbytes)`` legs to the hierarchy levels
+        they cross: every traversed link at level L carries ``nbytes``.
+        Pre-aggregates per call before folding into ``level_bytes`` —
+        the same float association the fast tier applies when replaying
+        the per-node ``_level_item`` metadata, so both tiers produce
+        bit-identical level sums."""
+        lb = self.level_bytes
+        for lvl, b in self._level_item(legs):
+            lb[lvl] = lb.get(lvl, 0.0) + b
+
+    def _level_item(self, legs) -> Tuple:
+        """Chain-node metadata form of :meth:`_accum_levels` over
+        ``(route, nbytes)`` legs: sorted ``(level, bytes)`` pairs."""
+        acc: Dict[int, float] = {}
+        for route, nbytes in legs:
+            for fid in route:
+                lvl = self.spec.link_level(fid)
+                acc[lvl] = acc.get(lvl, 0.0) + nbytes
+        return tuple(sorted(acc.items()))
+
     def _fabric_leg(self, src_chip: int, dst_chip: int, nbytes: float,
                     priority: int) -> Generator:
         """One chip-to-chip fabric transfer (gateway to gateway)."""
         self.fabric_bytes += nbytes
         self.fabric_transfers += 1
         route = self.spec.route(src_chip, dst_chip)
+        if self.metrics_levels and route:
+            self._accum_levels([(route, nbytes)])
         t = self._path_time(route, nbytes)
         if self.mode == NoCMode.ANALYTICAL or not route:
             yield self.env.timeout(t)
@@ -161,6 +190,9 @@ class FabricModel:
         total_bytes = sum(b for rnd in rounds for _, _, b in rnd)
         self.fabric_bytes += total_bytes
         self.fabric_transfers += 1
+        if self.metrics_levels:
+            self._accum_levels((self.spec.route(s, d), b)
+                               for rnd in rounds for s, d, b in rnd)
         t = self._rounds_time(rounds)
         if self.mode == NoCMode.ANALYTICAL:
             yield env.timeout(t)
@@ -370,9 +402,12 @@ class FabricModel:
         """Uncontended price of :meth:`_fabric_leg` as a fast-path chain."""
         route = self.spec.route(src_chip, dst_chip)
         t = self._path_time(route, nbytes)
+        bnode = ("bytes", "fabric", nbytes)
+        if self.metrics_levels and route:
+            bnode = bnode + (self._level_item([(route, nbytes)]),)
         if self.mode == NoCMode.ANALYTICAL or not route:
-            return [("bytes", "fabric", nbytes), ("dt", t)]
-        return [("bytes", "fabric", nbytes),
+            return [bnode, ("dt", t)]
+        return [bnode,
                 ("hold", tuple(pack_lane(KIND_FABRIC, fid)
                                for fid in sorted(set(route))), t)]
 
@@ -402,9 +437,14 @@ class FabricModel:
                     for rnd in rounds]
         total_bytes = sum(b for rnd in rounds for _, _, b in rnd)
         t = self._rounds_time(rounds)
+        bnode = ("bytes", "fabric", total_bytes)
+        if self.metrics_levels:
+            bnode = bnode + (self._level_item(
+                (self.spec.route(s, d), b)
+                for rnd in rounds for s, d, b in rnd),)
         if self.mode == NoCMode.ANALYTICAL:
-            return [("bytes", "fabric", total_bytes), ("dt", t)]
-        return [("bytes", "fabric", total_bytes),
+            return [bnode, ("dt", t)]
+        return [bnode,
                 ("hold", tuple(pack_lane(KIND_FABRIC, fid)
                                for fid in self._rounds_footprint(rounds)), t)]
 

@@ -43,6 +43,7 @@ def run_search(exp: "Experiment", strategy: str = "sh",
                return_timelines: bool = False,
                ladder: Optional[Sequence[Fidelity]] = None,
                engine: Optional["SweepEngine"] = None,
+               profile: bool = False,
                **strategy_kw) -> "SweepReport":
     """Run a guided search over an Experiment's joint (hardware x plan)
     space and return the ranked SweepReport (full-fidelity runs only)
@@ -53,10 +54,20 @@ def run_search(exp: "Experiment", strategy: str = "sh",
     overrides the default fidelity rungs (cheapest first, ending at full
     fidelity). A caller-provided ``engine`` is used as-is (and not
     closed); otherwise one persistent engine spans all generations.
+
+    ``profile=True`` attaches the fast-tier phase accounting to
+    ``SweepReport.profile`` — cumulative totals plus a ``generations``
+    list with one per-rung delta per engine call. When the Experiment
+    has ``metrics=True`` the report also carries the repro.obs metrics
+    document: engine host metrics merged across generations under
+    ``host.search.generation`` spans, and a sim-domain aggregate of the
+    ranked full-fidelity runs.
     """
     # api imports stay call-time: repro.api imports repro.search lazily too
     from ..api.report import SweepReport
-    from ..api.sweep import _FAILED, _OK, _PRUNED, SweepEngine
+    from ..api.sweep import (_FAILED, _OK, _PRUNED, SweepEngine,
+                             _merge_profile)
+    from ..obs.registry import make_registry
 
     space = EncodedSpace.from_experiment(exp)
     if budget is None:
@@ -71,9 +82,13 @@ def run_search(exp: "Experiment", strategy: str = "sh",
         engine = SweepEngine(
             workers=workers,
             return_timelines=return_timelines or exp.collect_timeline,
-            trace_resources=exp.collect_timeline)
+            trace_resources=exp.collect_timeline,
+            profile=profile)
         engine.__enter__()              # keep one pool across generations
 
+    registry = make_registry(bool(getattr(exp, "metrics", False)))
+    profile_totals: Dict[str, int] = {}
+    generations: List[Dict[str, int]] = []
     cache: Dict[Tuple[Tuple[int, int], Fidelity], EvalOutcome] = {}
     reports: Dict[Tuple[int, int], object] = {}   # full-fidelity RunReports
     sims_per_fidelity: Dict[str, int] = {}
@@ -93,7 +108,15 @@ def run_search(exp: "Experiment", strategy: str = "sh",
                     variant, plan = space.job(cand)
                     jobs.append((variant, plan) if fid.is_full
                                 else (variant, plan, fid))
-                outcomes, label = engine.evaluate_jobs(exp, space.specs, jobs)
+                with registry.span("host.search.generation"):
+                    outcomes, label = engine.evaluate_jobs(
+                        exp, space.specs, jobs)
+                _merge_profile(profile_totals, engine.last_profile)
+                generations.append(
+                    {"jobs": len(jobs), **engine.last_profile})
+                if registry:
+                    registry.counter("host.search.evaluations").inc(len(jobs))
+                    registry.merge_dict(engine.last_metrics or {})
                 if executor is None:    # rung 0 is the largest batch
                     executor = label
                 for (cand, fid), (tag, payload) in zip(fresh, outcomes):
@@ -130,13 +153,17 @@ def run_search(exp: "Experiment", strategy: str = "sh",
                      executor=executor or "serial",
                      evaluations=evaluations, full_sims=full_sims,
                      sims_per_fidelity=sims_per_fidelity,
-                     rungs=strat.rung_records(), best_curve=best_curve)
+                     rungs=strat.rung_records(), best_curve=best_curve,
+                     profile=({**profile_totals, "generations": generations}
+                              if profile else None),
+                     host_metrics=registry.to_dict() if registry else None)
 
 
 def _assemble(exp, space: EncodedSpace, strategy: str, seed: int,
               budget: int, *, reports, pruned: int, failed: int,
               executor: str, evaluations: int, full_sims: int,
-              sims_per_fidelity, rungs, best_curve) -> "SweepReport":
+              sims_per_fidelity, rungs, best_curve,
+              profile=None, host_metrics=None) -> "SweepReport":
     """Rank the full-fidelity runs into a SweepReport with the nested
     SearchReport, reusing the Experiment's report-assembly helpers so
     guided and exhaustive reports stay structurally identical."""
@@ -157,7 +184,18 @@ def _assemble(exp, space: EncodedSpace, strategy: str, seed: int,
             space_size=len(space), evaluations=evaluations,
             full_fidelity_sims=full_sims,
             sims_per_fidelity=dict(sorted(sims_per_fidelity.items())),
-            rungs=rungs, best_curve=best_curve))
+            rungs=rungs, best_curve=best_curve),
+        profile=profile)
+    if getattr(exp, "metrics", False):
+        from ..api.sweep import _OK
+        from ..obs.simmetrics import aggregate_run_metrics
+        # aggregate the ranked full-fidelity runs (rank order is total and
+        # executor-independent, so the sim half stays deterministic);
+        # pruned/failed counts come from the search loop, not the fold
+        agg = aggregate_run_metrics([(_OK, r) for r in runs])
+        agg["pruned"] = pruned
+        agg["failed"] = failed + space.extra_failed
+        report.metrics = {"sim": agg, "host": host_metrics or {}}
     if exp.hardware_search is not None:
         exp._record_hardware_specs(report, space.specs)
     return report

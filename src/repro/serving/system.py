@@ -264,6 +264,11 @@ class ServingReport:
     steps: Dict[str, int]
     extra: Dict[str, Any] = field(default_factory=dict)
     trace: Optional[Trace] = field(default=None, compare=False, repr=False)
+    # repro.obs metrics document ({"sim": ..., "host": ...}) when the
+    # simulator ran with metrics=True; the host half is wall-clock so the
+    # field stays out of equality (JSON keeps it when present)
+    metrics: Optional[Dict[str, Any]] = field(default=None, compare=False,
+                                              repr=False)
 
     @property
     def slo_attainment(self) -> float:
@@ -276,6 +281,8 @@ class ServingReport:
         d = dataclasses.asdict(src)
         d["plan"] = plan_to_dict(self.plan)
         d.pop("trace", None)
+        if d.get("metrics") is None:
+            d.pop("metrics", None)
         if include_trace and self.trace is not None:
             d["trace"] = self.trace.to_dict()
         return d
@@ -339,12 +346,14 @@ class ServingSimulator:
                  noc_mode: NoCMode = NoCMode.MACRO,
                  boundary_mode: BoundaryMode = BoundaryMode.PAIRWISE,
                  collect_trace: bool = False,
+                 metrics: bool = False,
                  cost_model: Optional[StepCostModel] = None):
         self.arch = arch
         self.hardware = hardware
         self.plan = plan
         self.spec = spec
         self.collect_trace = collect_trace
+        self.metrics = bool(metrics)
         self.cost = cost_model or StepCostModel(
             arch, hardware, plan, noc_mode=noc_mode,
             boundary_mode=boundary_mode, ctx_bucket=spec.ctx_bucket)
@@ -420,12 +429,23 @@ class ServingSimulator:
                                         a.decode_started_at, env.now)
                 _sample()
 
-        env.process(arrivals(), name="serve.arrivals")
-        done = env.process(engine(), name="serve.engine")
-        env.run(until_event=done)
+        from ..obs.registry import make_registry
+        registry = make_registry(self.metrics)
+        with registry.span("host.serving.run"):
+            env.process(arrivals(), name="serve.arrivals")
+            done = env.process(engine(), name="serve.engine")
+            env.run(until_event=done)
 
-        return self._report(batcher, env, samples, counts, kv_peak[0],
-                            budget, rec)
+        report = self._report(batcher, env, samples, counts, kv_peak[0],
+                              budget, rec)
+        if registry:
+            registry.counter("host.serving.cost_sims").inc(self.cost.sims)
+            registry.counter("host.serving.iterations").inc(
+                counts["prefill"] + counts["decode"])
+            from ..obs.simmetrics import serving_sim_metrics
+            report.metrics = {"sim": serving_sim_metrics(report),
+                              "host": registry.to_dict()}
+        return report
 
     # -- report assembly -----------------------------------------------------
     def _report(self, batcher: ContinuousBatcher, env: Environment,
@@ -508,6 +528,7 @@ def simulate_serving(arch: Union[str, ArchConfig],
                      noc_mode: NoCMode = NoCMode.MACRO,
                      boundary_mode: BoundaryMode = BoundaryMode.PAIRWISE,
                      collect_trace: bool = False,
+                     metrics: bool = False,
                      cost_model: Optional[StepCostModel] = None) -> ServingReport:
     """One traffic-driven serving simulation (resolves registry names).
     ``plan=None`` serves on a single device (pp = dp = tp = 1)."""
@@ -522,5 +543,6 @@ def simulate_serving(arch: Union[str, ArchConfig],
     sim = ServingSimulator(arch, hw, plan, spec, noc_mode=noc_mode,
                            boundary_mode=boundary_mode,
                            collect_trace=collect_trace,
+                           metrics=metrics,
                            cost_model=cost_model)
     return sim.run()

@@ -1,0 +1,356 @@
+"""repro.obs — unified metrics & instrumentation layer (observability PR).
+
+Covers the registry semantics (typed metrics, domain prefixes, JSON
+round-trip, cross-shard merge, falsy no-op when disabled), the
+sim-domain bit-identity contract (fast == event tiers, serial == pool
+executors, fabric payload-by-level included), report surfacing
+(RunReport / SweepReport / ServingReport ``.metrics`` with JSON
+round-trip, zero rows when disabled), the roofline and bubble
+identities the derivation guarantees, Perfetto counter tracks on the
+Chrome trace export, and the search-profile promotion."""
+
+import json
+
+import pytest
+
+from repro.api import (
+    Experiment,
+    ParallelPlan,
+    RunReport,
+    SearchSpace,
+    SweepEngine,
+    SweepReport,
+    resolve_hardware,
+)
+from repro.core.hardware import tiled_cluster
+from repro.core.trace import chrome_trace
+from repro.obs.registry import (
+    NULL_REGISTRY,
+    MetricsRegistry,
+    make_registry,
+    summarize_metrics,
+)
+from repro.obs.tracks import (
+    activity_counters,
+    metrics_counters,
+    serving_counters,
+)
+from repro.search.engine import run_search
+from repro.serving.system import ServingSpec, simulate_serving
+from repro.serving.workload import WorkloadSpec
+
+from proptools import given
+
+HW = "tpu_v5e_2x2"
+ARCH = "yi-6b"
+
+TINY_WORKLOAD = WorkloadSpec(rate=2.0, num_requests=10, seed=3,
+                             prompt_mean=64, decode_mean=8,
+                             prompt_cv=0.5, decode_cv=0.5)
+TINY_SPEC = ServingSpec(workload=TINY_WORKLOAD, max_batch=4, ctx_bucket=128)
+
+
+def _exp(engine="auto", metrics=True, plan=(2, 1, 2), micro=1, gb=8, **kw):
+    pp, dp, tp = plan
+    return Experiment(
+        arch=ARCH, hardware=HW, seq_len=128,
+        plan=ParallelPlan(pp=pp, dp=dp, tp=tp, microbatch=micro,
+                          global_batch=gb),
+        global_batch=gb, engine=engine, metrics=metrics, **kw)
+
+
+def _sim_doc(report):
+    return json.dumps(report.metrics["sim"], sort_keys=True)
+
+
+# ---------------------------------------------------------------------------
+# registry semantics
+# ---------------------------------------------------------------------------
+
+def test_registry_roundtrip_and_merge():
+    reg = MetricsRegistry()
+    reg.counter("host.sweep.jobs").inc(3)
+    reg.counter("host.sweep.jobs").inc(2)
+    reg.gauge("host.pool.workers").set(4)
+    reg.histogram("host.shard.us").observe(10.0)
+    reg.histogram("host.shard.us").observe(30.0)
+    with reg.span("host.evaluate"):
+        pass
+    doc = reg.to_dict()
+    assert doc["counters"]["host.sweep.jobs"] == 5
+    assert doc["gauges"]["host.pool.workers"] == 4
+    assert doc["histograms"]["host.shard.us"] == {
+        "count": 2, "sum": 40.0, "min": 10.0, "max": 30.0}
+    assert doc["counters"]["host.evaluate.calls"] == 1
+    # round-trip is exact
+    assert MetricsRegistry.from_dict(doc).to_dict() == doc
+    # merge: counters add, gauges last-write, histograms combine exactly
+    other = MetricsRegistry()
+    other.counter("host.sweep.jobs").inc(7)
+    other.gauge("host.pool.workers").set(2)
+    other.histogram("host.shard.us").observe(5.0)
+    other.merge_dict(doc)
+    merged = other.to_dict()
+    assert merged["counters"]["host.sweep.jobs"] == 12
+    assert merged["gauges"]["host.pool.workers"] == 4
+    assert merged["histograms"]["host.shard.us"] == {
+        "count": 3, "sum": 45.0, "min": 5.0, "max": 30.0}
+
+
+def test_registry_rejects_unprefixed_names():
+    reg = MetricsRegistry()
+    for bad in ("jobs", "sweep.jobs", "simjobs", "hostile.jobs"):
+        with pytest.raises(ValueError):
+            reg.counter(bad)
+    reg.counter("sim.total_time")          # both domains are accepted
+    reg.counter("host.sweep.jobs")
+
+
+def test_null_registry_is_falsy_noop():
+    assert not NULL_REGISTRY
+    assert make_registry(False) is NULL_REGISTRY
+    assert isinstance(make_registry(True), MetricsRegistry)
+    NULL_REGISTRY.counter("host.x").inc(5)
+    NULL_REGISTRY.gauge("host.y").set(1)
+    NULL_REGISTRY.histogram("host.z").observe(2.0)
+    with NULL_REGISTRY.span("host.w"):
+        pass
+    assert NULL_REGISTRY.to_dict() == {}
+    assert NULL_REGISTRY.rows() == []
+
+
+def test_summarize_metrics_text():
+    rep = _exp().run()
+    text = summarize_metrics(rep.metrics, title="t")
+    assert text.startswith("== t ==")
+    assert "[sim]" in text and "[host]" in text
+    assert "bubble_ratio" in text
+    assert "(none recorded" in summarize_metrics(None)
+
+
+# ---------------------------------------------------------------------------
+# report surfacing: attach when enabled, zero rows when disabled
+# ---------------------------------------------------------------------------
+
+def test_run_metrics_disabled_adds_nothing():
+    rep = _exp(metrics=False).run()
+    assert rep.metrics is None
+    assert "metrics" not in rep.to_dict()
+    assert "metrics" not in json.loads(rep.to_json())
+
+
+def test_run_metrics_roundtrip_and_shape():
+    rep = _exp().run()
+    m = rep.metrics
+    assert set(m) == {"sim", "host"}
+    sim = m["sim"]
+    assert sim["total_time"] == rep.total_time
+    assert sim["throughput"] == rep.throughput
+    assert len(sim["stages"]["flops"]) == 2
+    assert m["host"]["engine"] in ("fast", "event")
+    # JSON round-trip preserves the document exactly
+    back = RunReport.from_json(rep.to_json())
+    assert back.metrics == m
+
+
+def test_bubble_and_roofline_identities():
+    rep = _exp().run()
+    sim = rep.metrics["sim"]
+    S = len(sim["stages"]["flops"])
+    bub = sim["bubble"]
+    # warmup + interior + drain + busy == S * total_time, exactly
+    assert (bub["warmup"] + bub["interior"] + bub["drain"] + bub["busy"]
+            == S * sim["total_time"])
+    # headline bubble matches the schedule-level scalar the report carries
+    assert sim["bubble_ratio"] == pytest.approx(rep.bubble_ratio, rel=1e-12)
+    # roofline utilization is exactly flops / (total_time * tile peak)
+    hw = resolve_hardware(HW)
+    denom = sim["total_time"] * hw.tile.flops
+    for u, f in zip(sim["stages"]["roofline_utilization"],
+                    sim["stages"]["flops"]):
+        assert u == pytest.approx(f / denom, rel=1e-12)
+        assert 0.0 < u < 1.0
+
+
+def test_fastpath_rejection_code_surfaced():
+    # tiled_cluster in the default macro NoC mode is fast-ineligible:
+    # auto falls back to the event tier and records why
+    rep = Experiment(
+        arch=ARCH, hardware=tiled_cluster(), seq_len=128,
+        plan=ParallelPlan(pp=2, dp=1, tp=2, microbatch=1, global_batch=4),
+        global_batch=4, engine="auto", metrics=True).run()
+    host = rep.metrics["host"]
+    assert host["engine"] == "event"
+    rej = host["fastpath_rejection"]
+    assert rej["code"] == "contention"
+    assert "contention" in rej["reason"]
+
+
+# ---------------------------------------------------------------------------
+# sim-domain bit-identity: tiers, executors, fabric levels
+# ---------------------------------------------------------------------------
+
+@given(n_cases=6, seed=11)
+def test_sim_metrics_identical_across_tiers(rng, case):
+    from repro.core.fastpath import FastPathIneligible
+
+    plans = [(2, 1, 2), (1, 2, 2), (2, 2, 1), (4, 1, 1)]
+    pp, dp, tp = plans[int(rng.integers(len(plans)))]
+    micro = int(rng.choice([1, 2]))
+    gb = int(rng.choice([8, 16]))
+    try:
+        fast = _sim_doc(_exp(engine="fast", plan=(pp, dp, tp), micro=micro,
+                             gb=gb).run())
+    except FastPathIneligible:
+        return          # draw needs the event tier; parity is vacuous
+    event = _sim_doc(_exp(engine="event", plan=(pp, dp, tp), micro=micro,
+                          gb=gb).run())
+    assert fast == event
+
+
+def test_sim_metrics_identical_serial_vs_pool():
+    exp = Experiment(
+        arch=ARCH, hardware=HW, seq_len=128, global_batch=8, metrics=True,
+        search=SearchSpace(degrees=[(2, 1, 2), (1, 2, 2), (2, 2, 1)],
+                           microbatch_sizes=(1, 2)))
+    plans = exp.search.enumerate_plans(resolve_hardware(HW), 8)
+    reports = {}
+    for workers in (0, 2):
+        eng = SweepEngine(workers=workers)
+        try:
+            reports[workers] = eng.sweep(exp, plans)
+        finally:
+            eng.close()
+    a, b = reports[0], reports[2]
+    assert json.dumps(a.metrics["sim"], sort_keys=True) == \
+        json.dumps(b.metrics["sim"], sort_keys=True)
+    assert [_sim_doc(r) for r in a.runs] == [_sim_doc(r) for r in b.runs]
+    # host domain exists on both but is never compared
+    assert a.metrics["host"]["counters"]["host.sweep.jobs"] == len(plans)
+    assert b.metrics["host"]["counters"]["host.pool.shards"] >= 1
+    # sweep-level JSON round-trip
+    back = SweepReport.from_json(a.to_json())
+    assert back.metrics == a.metrics
+
+
+def test_sweep_metrics_disabled_adds_nothing():
+    exp = Experiment(
+        arch=ARCH, hardware=HW, seq_len=128, global_batch=8,
+        search=SearchSpace(degrees=[(2, 1, 2), (1, 2, 2)],
+                           microbatch_sizes=(1,)))
+    rep = exp.sweep()
+    assert rep.metrics is None
+    assert "metrics" not in rep.to_dict()
+    assert all(r.metrics is None for r in rep.runs)
+
+
+def test_fabric_payload_by_level_parity():
+    docs = {}
+    for eng in ("fast", "event"):
+        rep = Experiment(
+            arch=ARCH, hardware=tiled_cluster(), seq_len=128,
+            plan=ParallelPlan(pp=2, dp=1, tp=2, microbatch=1,
+                              global_batch=4),
+            global_batch=4, engine=eng, noc_mode="analytical",
+            metrics=True).run()
+        assert rep.metrics["host"]["engine"] == eng
+        docs[eng] = rep.metrics["sim"]
+    assert json.dumps(docs["fast"], sort_keys=True) == \
+        json.dumps(docs["event"], sort_keys=True)
+    levels = docs["fast"]["payload_by_level"]
+    assert set(levels) == {"board", "node"}
+    assert all(v > 0 for v in levels.values())
+
+
+def test_pure_python_fallback_matches_numpy_path():
+    # bench-smoke CI runs without numpy: the array.array fallback must
+    # produce the same document up to float-association noise (sequential
+    # vs pairwise summation)
+    import math
+
+    import repro.obs.simmetrics as sm
+
+    def close(a, b):
+        if isinstance(a, dict):
+            return set(a) == set(b) and all(close(a[k], b[k]) for k in a)
+        if isinstance(a, list):
+            return len(a) == len(b) and all(
+                close(x, y) for x, y in zip(a, b))
+        if isinstance(a, float):
+            return math.isclose(a, b, rel_tol=1e-9, abs_tol=1e-12)
+        return a == b
+
+    np_doc = _exp(collect_timeline=True).run().metrics["sim"]
+    saved, sm._np = sm._np, None
+    try:
+        py_doc = _exp(collect_timeline=True).run().metrics["sim"]
+    finally:
+        sm._np = saved
+    assert "resources" in np_doc and "resources" in py_doc
+    assert close(np_doc, py_doc)
+
+
+# ---------------------------------------------------------------------------
+# Perfetto counter tracks on the Chrome trace export
+# ---------------------------------------------------------------------------
+
+def test_chrome_trace_counter_tracks():
+    rep = _exp(collect_timeline=True).run()
+    assert rep.trace is not None
+    counters = activity_counters(rep.trace)
+    counters.update(metrics_counters(rep.metrics, rep.trace.total_time))
+    doc = chrome_trace(rep.trace, counters=counters)
+    events = doc["traceEvents"]
+    tracks = [e for e in events if e.get("ph") == "C"]
+    assert tracks
+    names = {e["name"] for e in tracks}
+    assert "active_stages" in names and "bubble_ratio" in names
+    for e in tracks:
+        assert e["pid"] == 5
+        assert isinstance(e["args"]["value"], (int, float))
+    # counter series are time-ordered per name
+    by_name = {}
+    for e in tracks:
+        by_name.setdefault(e["name"], []).append(e["ts"])
+    for ts in by_name.values():
+        assert ts == sorted(ts)
+
+
+# ---------------------------------------------------------------------------
+# serving + search surfacing
+# ---------------------------------------------------------------------------
+
+def test_serving_metrics_attach_and_roundtrip():
+    rep = simulate_serving("hymba-1.5b", "grayskull", None, TINY_SPEC,
+                           metrics=True)
+    m = rep.metrics
+    assert set(m) == {"sim", "host"}
+    assert m["sim"]["kv_cache"]["peak_bytes"] == rep.kv_peak_bytes
+    assert m["sim"]["steps"]["decode"] == rep.steps["decode"]
+    assert m["host"]["counters"]["host.serving.run.calls"] == 1
+    assert json.loads(json.dumps(rep.to_dict()))["metrics"] == m
+    # counter tracks for the serving trace export
+    series = serving_counters(rep)
+    assert "kv_occupancy_bytes" in series and "queue_depth" in series
+    # disabled: no rows anywhere
+    off = simulate_serving("hymba-1.5b", "grayskull", None, TINY_SPEC)
+    assert off.metrics is None
+    assert "metrics" not in off.to_dict()
+
+
+def test_search_profile_and_metrics_promoted():
+    exp = Experiment(
+        arch=ARCH, hardware=HW, seq_len=128, global_batch=8, metrics=True,
+        search=SearchSpace(degrees=[(2, 1, 2), (1, 2, 2), (2, 2, 1),
+                                    (4, 1, 1)],
+                           microbatch_sizes=(1, 2)))
+    rep = run_search(exp, strategy="sh", budget=6, seed=0, profile=True)
+    prof = rep.profile
+    assert prof is not None and prof["generations"]
+    assert all("jobs" in g for g in prof["generations"])
+    m = rep.metrics
+    assert m is not None
+    assert m["sim"]["runs"] == len(rep.runs)
+    host = m["host"]["counters"]
+    assert host["host.search.evaluations"] >= len(rep.runs)
+    assert host["host.search.generation.calls"] == len(prof["generations"])
